@@ -1,0 +1,36 @@
+
+"""Paper §3: NNP serialization round-trip cost (trace/save/load/execute)."""
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import repro.core as nn
+from repro.fileformat import NnpExecutor, export_model, load_nnp
+from repro.models.cnn import lenet
+from benchmarks.common import emit, time_fn
+
+
+def main() -> None:
+    nn.clear_parameters()
+    x = np.random.default_rng(0).standard_normal((4, 1, 28, 28)) \
+        .astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "m.nnp")
+        t0 = time.perf_counter()
+        export_model("lenet", lambda x: lenet(x), {"x": x}, path)
+        emit("nnp/trace_and_save", (time.perf_counter() - t0) * 1e6,
+             f"{os.path.getsize(path) // 1024}KiB")
+        t0 = time.perf_counter()
+        mf, params = load_nnp(path)
+        ex = NnpExecutor(mf.network("lenet"), params)
+        out = ex(x=x)
+        emit("nnp/load_and_first_exec", (time.perf_counter() - t0) * 1e6)
+        us = time_fn(lambda: ex(x=x), iters=5)
+        emit("nnp/exec_steady_state", us)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+
+"""Kernel-layer microbenches: XLA naive vs blockwise-flash attention and the
+SSD scan (CPU wall time; the TPU story is the roofline/§Perf tables)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.ssd import ref as ssd_ref
+from benchmarks.common import emit, time_fn
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    B, S, Hq, Hkv, D = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    naive = jax.jit(lambda q, k, v: fa_ref.mha_reference(q, k, v, causal=True))
+    chunk = jax.jit(lambda q, k, v: fa_ref.mha_chunked(
+        q, k, v, causal=True, block_q=256, block_k=256))
+    us_n = time_fn(naive, q, k, v, iters=3)
+    us_c = time_fn(chunk, q, k, v, iters=3)
+    emit("kernels/attention_naive_1k", us_n)
+    emit("kernels/attention_folded_blockwise_1k", us_c,
+         f"x{us_n / us_c:.2f} vs naive")
+
+    B, S, H, P, G, N = 1, 512, 8, 64, 1, 64
+    x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, H), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, G, N)), jnp.float32)
+    naive_ssd = jax.jit(lambda *a: ssd_ref.ssd_naive(*a))
+    chunk_ssd = jax.jit(lambda *a: ssd_ref.ssd_chunked(*a, chunk=64))
+    us_n = time_fn(naive_ssd, x, dt, A, Bm, Cm, iters=3)
+    us_c = time_fn(chunk_ssd, x, dt, A, Bm, Cm, iters=3)
+    emit("kernels/ssd_tokenscan_512", us_n)
+    emit("kernels/ssd_chunked_512", us_c, f"x{us_n / us_c:.2f} vs token scan")
+
+
+if __name__ == "__main__":
+    main()

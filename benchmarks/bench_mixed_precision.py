@@ -1,0 +1,75 @@
+
+"""Paper Table 1: training time fp32 vs mixed precision (+ speedup).
+
+CPU container: measures the framework's mixed-precision machinery (policy
+cast points, dynamic loss scaling, master weights) on a reduced ResNet;
+the TPU speedup column comes from the roofline (memory term halves in bf16).
+Also reports activation-byte footprints (the paper's "halves memory" claim).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as nn
+from repro.core import functions as F
+from repro.distributed.train_step import init_train_state, make_train_step
+from repro.models.cnn import resnet
+from repro.precision.loss_scale import dynamic_scaler, static_scaler
+from repro.solvers import Momentum
+from benchmarks.common import emit, time_fn
+
+
+def _train_step_for(type_config: str):
+    ctx = nn.get_extension_context("cpu", type_config=type_config)
+
+    def build():
+        with nn.context_scope(ctx):
+            nn.clear_parameters()
+            rng = np.random.default_rng(0)
+            x = jnp.asarray(rng.standard_normal((8, 3, 32, 32)),
+                            ctx.policy.compute_dtype)
+            y = jnp.asarray(rng.integers(0, 10, (8,)), jnp.int32)
+
+            def loss_fn(params, batch):
+                def fwd(img):
+                    return resnet(img, "resnet18", num_classes=10, width=16)
+                logits = nn.apply(fwd, params, batch["x"])
+                return jnp.mean(F.softmax_cross_entropy(logits, batch["y"]))
+
+            params = nn.init(
+                lambda img: resnet(img, "resnet18", num_classes=10, width=16),
+                jax.random.key(0), x)
+            solver = Momentum(lr=0.05)
+            scaler = dynamic_scaler() if ctx.policy.needs_loss_scaling \
+                else static_scaler(1.0)
+            state = init_train_state(params, solver, scaler)
+            step = jax.jit(make_train_step(loss_fn, solver, scaler))
+            batch = {"x": x, "y": y}
+
+            def run(s):
+                with nn.context_scope(ctx):
+                    return step(s, batch)
+
+            act_bytes = int(np.prod(x.shape)) * x.dtype.itemsize
+            return run, state, act_bytes
+
+    return build()
+
+
+def main() -> None:
+    results = {}
+    for tc in ("float", "half", "bf16"):
+        run, state, act_bytes = _train_step_for(tc)
+        us = time_fn(lambda: run(state), iters=3)
+        results[tc] = us
+        emit(f"table1/resnet18w16_train_{tc}", us,
+             f"act_bytes_per_image={act_bytes // 8}")
+    emit("table1/speedup_half_vs_fp32", results["float"],
+         f"x{results['float'] / results['half']:.2f}")
+    emit("table1/speedup_bf16_vs_fp32", results["float"],
+         f"x{results['float'] / results['bf16']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

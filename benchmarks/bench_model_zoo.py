@@ -1,0 +1,71 @@
+
+"""Paper Tables 2-3: per-architecture training step time (model zoo).
+
+The paper benchmarks its reference-model zoo (ResNet variants, lightweight
+models); ours is the 10 assigned architectures at smoke scale — the same
+framework-overhead measurement — plus loss-decrease over 20 steps standing
+in for the (data-gated) validation-error column.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as nn
+from repro.configs import ARCHS
+from repro.distributed.train_step import init_train_state, make_train_step
+from repro.models.registry import get_model
+from repro.precision.loss_scale import static_scaler
+from repro.solvers import Adam
+from benchmarks.common import emit, time_fn
+
+
+def bench_arch(arch: str) -> None:
+    nn.clear_parameters()
+    cfg = dataclasses.replace(ARCHS[arch].smoke(), remat="none")
+    api = get_model(cfg)
+    rng = np.random.default_rng(0)
+    S = max(32, cfg.ssm_chunk * 2 if cfg.ssm_state else 32)
+    batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, S)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, S)),
+                                   jnp.int32)}
+    if cfg.mrope:
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None, :, None],
+                              (2, S, 3))
+        batch["positions"] = jnp.asarray(np.ascontiguousarray(pos))
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((2, cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32)
+
+    def loss_fn(p, b):
+        return nn.apply(lambda **kw: api.loss_fn(**kw), p, **b)
+
+    fwd = {k: v for k, v in batch.items() if k != "labels"}
+    params = nn.init(lambda **kw: api.forward(**kw), jax.random.key(0), **fwd)
+    solver = Adam(alpha=3e-3)
+    scaler = static_scaler(1.0)
+    state = init_train_state(params, solver, scaler)
+    step = jax.jit(make_train_step(loss_fn, solver, scaler),
+                   donate_argnums=())
+    us = time_fn(lambda: step(state, batch), iters=3)
+
+    losses = []
+    s = state
+    for _ in range(20):
+        s, m = step(s, batch)
+        losses.append(float(m["loss"]))
+    emit(f"table2_3/{arch}", us,
+         f"loss {losses[0]:.3f}->{losses[-1]:.3f}")
+
+
+def main() -> None:
+    for arch in sorted(ARCHS):
+        bench_arch(arch)
+
+
+if __name__ == "__main__":
+    main()

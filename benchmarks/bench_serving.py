@@ -1,0 +1,46 @@
+
+"""Serving engine throughput: continuous batching vs sequential requests."""
+
+import jax
+import jax.numpy as jnp
+import time
+
+import repro.core as nn
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from benchmarks.common import emit
+
+CFG = ModelConfig(name="t", family="dense", n_layers=4, d_model=128,
+                  n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=512,
+                  head_dim=32, remat="none")
+
+
+def run(max_batch: int, n_requests: int = 8, new_tokens: int = 16) -> float:
+    nn.clear_parameters()
+    api = get_model(CFG)
+    params = nn.init(lambda t: T.forward(CFG, t), jax.random.key(0),
+                     jnp.zeros((1, 8), jnp.int32))
+    eng = ServingEngine(api, params, max_batch=max_batch, max_seq=64)
+    for i in range(n_requests):
+        eng.submit(Request(uid=i, prompt=[1 + i, 2, 3],
+                           max_new_tokens=new_tokens))
+    eng.step()  # warm the compiled step
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in done)
+    return toks / dt
+
+
+def main() -> None:
+    seq = run(max_batch=1)
+    cb = run(max_batch=4)
+    emit("serving/sequential_tok_per_s", 1e6 / max(seq, 1e-9), f"{seq:.1f} tok/s")
+    emit("serving/continuous_batch4_tok_per_s", 1e6 / max(cb, 1e-9),
+         f"{cb:.1f} tok/s, x{cb / seq:.2f}")
+
+
+if __name__ == "__main__":
+    main()

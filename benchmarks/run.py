@@ -1,0 +1,58 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — paper-table parity:
+
+  table1       mixed-precision training time + speedup (paper Table 1, §3.3)
+  table2_3     model-zoo training step times (paper Tables 2-3 adapted to the
+               10 assigned architectures)
+  graph        static vs dynamic computation graphs (paper §2.2, Figure 1)
+  collectives  distributed all-reduce (+compressed) scaling (paper §2.3)
+  nnp          serialization round-trip (paper §3)
+  kernels      attention / SSD kernel-layer microbenches
+  serving      continuous-batching throughput
+
+The TPU-scale performance story (roofline terms per arch x shape x mesh) is
+produced by ``repro.launch.dryrun`` + ``repro.launch.report`` and recorded in
+EXPERIMENTS.md; this harness measures the *framework* on the host, as the
+paper's own tables measure wall-clock behaviour of the implementation.
+"""
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_collectives, bench_fileformat,
+                            bench_graph_modes, bench_kernels,
+                            bench_mixed_precision, bench_model_zoo,
+                            bench_serving)
+    suites = [
+        ("table1", bench_mixed_precision.main),
+        ("table2_3", bench_model_zoo.main),
+        ("graph", bench_graph_modes.main),
+        ("collectives", bench_collectives.main),
+        ("nnp", bench_fileformat.main),
+        ("kernels", bench_kernels.main),
+        ("serving", bench_serving.main),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if only and name != only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness running
+            failed += 1
+            print(f"{name}/SUITE_FAILED,0,{type(e).__name__}: {e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

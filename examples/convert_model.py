@@ -1,0 +1,52 @@
+
+"""Compatibility tooling (paper §3): export a trained model to .nnp, reload
+it WITHOUT the defining code, execute, query unsupported ops, and round-trip
+through the mini-ONNX interchange.
+
+Run: PYTHONPATH=src python examples/convert_model.py
+"""
+
+import tempfile
+import os
+
+import numpy as np
+
+import repro.core as nn
+import repro.core.functions as F
+import repro.core.parametric as PF
+from repro.fileformat import (NnpExecutor, export_model, load_nnp,
+                              query_unsupported)
+from repro.fileformat.onnx_mini import (export_onnx, import_onnx,
+                                        unsupported_for_export)
+from repro.models.cnn import lenet
+
+
+def main():
+    nn.clear_parameters()
+    x = np.random.default_rng(0).standard_normal((1, 1, 28, 28)) \
+        .astype(np.float32)
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "lenet.nnp")
+        model = export_model("lenet", lambda x: lenet(x), {"x": x}, path)
+        net = model.networks[0]
+        print(f"exported {path} ({os.path.getsize(path) // 1024} KiB)")
+        print(f"  functions: {[f.type for f in net.functions]}")
+        print(f"  unsupported for reload: {query_unsupported(net)}")
+
+        nn.clear_parameters()          # simulate a fresh process
+        mf, params = load_nnp(path)
+        executor = NnpExecutor(mf.network("lenet"), params)
+        out = executor(x=x)[0]
+        print(f"reloaded + executed: logits {out.shape}")
+
+        print(f"  unsupported for ONNX export: "
+              f"{unsupported_for_export(net)}")
+        onnx = export_onnx(net, params)
+        back = import_onnx(onnx)
+        print(f"ONNX round-trip: {len(onnx['graph']['node'])} nodes -> "
+              f"{len(back.functions)} functions re-imported")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+
+"""Paper §3.3 / Listing 6: fp16 training with dynamic loss scaling, on the
+eager plane — scale_grad / check_inf_or_nan_grad / update, exactly the
+paper's loop.
+
+Run: PYTHONPATH=src python examples/mixed_precision_training.py
+"""
+
+import numpy as np
+
+import repro.core as nn
+import repro.core.functions as F
+import repro.core.parametric as PF
+from repro.solvers import Adam
+
+
+def main():
+    nn.set_default_context(
+        nn.get_extension_context("cpu", type_config="half"))
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((64, 16)).astype(np.float16)
+    ys = rng.integers(0, 4, 64)
+
+    x = nn.Variable((8, 16), dtype=np.float16)
+    t = nn.Variable((8,), dtype=np.int32)
+    h = F.relu(PF.affine(x, 32, name="fc1"))
+    logits = PF.affine(h, 4, name="fc2")
+    loss = F.mean(F.softmax_cross_entropy(logits, t))
+
+    solver = Adam(alpha=1e-2)
+    solver.set_parameters(nn.get_parameters())
+
+    loss_scale, factor, interval, counter = 8.0, 2.0, 20, 0
+    for step in range(60):
+        i = (step * 8) % 64
+        x.d = xs[i:i + 8]; t.d = ys[i:i + 8]
+        loss.forward()
+        solver.zero_grad()
+        loss.backward(grad=loss_scale)          # paper: backward(loss_scale)
+        if solver.check_inf_or_nan_grad():      # overflow -> shrink + skip
+            loss_scale /= factor
+            counter = 0
+            print(f"step {step}: overflow, scale -> {loss_scale}")
+            continue
+        solver.scale_grad(1.0 / loss_scale)     # paper Listing 6
+        solver.clip_grad_by_norm(1.0)
+        solver.update()
+        if counter > interval:                  # stable -> grow
+            loss_scale *= factor
+            counter = 0
+        counter += 1
+        if step % 10 == 0:
+            print(f"step {step:3d}  loss {float(loss.data):7.4f}  "
+                  f"scale {loss_scale:g}")
+    print("fp16 storage dtype:",
+          nn.get_parameters()["fc1/W"].dtype)
+
+
+if __name__ == "__main__":
+    main()

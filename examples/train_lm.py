@@ -1,0 +1,19 @@
+
+"""End-to-end training driver: a ~10M-param llama-family LM for a few hundred
+steps on CPU, with checkpointing + resume + straggler monitoring.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 200]
+(~100M-scale: --arch llama3.2-1b --smoke off on real hardware; every flag of
+repro.launch.train applies.)
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or []
+    defaults = ["--arch", "llama3.2-1b", "--smoke", "--steps", "200",
+                "--batch", "8", "--seq", "128", "--lr", "3e-3",
+                "--ckpt-dir", "/tmp/repro_lm_ckpt", "--ckpt-every", "100"]
+    sys.exit(main(defaults + argv))

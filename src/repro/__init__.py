@@ -1,0 +1,10 @@
+"""repro — Neural Network Libraries (nnabla) rebuilt as a JAX/TPU framework.
+
+    import repro.core as nn
+    import repro.core.functions as F
+    import repro.core.parametric as PF
+
+See README.md / DESIGN.md / EXPERIMENTS.md at the repo root.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from repro.comm.communicator import (Communicator, compressed_all_reduce,
+                                     error_feedback_reduce, flatten_buckets)
+
+__all__ = ["Communicator", "compressed_all_reduce", "error_feedback_reduce",
+           "flatten_buckets"]

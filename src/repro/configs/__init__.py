@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+
+from repro.configs.base import (LONG_CONTEXT_FAMILIES, SHAPES, ModelConfig,
+                                ShapeConfig, cell_applicable)
+from repro.configs.phi35_moe import CONFIG as phi35_moe
+from repro.configs.granite_moe import CONFIG as granite_moe
+from repro.configs.mamba2_370m import CONFIG as mamba2_370m
+from repro.configs.zamba2_1p2b import CONFIG as zamba2_1p2b
+from repro.configs.deepseek_coder_33b import CONFIG as deepseek_coder_33b
+from repro.configs.llama32_1b import CONFIG as llama32_1b
+from repro.configs.mistral_nemo_12b import CONFIG as mistral_nemo_12b
+from repro.configs.granite_34b import CONFIG as granite_34b
+from repro.configs.whisper_medium import CONFIG as whisper_medium
+from repro.configs.qwen2_vl_72b import CONFIG as qwen2_vl_72b
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        phi35_moe, granite_moe, mamba2_370m, zamba2_1p2b,
+        deepseek_coder_33b, llama32_1b, mistral_nemo_12b, granite_34b,
+        whisper_medium, qwen2_vl_72b,
+    ]
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    try:
+        return ARCHS[name]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown arch {name!r}; one of {sorted(ARCHS)}") from e
+
+
+__all__ = ["ARCHS", "SHAPES", "LONG_CONTEXT_FAMILIES", "ModelConfig",
+           "ShapeConfig", "cell_applicable", "get_arch"]

@@ -1,0 +1,166 @@
+"""Model/run configuration schema.
+
+One ``ModelConfig`` per architecture (exact public-literature numbers live in
+``repro/configs/<id>.py``); ``smoke()`` derives the reduced same-family
+variant used by CPU smoke tests. ``ShapeConfig`` is one input-shape cell of
+the assignment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm", "cnn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 2048        # tokens per dispatch group
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 256
+    # --- hybrid (zamba2) ---
+    attn_every: int = 0               # shared attn block period; 0 = never
+    # --- positions ---
+    rope_theta: float = 10000.0
+    max_position: int = 1 << 20
+    mrope: bool = False               # qwen2-vl 3-section M-RoPE
+    # --- enc-dec (whisper) ---
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 1500
+    # --- misc ---
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"             # "rmsnorm" | "layernorm"
+    act: str = "silu"                 # "silu" | "gelu"
+    qkv_bias: bool = False
+    remat: str = "full"               # layer_stack remat policy for training
+    scan_layers: bool = True
+    scan_unroll: int | bool = 1       # True (cost probes) = fully unrolled
+    loss_chunk: int = 0               # >0: chunked CE (no (B,S,V) buffer)
+    ssm_split_proj: bool = False      # split z/x/B/C projections (TP-clean)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    # ------------------------------------------------------------------ #
+    # parameter / FLOP accounting (used by roofline + nnp_inspect)
+    # ------------------------------------------------------------------ #
+    def param_count(self) -> int:
+        d, dff, V, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        hd = self.resolved_head_dim
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        n = emb
+        d_inner = self.ssm_expand * d
+
+        def attn_params() -> int:
+            return d * hd * self.n_heads + 2 * d * hd * self.n_kv_heads \
+                + hd * self.n_heads * d
+
+        def mlp_params() -> int:
+            mult = 3 if self.act == "silu" else 2  # gated vs plain
+            return mult * d * dff
+
+        def ssm_params() -> int:
+            nh = d_inner // self.ssm_head_dim
+            in_proj = d * (2 * d_inner + 2 * self.ssm_ngroups * self.ssm_state
+                           + nh)
+            conv = (d_inner + 2 * self.ssm_ngroups * self.ssm_state) * self.ssm_conv
+            out = d_inner * d
+            return in_proj + conv + out + 2 * nh + d_inner  # A, D, norm
+
+        if self.family in ("dense", "vlm"):
+            n += L * (attn_params() + mlp_params() + 2 * d) + d
+        elif self.family == "moe":
+            n += L * (attn_params() + self.n_experts * mlp_params()
+                      + d * self.n_experts + 2 * d) + d
+        elif self.family == "ssm":
+            n += L * (ssm_params() + d) + d
+        elif self.family == "hybrid":
+            n += L * (ssm_params() + d) + d
+            if self.attn_every:
+                n += attn_params() + mlp_params() + 2 * d  # one shared block
+        elif self.family == "audio":
+            n += self.n_encoder_layers * (attn_params() + mlp_params() + 2 * d)
+            n += L * (2 * attn_params() + mlp_params() + 3 * d) + 2 * d
+        return n
+
+    def active_param_count(self) -> int:
+        """Activated-per-token params (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, dff, L = self.d_model, self.d_ff, self.n_layers
+        mult = 3 if self.act == "silu" else 2
+        inactive = L * (self.n_experts - self.top_k) * mult * d * dff
+        return self.param_count() - inactive
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 2 if not self.attn_every
+                         else max(2, self.attn_every)),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads > 1 else 1,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=512,
+            head_dim=32,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            moe_group_size=64,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else 64,
+            ssm_chunk=16,
+            attn_every=min(self.attn_every, 2) if self.attn_every else 0,
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            n_audio_frames=16,
+            max_position=4096,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs a sub-quadratic-prefill story; only SSM/hybrid run it.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family not in LONG_CONTEXT_FAMILIES:
+        return False, ("pure full-attention arch; 500k-token context has no "
+                       "sub-quadratic prefill path (skip per assignment)")
+    return True, ""

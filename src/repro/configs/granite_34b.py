@@ -1,0 +1,21 @@
+"""granite-34b — llama-arch code model, MQA [arXiv:2405.04324; hf].
+
+88L d_model=6144 48H (kv=1, multi-query) d_ff=24576 vocab=49152.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    family="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    head_dim=128,
+    rope_theta=10000.0,
+    norm="layernorm",
+    act="gelu",
+)

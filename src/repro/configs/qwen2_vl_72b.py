@@ -1,0 +1,24 @@
+"""qwen2-vl-72b — M-RoPE, dynamic-resolution VLM backbone [arXiv:2409.12191].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064. Vision tower is a
+stub per assignment; positions arrive as (B, S, 3) t/h/w M-RoPE indices.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    head_dim=128,
+    mrope=True,
+    rope_theta=1000000.0,
+    norm="rmsnorm",
+    act="silu",
+    qkv_bias=True,
+)

@@ -1,0 +1,27 @@
+"""whisper-medium — enc-dec, conv frontend stubbed [arXiv:2212.04356].
+
+24L (x2: 24 encoder + 24 decoder) d_model=1024 16H (kv=16 MHA) d_ff=4096
+vocab=51865. LayerNorm + GELU, learned decoder positions, sinusoidal encoder
+positions; frontend provides (B, 1500, d_model) frame embeddings.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    head_dim=64,
+    encoder_decoder=True,
+    n_encoder_layers=24,
+    n_audio_frames=1500,
+    max_position=1 << 16,
+    norm="layernorm",
+    act="gelu",
+    qkv_bias=True,
+)

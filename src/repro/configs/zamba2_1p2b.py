@@ -1,0 +1,28 @@
+"""zamba2-1.2b — Mamba2 backbone + shared attention [arXiv:2411.15242; hf].
+
+38L d_model=2048 32H (kv=32, MHA shared block) d_ff=8192 vocab=32000,
+ssm_state=64. Shared attention applied every 6 layers (one physical copy).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    head_dim=64,
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_ngroups=1,
+    ssm_chunk=256,
+    attn_every=6,
+    norm="rmsnorm",
+    act="gelu",
+)

@@ -1,0 +1,38 @@
+"""repro.core — the "Neural Network Libraries" programming model on JAX.
+
+Import convention mirrors the paper::
+
+    import repro.core as nn
+    import repro.core.functions as F
+    import repro.core.parametric as PF
+"""
+
+from repro.core.context import (Context, Policy, POLICIES, auto_forward,
+                                context_scope, get_auto_forward,
+                                get_default_context, get_extension_context,
+                                set_auto_forward, set_default_context)
+from repro.core.graph import CompiledGraph, FunctionNode, compile_graph
+from repro.core.module import (apply, apply_shared, capture, init,
+                               init_shapes, layer_stack,
+                               layer_stack_with_output)
+from repro.core.parameter import (Parameter, clear_parameters,
+                                  filter_parameters, get_parameter,
+                                  get_parameter_or_create, get_parameters,
+                                  parameter_count, parameter_scope,
+                                  parameter_state, read_state, create_state,
+                                  seed_parameters, set_parameter)
+from repro.core.variable import Variable, as_variable
+
+__all__ = [
+    "Context", "Policy", "POLICIES", "auto_forward", "context_scope",
+    "get_auto_forward", "get_default_context", "get_extension_context",
+    "set_auto_forward", "set_default_context",
+    "CompiledGraph", "FunctionNode", "compile_graph",
+    "apply", "apply_shared", "capture", "init", "init_shapes", "layer_stack",
+    "layer_stack_with_output",
+    "Parameter", "clear_parameters", "filter_parameters", "get_parameter",
+    "get_parameter_or_create", "get_parameters", "parameter_count",
+    "parameter_scope", "parameter_state", "read_state", "create_state",
+    "seed_parameters", "set_parameter",
+    "Variable", "as_variable",
+]

@@ -1,0 +1,526 @@
+"""``F`` — the Function namespace (paper §2.1 building block #2).
+
+Convention (enforced by the dispatcher): positional arguments are tensors
+(arrays or :class:`Variable`), keyword arguments are static configuration.
+Called on plain arrays, every op is a pure jnp function (the functional plane
+used by pjit); called on Variables, the op is recorded on the graph
+(static/deferred) or executed immediately (dynamic), per §2.2.
+
+Numerics policy: softmax / norms / losses accumulate in fp32 regardless of the
+compute dtype — the TPU analogue of the paper's "batch normalization is in
+FP-32" rule for mixed-precision training (§3.3).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import graph as _graph
+
+
+def _op(pure_fn=None, *, name: str | None = None, n_outputs: int = 1):
+    def deco(fn):
+        opname = name or fn.__name__
+
+        @functools.wraps(fn)
+        def wrapper(*inputs, **kwargs):
+            return _graph.apply_function(opname, fn, inputs, kwargs,
+                                         n_outputs=n_outputs)
+        wrapper.pure = fn
+        return wrapper
+    if pure_fn is not None:
+        return deco(pure_fn)
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# elementwise arithmetic
+# ---------------------------------------------------------------------------
+
+@_op
+def add(a, b):
+    return jnp.add(a, b)
+
+
+@_op
+def sub(a, b):
+    return jnp.subtract(a, b)
+
+
+@_op
+def mul(a, b):
+    return jnp.multiply(a, b)
+
+
+@_op
+def div(a, b):
+    return jnp.divide(a, b)
+
+
+@_op
+def neg(a):
+    return jnp.negative(a)
+
+
+@_op
+def pow(a, b):  # noqa: A001 - nnabla parity
+    return jnp.power(a, b)
+
+
+@_op
+def exp(a):
+    return jnp.exp(a)
+
+
+@_op
+def log(a):
+    return jnp.log(a)
+
+
+@_op
+def sqrt(a):
+    return jnp.sqrt(a)
+
+
+@_op
+def rsqrt(a):
+    return lax.rsqrt(a)
+
+
+@_op
+def abs(a):  # noqa: A001
+    return jnp.abs(a)
+
+
+@_op
+def maximum2(a, b):
+    return jnp.maximum(a, b)
+
+
+@_op
+def minimum2(a, b):
+    return jnp.minimum(a, b)
+
+
+@_op
+def clip_by_value(a, *, min=None, max=None):  # noqa: A002
+    return jnp.clip(a, min, max)
+
+
+@_op
+def where(cond, a, b):
+    return jnp.where(cond, a, b)
+
+
+@_op
+def stop_gradient(a):
+    return lax.stop_gradient(a)
+
+
+@_op
+def cast(a, *, dtype):
+    return a.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+@_op
+def relu(a, *, inplace: bool = False):
+    del inplace  # nnabla API parity; XLA owns buffers here
+    return jnp.maximum(a, 0)
+
+
+@_op
+def leaky_relu(a, *, alpha: float = 0.1):
+    return jnp.where(a >= 0, a, alpha * a)
+
+
+@_op
+def sigmoid(a):
+    return jax.nn.sigmoid(a)
+
+
+@_op
+def tanh(a):
+    return jnp.tanh(a)
+
+
+@_op
+def gelu(a):
+    # tanh approximation — MXU-friendly, matches common LM checkpoints.
+    c = math.sqrt(2.0 / math.pi)
+    af = a.astype(jnp.float32)
+    out = 0.5 * af * (1.0 + jnp.tanh(c * (af + 0.044715 * af**3)))
+    return out.astype(a.dtype)
+
+
+@_op
+def silu(a):
+    return a * jax.nn.sigmoid(a)
+
+
+swish = silu
+
+
+@_op
+def softplus(a):
+    return jax.nn.softplus(a)
+
+
+@_op
+def softmax(a, *, axis: int = -1):
+    af = a.astype(jnp.float32)
+    return jax.nn.softmax(af, axis=axis).astype(a.dtype)
+
+
+@_op
+def log_softmax(a, *, axis: int = -1):
+    af = a.astype(jnp.float32)
+    return jax.nn.log_softmax(af, axis=axis).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# reductions / shape
+# ---------------------------------------------------------------------------
+
+@_op
+def sum(a, *, axis=None, keepdims: bool = False):  # noqa: A001
+    return jnp.sum(a, axis=axis, keepdims=keepdims)
+
+
+@_op
+def mean(a, *, axis=None, keepdims: bool = False):
+    return jnp.mean(a, axis=axis, keepdims=keepdims)
+
+
+@_op
+def max(a, *, axis=None, keepdims: bool = False):  # noqa: A001
+    return jnp.max(a, axis=axis, keepdims=keepdims)
+
+
+@_op
+def min(a, *, axis=None, keepdims: bool = False):  # noqa: A001
+    return jnp.min(a, axis=axis, keepdims=keepdims)
+
+
+@_op
+def cumsum(a, *, axis: int = -1):
+    return jnp.cumsum(a, axis=axis)
+
+
+@_op
+def logsumexp(a, *, axis: int = -1, keepdims: bool = False):
+    return jax.scipy.special.logsumexp(
+        a.astype(jnp.float32), axis=axis, keepdims=keepdims).astype(a.dtype)
+
+
+@_op
+def reshape(a, *, shape):
+    return jnp.reshape(a, shape)
+
+
+@_op
+def transpose(a, *, axes=None):
+    return jnp.transpose(a, axes)
+
+
+@_op
+def broadcast_to(a, *, shape):
+    return jnp.broadcast_to(a, shape)
+
+
+@_op
+def concatenate(*xs, axis: int = 0):
+    return jnp.concatenate(xs, axis=axis)
+
+
+@_op
+def slice(a, *, start, stop, step=None):  # noqa: A001
+    import builtins
+    idx = tuple(builtins.slice(s, e, st) for s, e, st in
+                zip(start, stop, step or [1] * len(start)))
+    return a[idx]
+
+
+@_op
+def pad(a, *, pad_width, value: float = 0.0):
+    return jnp.pad(a, pad_width, constant_values=value)
+
+
+@_op
+def squeeze(a, *, axis=None):
+    return jnp.squeeze(a, axis=axis)
+
+
+@_op
+def expand_dims(a, *, axis: int):
+    return jnp.expand_dims(a, axis)
+
+
+@_op
+def one_hot(a, *, num_classes: int, dtype=jnp.float32):
+    return jax.nn.one_hot(a, num_classes, dtype=dtype)
+
+
+@_op
+def gather(table, idx, *, axis: int = 0):
+    return jnp.take(table, idx, axis=axis)
+
+
+@_op(n_outputs=2)
+def top_k(a, *, k: int):
+    return lax.top_k(a, k)
+
+
+@_op
+def argmax(a, *, axis: int = -1):
+    return jnp.argmax(a, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# linear algebra
+# ---------------------------------------------------------------------------
+
+@_op
+def matmul(a, b):
+    return jnp.matmul(a, b)
+
+
+@_op
+def batch_matmul(a, b, *, transpose_a: bool = False, transpose_b: bool = False):
+    if transpose_a:
+        a = jnp.swapaxes(a, -1, -2)
+    if transpose_b:
+        b = jnp.swapaxes(b, -1, -2)
+    return jnp.matmul(a, b)
+
+
+@_op
+def einsum(*operands, equation: str, precision=None):
+    return jnp.einsum(equation, *operands, precision=precision)
+
+
+def dot(a, b, preferred_element_type=None):
+    """Pure helper (not taped): MXU matmul with explicit accumulation dtype."""
+    return jnp.matmul(a, b, preferred_element_type=preferred_element_type)
+
+
+# ---------------------------------------------------------------------------
+# normalization (fp32 accumulation, paper §3.3 rule)
+# ---------------------------------------------------------------------------
+
+@_op
+def layer_normalization(x, gamma, beta, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    y = y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+@_op
+def rms_normalization(x, gamma, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+@_op
+def batch_normalization(x, gamma, beta, mean_stat, var_stat, *,
+                        eps: float = 1e-5, batch_stat: bool = True):
+    """NCHW batch norm; fp32 statistics (paper: BN stays FP-32 under 'half')."""
+    xf = x.astype(jnp.float32)
+    axes = tuple(i for i in range(x.ndim) if i != 1)
+    if batch_stat:
+        mu = jnp.mean(xf, axis=axes, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=axes, keepdims=True)
+    else:
+        bshape = (1, x.shape[1]) + (1,) * (x.ndim - 2)
+        mu = mean_stat.astype(jnp.float32).reshape(bshape)
+        var = var_stat.astype(jnp.float32).reshape(bshape)
+    bshape = (1, x.shape[1]) + (1,) * (x.ndim - 2)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    y = y * gamma.astype(jnp.float32).reshape(bshape) \
+        + beta.astype(jnp.float32).reshape(bshape)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# convolution / pooling (NCHW, nnabla layout)
+# ---------------------------------------------------------------------------
+
+@_op
+def convolution(x, w, b=None, *, pad=(0, 0), stride=(1, 1), dilation=(1, 1),
+                group: int = 1):
+    dims = ("NCHW", "OIHW", "NCHW")
+    y = lax.conv_general_dilated(
+        x, w, window_strides=tuple(stride),
+        padding=[(p, p) for p in pad],
+        rhs_dilation=tuple(dilation),
+        dimension_numbers=dims,
+        feature_group_count=group)
+    if b is not None:
+        y = y + b.astype(y.dtype).reshape((1, -1) + (1,) * (y.ndim - 2))
+    return y.astype(x.dtype)
+
+
+@_op
+def convolution_1d(x, w, b=None, *, pad: int = 0, stride: int = 1,
+                   group: int = 1):
+    """(B, C, L) conv — mamba's depthwise causal conv uses group=C."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding=[(pad, pad)],
+        dimension_numbers=("NCH", "OIH", "NCH"),
+        feature_group_count=group)
+    if b is not None:
+        y = y + b.astype(y.dtype).reshape(1, -1, 1)
+    return y.astype(x.dtype)
+
+
+@_op
+def max_pooling(x, *, kernel=(2, 2), stride=None, pad=(0, 0)):
+    stride = stride or kernel
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max,
+        window_dimensions=(1, 1) + tuple(kernel),
+        window_strides=(1, 1) + tuple(stride),
+        padding=((0, 0), (0, 0)) + tuple((p, p) for p in pad))
+
+
+@_op
+def average_pooling(x, *, kernel=(2, 2), stride=None, pad=(0, 0)):
+    stride = stride or kernel
+    ones = lax.reduce_window(
+        jnp.ones_like(x), 0.0, lax.add,
+        window_dimensions=(1, 1) + tuple(kernel),
+        window_strides=(1, 1) + tuple(stride),
+        padding=((0, 0), (0, 0)) + tuple((p, p) for p in pad))
+    summed = lax.reduce_window(
+        x, 0.0, lax.add,
+        window_dimensions=(1, 1) + tuple(kernel),
+        window_strides=(1, 1) + tuple(stride),
+        padding=((0, 0), (0, 0)) + tuple((p, p) for p in pad))
+    return summed / ones
+
+
+@_op
+def global_average_pooling(x):
+    return jnp.mean(x, axis=tuple(range(2, x.ndim)))
+
+
+# ---------------------------------------------------------------------------
+# embeddings / rotary
+# ---------------------------------------------------------------------------
+
+@_op
+def embed(ids, table):
+    return jnp.take(table, ids, axis=0)
+
+
+def rope_frequencies(head_dim: int, max_pos: int, theta: float = 10000.0,
+                     dtype=jnp.float32):
+    """(max_pos, head_dim//2) cos/sin tables."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    t = jnp.arange(max_pos, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv)
+    return jnp.cos(freqs).astype(dtype), jnp.sin(freqs).astype(dtype)
+
+
+@_op
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (seq, head_dim//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., :, None, :].astype(jnp.float32)
+    s = sin[..., :, None, :].astype(jnp.float32)
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dropout / noise
+# ---------------------------------------------------------------------------
+
+@_op
+def dropout(x, *, p: float = 0.5, seed: int = 0):
+    if p <= 0.0:
+        return x
+    key = jax.random.fold_in(jax.random.key(seed), 0)
+    keep = jax.random.bernoulli(key, 1.0 - p, x.shape)
+    return jnp.where(keep, x / (1.0 - p), jnp.zeros_like(x))
+
+
+@_op
+def rand(*, shape, low: float = 0.0, high: float = 1.0, seed: int = 0):
+    key = jax.random.key(seed)
+    return jax.random.uniform(key, shape, jnp.float32, low, high)
+
+
+# ---------------------------------------------------------------------------
+# losses (fp32)
+# ---------------------------------------------------------------------------
+
+@_op
+def softmax_cross_entropy(logits, labels, *, axis: int = -1):
+    """Integer labels; returns per-example loss (fp32)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=axis)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=axis)[..., 0]
+    return -ll
+
+
+@_op
+def sigmoid_cross_entropy(logits, targets):
+    lf = logits.astype(jnp.float32)
+    tf = targets.astype(jnp.float32)
+    return jnp.maximum(lf, 0) - lf * tf + jnp.log1p(jnp.exp(-jnp.abs(lf)))
+
+
+@_op
+def mean_squared_error(pred, target):
+    d = pred.astype(jnp.float32) - target.astype(jnp.float32)
+    return jnp.square(d)
+
+
+# ---------------------------------------------------------------------------
+# attention (XLA reference path; kernels/ provides the Pallas hot path)
+# ---------------------------------------------------------------------------
+
+@_op
+def scaled_dot_product_attention(q, k, v, *, causal: bool = True,
+                                 scale: float | None = None,
+                                 window: int | None = None):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D). GQA via head broadcasting.
+
+    fp32 logits+softmax (the loss-scaling-free numerics TPU bf16 affords).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qh = q.reshape(B, Sq, Hkv, rep, D)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        # Offset so the causal frontier aligns when Sq != Sk (decode step).
+        qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        kpos = jnp.arange(Sk)[None, :]
+        mask = qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)

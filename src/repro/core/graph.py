@@ -1,0 +1,277 @@
+"""Graph engine: static (deferred) and dynamic (auto-forward) execution.
+
+Paper §2.2 / Figure 1. One code path builds the graph; the execution mode is a
+context flag:
+
+* dynamic (``with nn.auto_forward():``) — every ``F.*`` call executes
+  immediately, op by op, capturing a per-node VJP. Intermediates are
+  inspectable the moment they are created.
+* static (default) — ``F.*`` only records nodes; ``y.forward()`` runs the
+  whole subgraph. The first ``forward(...)`` of a given graph JIT-compiles a
+  single fused XLA program for it (and a paired VJP program for
+  ``backward()``), which is where the paper's "static is fast" property comes
+  from on TPU.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections.abc import Callable, Sequence
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import context as _ctx
+from repro.core.variable import Variable, as_variable
+
+_node_counter = itertools.count()
+
+
+class FunctionNode:
+    """One applied Function (paper's ``Function`` building block)."""
+
+    __slots__ = ("uid", "name", "pure_fn", "kwargs", "inputs", "outputs",
+                 "vjp_fn", "executed", "n_outputs")
+
+    def __init__(self, name: str, pure_fn: Callable, kwargs: dict,
+                 inputs: list[Variable], n_outputs: int):
+        self.uid = next(_node_counter)
+        self.name = name
+        self.pure_fn = pure_fn
+        self.kwargs = kwargs
+        self.inputs = inputs
+        self.outputs: list[Variable] = []
+        self.vjp_fn = None
+        self.executed = False
+        self.n_outputs = n_outputs
+
+    def call_pure(self, *arrays):
+        out = self.pure_fn(*arrays, **self.kwargs)
+        return tuple(out) if isinstance(out, (tuple, list)) else (out,)
+
+    def execute(self, capture_vjp: bool = True) -> None:
+        arrays = []
+        for v in self.inputs:
+            if v.data is None:
+                raise RuntimeError(
+                    f"input of {self.name} has no data; call forward() from the "
+                    "output variable or set .d on the graph inputs first")
+            arrays.append(v.data)
+        if capture_vjp and any(v.need_grad for v in self.inputs):
+            outs, self.vjp_fn = jax.vjp(
+                lambda *a: self.call_pure(*a), *arrays)
+        else:
+            outs, self.vjp_fn = self.call_pure(*arrays), None
+        for var, val in zip(self.outputs, outs):
+            var.data = val
+        self.executed = True
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"FunctionNode<{self.name}#{self.uid}>"
+
+
+def apply_function(name: str, pure_fn: Callable, inputs: Sequence[Any],
+                   kwargs: dict, n_outputs: int = 1):
+    """Dispatch an F op: pure-array fast path, or record a graph node."""
+    if not any(isinstance(x, Variable) for x in inputs):
+        out = pure_fn(*inputs, **kwargs)
+        return out
+
+    in_vars = [as_variable(x) for x in inputs]
+    node = FunctionNode(name, pure_fn, kwargs, in_vars, n_outputs)
+    need_grad = any(v.need_grad for v in in_vars)
+    out_vars = [Variable(need_grad=need_grad) for _ in range(n_outputs)]
+    for ov in out_vars:
+        ov.parent = node
+    node.outputs = out_vars
+
+    if _ctx.get_auto_forward():
+        node.execute(capture_vjp=need_grad)
+    else:
+        # deferred mode: static shape inference at definition time (nnabla
+        # infers shapes when the graph is built, before any forward())
+        avals = jax.eval_shape(
+            lambda *a: node.call_pure(*a),
+            *[jax.ShapeDtypeStruct(v.shape, v.dtype) for v in in_vars])
+        for ov, av in zip(out_vars, avals):
+            ov._shape = tuple(av.shape)
+            ov._dtype = av.dtype
+
+    return out_vars[0] if n_outputs == 1 else tuple(out_vars)
+
+
+# --------------------------------------------------------------------------- #
+# Traversal
+# --------------------------------------------------------------------------- #
+
+def _topo_nodes(root: Variable) -> list[FunctionNode]:
+    """Ancestor FunctionNodes of ``root`` in topological (execution) order."""
+    order: list[FunctionNode] = []
+    seen: set[int] = set()
+    stack: list[tuple[FunctionNode, bool]] = []
+    if root.parent is not None:
+        stack.append((root.parent, False))
+    while stack:
+        node, expanded = stack.pop()
+        if expanded:
+            order.append(node)
+            continue
+        if node.uid in seen:
+            continue
+        seen.add(node.uid)
+        stack.append((node, True))
+        for v in node.inputs:
+            if v.parent is not None and v.parent.uid not in seen:
+                stack.append((v.parent, False))
+    return order
+
+
+def _graph_leaves(nodes: list[FunctionNode]) -> list[Variable]:
+    produced = {id(ov) for n in nodes for ov in n.outputs}
+    leaves: list[Variable] = []
+    seen: set[int] = set()
+    for n in nodes:
+        for v in n.inputs:
+            if id(v) not in produced and id(v) not in seen:
+                seen.add(id(v))
+                leaves.append(v)
+    return leaves
+
+
+# --------------------------------------------------------------------------- #
+# Static-plane compile cache
+# --------------------------------------------------------------------------- #
+
+class CompiledGraph:
+    """Whole-graph XLA program + its VJP, built once per graph structure."""
+
+    def __init__(self, root: Variable):
+        self.nodes = _topo_nodes(root)
+        self.leaves = _graph_leaves(self.nodes)
+        self.root = root
+        node_index = {n.uid: n for n in self.nodes}
+        leaf_pos = {id(v): i for i, v in enumerate(self.leaves)}
+
+        def pure(leaf_vals):
+            env: dict[int, Any] = {
+                id(v): leaf_vals[i] for v, i in
+                zip(self.leaves, range(len(self.leaves)))}
+            for n in self.nodes:
+                args = [env[id(v)] for v in n.inputs]
+                outs = n.call_pure(*args)
+                for ov, val in zip(n.outputs, outs):
+                    env[id(ov)] = val
+            return env[id(root)]
+
+        self._pure = pure
+        self._fwd = jax.jit(pure)
+        self._vjp = jax.jit(
+            lambda leaf_vals, ct: jax.vjp(pure, leaf_vals)[1](ct)[0])
+        self.leaf_pos = leaf_pos
+
+    def signature(self) -> tuple:
+        return tuple((n.uid, n.name) for n in self.nodes)
+
+    def forward(self) -> None:
+        vals = [v.data for v in self.leaves]
+        self.root.data = self._fwd(vals)
+
+    def backward(self, seed) -> None:
+        vals = [v.data for v in self.leaves]
+        ct = jnp.broadcast_to(jnp.asarray(seed, self.root.dtype),
+                              self.root.shape)
+        grads = self._vjp(vals, ct)
+        for v, g in zip(self.leaves, grads):
+            if v.need_grad:
+                v.grad = g
+
+
+_compiled_cache: dict[tuple, CompiledGraph] = {}
+
+
+# --------------------------------------------------------------------------- #
+# forward / backward entry points
+# --------------------------------------------------------------------------- #
+
+def forward(root: Variable, clear_no_need_grad: bool = False) -> None:
+    """Re-execute every ancestor (nnabla semantics: forward() always runs —
+    leaf .d assignments take effect on the next forward)."""
+    del clear_no_need_grad  # buffer reuse is XLA's job on this runtime
+    if root.parent is None:
+        if root.data is None:
+            raise RuntimeError("forward() on a leaf Variable with no data")
+        return
+    for node in _topo_nodes(root):
+        node.execute(capture_vjp=any(v.need_grad for v in node.inputs))
+
+
+def backward(root: Variable, seed_grad: Any = 1.0,
+             clear_buffer: bool = False) -> None:
+    """Reverse-mode sweep. ``seed_grad`` is the loss scale (paper Listing 6)."""
+    if root.parent is None:
+        return
+    nodes = _topo_nodes(root)
+    # Ensure forward data exists (static mode may not have run yet).
+    if any(not n.executed for n in nodes):
+        forward(root)
+    # (Re)capture VJPs for nodes executed without them.
+    for n in nodes:
+        if n.vjp_fn is None and any(v.need_grad for v in n.inputs):
+            n.execute(capture_vjp=True)
+
+    cotangents: dict[int, jax.Array] = {
+        id(root): jnp.broadcast_to(
+            jnp.asarray(seed_grad, root.dtype), root.shape)}
+
+    for node in reversed(nodes):
+        outs_ct = []
+        has_ct = False
+        for ov in node.outputs:
+            ct = cotangents.get(id(ov))
+            if ct is None:
+                ct = jnp.zeros(ov.shape, ov.dtype)
+            else:
+                has_ct = True
+            outs_ct.append(ct)
+        if not has_ct or node.vjp_fn is None:
+            continue
+        in_cts = node.vjp_fn(tuple(outs_ct))
+        for iv, ct in zip(node.inputs, in_cts):
+            if not iv.need_grad:
+                continue
+            prev = cotangents.get(id(iv))
+            cotangents[id(iv)] = ct if prev is None else prev + ct
+        if clear_buffer:
+            node.vjp_fn = None
+            for ov in node.outputs:
+                if not ov.persistent and ov is not root:
+                    ov.data = None
+            node.executed = False
+
+    # Deposit gradients on leaves (and persistent intermediates), once per
+    # unique Variable even if it feeds a node through several slots.
+    produced = {id(ov) for n in nodes for ov in n.outputs}
+    deposited: set[int] = set()
+    for n in nodes:
+        for v in n.inputs:
+            if (v.need_grad and id(v) in cotangents
+                    and id(v) not in produced and id(v) not in deposited):
+                deposited.add(id(v))
+                g = cotangents[id(v)]
+                v.grad = g if v.grad is None else v.grad + g
+    for n in nodes:
+        for ov in n.outputs:
+            if ov.persistent and ov.need_grad and id(ov) in cotangents:
+                ov.grad = cotangents[id(ov)]
+
+
+def compile_graph(root: Variable) -> CompiledGraph:
+    """Build (or fetch) the fused XLA program for a static graph."""
+    probe = CompiledGraph(root)
+    sig = probe.signature()
+    cached = _compiled_cache.get(sig)
+    if cached is None:
+        _compiled_cache[sig] = probe
+        return probe
+    return cached

@@ -1,0 +1,96 @@
+"""Weight initializers (nnabla ``nnabla.initializer`` equivalents)."""
+
+from __future__ import annotations
+
+import math
+from collections.abc import Callable
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Initializer = Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+
+
+def constant(value: float = 0.0) -> Initializer:
+    def f(rng, shape, dtype):
+        del rng
+        return jnp.full(shape, value, dtype=dtype)
+    return f
+
+
+def zeros() -> Initializer:
+    return constant(0.0)
+
+
+def ones() -> Initializer:
+    return constant(1.0)
+
+
+def normal(sigma: float = 1.0) -> Initializer:
+    def f(rng, shape, dtype):
+        return (sigma * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+    return f
+
+
+def uniform(lim: float = 1.0) -> Initializer:
+    def f(rng, shape, dtype):
+        return jax.random.uniform(
+            rng, shape, jnp.float32, -lim, lim).astype(dtype)
+    return f
+
+
+def _fans(shape: tuple[int, ...]) -> tuple[int, int]:
+    if len(shape) == 0:
+        return 1, 1
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    if len(shape) == 2:
+        return shape[0], shape[1]
+    # conv kernels: (..., in, out) receptive field = prod of leading dims
+    receptive = int(np.prod(shape[:-2]))
+    return shape[-2] * receptive, shape[-1] * receptive
+
+
+def uniform_fanin() -> Initializer:
+    """nnabla's default: U(-1/sqrt(fan_in), 1/sqrt(fan_in))."""
+    def f(rng, shape, dtype):
+        fan_in, _ = _fans(shape)
+        lim = 1.0 / math.sqrt(max(1, fan_in))
+        return jax.random.uniform(
+            rng, shape, jnp.float32, -lim, lim).astype(dtype)
+    return f
+
+
+def glorot_uniform() -> Initializer:
+    def f(rng, shape, dtype):
+        fan_in, fan_out = _fans(shape)
+        lim = math.sqrt(6.0 / (fan_in + fan_out))
+        return jax.random.uniform(
+            rng, shape, jnp.float32, -lim, lim).astype(dtype)
+    return f
+
+
+def he_normal() -> Initializer:
+    def f(rng, shape, dtype):
+        fan_in, _ = _fans(shape)
+        sigma = math.sqrt(2.0 / max(1, fan_in))
+        return (sigma * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+    return f
+
+
+def lecun_normal() -> Initializer:
+    def f(rng, shape, dtype):
+        fan_in, _ = _fans(shape)
+        sigma = math.sqrt(1.0 / max(1, fan_in))
+        return (sigma * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+    return f
+
+
+def scaled_normal(scale: float, axis_dim: int) -> Initializer:
+    """sigma = scale / sqrt(axis_dim); used for residual-output projections."""
+    def f(rng, shape, dtype):
+        sigma = scale / math.sqrt(max(1, axis_dim))
+        return (sigma * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+    return f

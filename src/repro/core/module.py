@@ -1,0 +1,187 @@
+"""Functional plane: ``init`` / ``apply`` / ``layer_stack``.
+
+Bridges the nnabla-style scoped ``PF.*`` definitions to the pure
+``params -> outputs`` functions pjit needs. The same model code runs on both
+planes; this module only manages registry frames.
+
+``layer_stack`` is the scale workhorse: parameters of N identical blocks are
+stacked on a leading layer axis and the block is applied with ``lax.scan``,
+keeping HLO size O(1) in depth (62–88-layer configs must compile for a
+512-way SPMD mesh) and giving remat a natural per-layer boundary.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Callable
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import parameter as P
+
+Params = dict[str, Any]
+
+REMAT_POLICIES = {
+    "none": None,
+    # recompute everything in backward (max memory saving)
+    "full": jax.checkpoint_policies.nothing_saveable,
+    # keep matmul outputs, recompute the cheap elementwise work
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def init(fn: Callable, rng: jax.Array, *inputs, **kwargs) -> Params:
+    """Run ``fn`` in create mode; return the flat param dict it registered."""
+    store: Params = {}
+    with P.parameter_state(P.ParameterState("create", store, rng)):
+        fn(*inputs, **kwargs)
+    return store
+
+
+def init_shapes(fn: Callable, rng: jax.Array, *input_structs,
+                **kwargs) -> Params:
+    """Shape-only init (no FLOPs, no allocation) — used by the dry-run."""
+    def _go(rng_, inputs_):
+        return init(fn, rng_, *inputs_, **kwargs)
+    return jax.eval_shape(_go, rng, tuple(input_structs))
+
+
+def apply(fn: Callable, params: Params, *inputs, **kwargs):
+    """Run ``fn`` in read mode against an immutable param pytree."""
+    with P.parameter_state(P.read_state(params)):
+        return fn(*inputs, **kwargs)
+
+
+def capture(name: str, build_fn: Callable, *args, **kwargs) -> Params:
+    """Create-or-fetch a *shared* submodule's params as a plain dict.
+
+    In create mode runs ``build_fn`` (PF calls on representative inputs)
+    under scope ``name`` and registers the result; in read mode slices the
+    prefix back out. The returned dict (relative paths) can be closed over
+    inside ``lax.scan``/``lax.cond`` bodies and re-applied with
+    ``with parameter_state(read_state(d)):`` — zamba2's shared attention
+    block is the canonical user.
+    """
+    frame = P._current_frame()
+    if frame is None:
+        raise RuntimeError("capture requires a functional frame")
+    prefix = P.full_path(name) + P.SEP
+    if frame.mode == "create":
+        store: Params = {}
+        sub_rng = jax.random.fold_in(frame.rng, abs(hash(name)) % (1 << 30))
+        with P.parameter_state(P.ParameterState("create", store, sub_rng)):
+            build_fn(*args, **kwargs)
+        for k, v in store.items():
+            frame.store[prefix + k] = v
+        return store
+    sub = {k[len(prefix):]: v for k, v in frame.store.items()
+           if k.startswith(prefix)}
+    if not sub:
+        raise KeyError(f"no shared parameters under {prefix!r}")
+    return sub
+
+
+def apply_shared(shared: Params, fn: Callable, *args, **kwargs):
+    """Apply ``fn`` reading params from a captured shared dict."""
+    with P.parameter_state(P.read_state(shared)):
+        return fn(*args, **kwargs)
+
+
+def _build_or_fetch_stack(name: str, n_layers: int, body: Callable, carry,
+                          xs: Any) -> Params:
+    """Create (vmap over per-layer RNGs) or slice out the stacked params."""
+    frame = P._current_frame()
+    if frame is None:
+        raise RuntimeError("layer_stack requires a functional frame "
+                           "(wrap the model in module.init/apply)")
+    prefix = P.full_path(name) + P.SEP
+
+    if frame.mode == "create":
+        keys = jax.random.split(frame.rng, n_layers)
+        xs0 = jax.tree.map(lambda a: a[0], xs) if xs is not None else None
+
+        def one_init(key):
+            store: Params = {}
+            with P.parameter_state(P.ParameterState("create", store, key)):
+                if xs is None:
+                    body(carry, jnp.zeros((), jnp.int32))
+                else:
+                    body(carry, jnp.zeros((), jnp.int32), xs0)
+            return store
+
+        stacked = jax.vmap(one_init)(keys)
+        for k, v in stacked.items():
+            frame.store[prefix + k] = v
+        return stacked
+
+    stacked = {k[len(prefix):]: v for k, v in frame.store.items()
+               if k.startswith(prefix)}
+    if not stacked:
+        raise KeyError(f"no stacked parameters under {prefix!r}")
+    return stacked
+
+
+def layer_stack(name: str, n_layers: int, body: Callable, carry, *,
+                xs: Any = None, remat: str = "none", unroll: int = 1):
+    """Apply ``body(carry, layer_idx[, xs_slice]) -> carry`` N times.
+
+    Parameters created inside ``body`` are stacked on a leading layer axis
+    under ``<scope>/<name>/...``; optional ``xs`` pytrees (leading axis
+    n_layers) are scanned alongside (per-layer constants, e.g. rope phase).
+    """
+    stacked = _build_or_fetch_stack(name, n_layers, body, carry, xs)
+    idxs = jnp.arange(n_layers)
+
+    if xs is None:
+        def step(c, scanned):
+            layer_params, idx = scanned
+            with P.parameter_state(P.read_state(layer_params)):
+                return body(c, idx), None
+        scan_xs = (stacked, idxs)
+    else:
+        def step(c, scanned):
+            layer_params, idx, x = scanned
+            with P.parameter_state(P.read_state(layer_params)):
+                return body(c, idx, x), None
+        scan_xs = (stacked, idxs, xs)
+
+    if remat != "none":
+        step = jax.checkpoint(step, policy=REMAT_POLICIES[remat],
+                              prevent_cse=False)
+    out, _ = lax.scan(step, carry, scan_xs, unroll=unroll)
+    return out
+
+
+def layer_stack_with_output(name: str, n_layers: int, body: Callable, carry,
+                            *, xs: Any = None, remat: str = "none",
+                            unroll: int | bool = 1):
+    """Like :func:`layer_stack` but ``body`` returns ``(carry, y)``; the ys
+    are stacked along a leading layer axis (e.g. per-layer KV-cache updates).
+    """
+    stacked = _build_or_fetch_stack(
+        name, n_layers,
+        (lambda c, i, x=None: (body(c, i) if x is None else body(c, i, x))[0]),
+        carry, xs)
+
+    if xs is None:
+        def step(c, scanned):
+            layer_params, idx = scanned
+            with P.parameter_state(P.read_state(layer_params)):
+                return body(c, idx)
+        if remat != "none":
+            step = jax.checkpoint(step, policy=REMAT_POLICIES[remat],
+                                  prevent_cse=False)
+        return lax.scan(step, carry, (stacked, jnp.arange(n_layers)),
+                        unroll=unroll)
+
+    def step_xs(c, scanned):
+        layer_params, idx, x = scanned
+        with P.parameter_state(P.read_state(layer_params)):
+            return body(c, idx, x)
+    if remat != "none":
+        step_xs = jax.checkpoint(step_xs, policy=REMAT_POLICIES[remat],
+                                 prevent_cse=False)
+    return lax.scan(step_xs, carry, (stacked, jnp.arange(n_layers), xs),
+                    unroll=unroll)

@@ -1,0 +1,228 @@
+"""Scoped global parameter registry — the paper's §2.1 core UX.
+
+nnabla registers every trainable parameter created by a parametric function in
+a globally accessible dictionary, keyed by a "/"-joined scope path::
+
+    with nn.parameter_scope("block1"):
+        h = PF.affine(x, 128)        # creates "block1/affine/W", "block1/affine/b"
+    nn.get_parameters()              # -> {"block1/affine/W": ..., ...}
+
+JAX needs functional purity for jit/pjit, so the registry here has two planes:
+
+* **eager plane** (no functional frame pushed) — ``PF.*`` materialize
+  :class:`Parameter` objects (Variables!) in the process-global store, so the
+  graph engine backpropagates straight into ``param.grad`` and solvers update
+  ``param.data`` — exactly the paper's Listing 1 workflow.
+* **functional plane** — under :func:`parameter_state` frames, ``PF.*`` either
+  *create* raw arrays into a frame-local dict (init trace, deterministic
+  per-path RNG) or *read* them from an immutable pytree (the dict pjit threads
+  through the compiled step).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from collections.abc import Callable, Iterator
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import context as _ctx
+from repro.core import initializer as init_mod
+from repro.core.variable import Variable
+
+SEP = "/"
+
+
+class Parameter(Variable):
+    """A named trainable Variable (the paper's ``Parameter`` kind)."""
+
+    def __init__(self, name: str, data: jax.Array, need_grad: bool = True):
+        super().__init__(need_grad=need_grad, data=data, name=name)
+        self.persistent = True
+
+
+class ParameterState:
+    """One functional frame (mode + backing store + RNG)."""
+
+    def __init__(self, mode: str, store: dict[str, Any], rng: jax.Array | None):
+        assert mode in ("create", "read")
+        self.mode = mode
+        self.store = store  # flat path -> array
+        self.rng = rng
+
+
+class _Registry(threading.local):
+    def __init__(self) -> None:
+        self.scope: list[str] = []
+        self.global_store: dict[str, Parameter] = {}
+        self.frames: list[ParameterState] = []
+        self.rng_seed = 313
+
+
+_reg = _Registry()
+
+
+def in_functional_frame() -> bool:
+    return bool(_reg.frames)
+
+
+def _current_frame() -> ParameterState | None:
+    return _reg.frames[-1] if _reg.frames else None
+
+
+@contextlib.contextmanager
+def parameter_scope(name: str) -> Iterator[None]:
+    """Paper-parity scoped naming: ``with nn.parameter_scope("conv1"): ...``"""
+    if not name or not all(part for part in name.split(SEP)):
+        raise ValueError(f"invalid scope name {name!r}")
+    _reg.scope.append(name)
+    try:
+        yield
+    finally:
+        _reg.scope.pop()
+
+
+def current_scope_path() -> str:
+    return SEP.join(_reg.scope)
+
+
+def full_path(name: str) -> str:
+    prefix = current_scope_path()
+    return f"{prefix}{SEP}{name}" if prefix else name
+
+
+def _path_rng(base: jax.Array, path: str) -> jax.Array:
+    # Deterministic per-path key: fold a stable FNV-1a hash of the path in.
+    h = np.uint32(2166136261)
+    for ch in path.encode():
+        h = np.uint32((int(h) ^ ch) * 16777619 & 0xFFFFFFFF)
+    return jax.random.fold_in(base, int(h))
+
+
+@contextlib.contextmanager
+def parameter_state(state: ParameterState) -> Iterator[ParameterState]:
+    _reg.frames.append(state)
+    try:
+        yield state
+    finally:
+        _reg.frames.pop()
+
+
+def create_state(store: dict[str, Any] | None = None,
+                 rng: jax.Array | None = None) -> ParameterState:
+    if rng is None:
+        rng = jax.random.key(_reg.rng_seed)
+    return ParameterState("create", {} if store is None else store, rng)
+
+
+def read_state(params: dict[str, Any]) -> ParameterState:
+    return ParameterState("read", params, None)
+
+
+def get_parameter_or_create(
+    name: str,
+    shape: tuple[int, ...],
+    initializer: Callable[[jax.Array, tuple[int, ...], Any], jax.Array] | None = None,
+    need_grad: bool = True,
+    dtype: Any | None = None,
+):
+    """The single entry point every ``PF.*`` uses to obtain its parameters.
+
+    Returns a raw array in functional frames, a :class:`Parameter` (Variable)
+    on the eager plane.
+    """
+    path = full_path(name)
+    policy = _ctx.get_default_context().policy
+    dtype = dtype or policy.param_dtype
+    frame = _current_frame()
+
+    if frame is not None and frame.mode == "read":
+        try:
+            value = frame.store[path]
+        except KeyError as e:
+            known = ", ".join(list(sorted(frame.store))[:8])
+            raise KeyError(
+                f"parameter {path!r} missing from provided params "
+                f"(have: {known} ...)") from e
+        got = tuple(value.shape)
+        if got != tuple(shape):
+            raise ValueError(
+                f"parameter {path!r}: stored shape {got} != requested "
+                f"{tuple(shape)}")
+        return value
+
+    if initializer is None:
+        initializer = init_mod.uniform_fanin()
+
+    if frame is not None:  # functional create
+        existing = frame.store.get(path)
+        if existing is not None:
+            if tuple(existing.shape) != tuple(shape):
+                raise ValueError(
+                    f"parameter {path!r} exists with shape "
+                    f"{tuple(existing.shape)}, requested {tuple(shape)}")
+            return existing
+        data = initializer(_path_rng(frame.rng, path), tuple(shape), dtype)
+        frame.store[path] = data
+        return data
+
+    # eager plane: global Parameter registry
+    existing_p = _reg.global_store.get(path)
+    if existing_p is not None:
+        if tuple(existing_p.shape) != tuple(shape):
+            raise ValueError(
+                f"parameter {path!r} exists with shape {existing_p.shape}, "
+                f"requested {tuple(shape)}")
+        return existing_p
+    base_rng = jax.random.key(_reg.rng_seed)
+    data = initializer(_path_rng(base_rng, path), tuple(shape), dtype)
+    p = Parameter(path, data, need_grad=need_grad)
+    _reg.global_store[path] = p
+    return p
+
+
+def get_parameter(name: str) -> Parameter | None:
+    return _reg.global_store.get(full_path(name))
+
+
+def get_parameters(grad_only: bool = True) -> dict[str, Parameter]:
+    """Paper Listing 1: all trainable parameters under the current scope."""
+    prefix = current_scope_path()
+    out: dict[str, Parameter] = {}
+    for path, p in _reg.global_store.items():
+        if prefix and not path.startswith(prefix + SEP):
+            continue
+        if grad_only and not p.need_grad:
+            continue
+        out[path] = p
+    return out
+
+
+def set_parameter(name: str, value: jax.Array, need_grad: bool = True) -> Parameter:
+    path = full_path(name)
+    p = Parameter(path, value, need_grad=need_grad)
+    _reg.global_store[path] = p
+    return p
+
+
+def clear_parameters() -> None:
+    _reg.global_store.clear()
+
+
+def seed_parameters(seed: int) -> None:
+    _reg.rng_seed = int(seed)
+
+
+def parameter_count(params: dict[str, Any] | None = None) -> int:
+    if params is None:
+        params = {k: p.data for k, p in _reg.global_store.items()}
+    return sum(int(np.prod(tuple(v.shape))) for v in params.values())
+
+
+def filter_parameters(params: dict[str, Any], pattern: str) -> dict[str, Any]:
+    rx = re.compile(pattern)
+    return {k: v for k, v in params.items() if rx.search(k)}

@@ -1,0 +1,148 @@
+"""``PF`` — Parametric Functions (paper §2.1 building block #3).
+
+Functions with trainable parameters, auto-registered into the scoped global
+registry — no pre-declared layers, code executes linearly (paper Listing 4)::
+
+    h = PF.convolution(x, 16, (5, 5), name="conv1")
+    h = F.max_pooling(h, kernel=(2, 2))
+    ...
+
+Every PF casts its parameters from storage dtype (``Policy.param_dtype``) to
+compute dtype at use — that single cast point is the whole mixed-precision
+forward story (paper §3.3: storage fp16/bf16, compute on the MXU, masters in
+the solver).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import context as _ctx
+from repro.core import functions as F
+from repro.core import initializer as I
+from repro.core.parameter import (get_parameter_or_create, parameter_scope)
+from repro.core.variable import Variable
+
+
+def _compute_cast(p):
+    policy = _ctx.get_default_context().policy
+    if isinstance(p, Variable):
+        if p.dtype != policy.compute_dtype:
+            return F.cast(p, dtype=policy.compute_dtype)
+        return p
+    return p.astype(policy.compute_dtype) if p.dtype != policy.compute_dtype else p
+
+
+@contextlib.contextmanager
+def _maybe_scope(name: str | None, default: str):
+    with parameter_scope(name if name is not None else default):
+        yield
+
+
+def affine(x, n_outmaps: int, *, base_axis: int = 1, name: str | None = None,
+           w_init=None, b_init=None, with_bias: bool = True):
+    """y = flatten(x) @ W + b over trailing dims from ``base_axis`` on."""
+    shape = tuple(x.shape)
+    n_in = int(np.prod(shape[base_axis:]))
+    with _maybe_scope(name, "affine"):
+        w = get_parameter_or_create("W", (n_in, n_outmaps),
+                                    w_init or I.uniform_fanin())
+        b = get_parameter_or_create("b", (n_outmaps,),
+                                    b_init or I.zeros()) if with_bias else None
+    w = _compute_cast(w)
+    h = F.reshape(x, shape=shape[:base_axis] + (n_in,))
+    y = F.matmul(h, w)
+    if b is not None:
+        y = F.add(y, _compute_cast(b))
+    return y
+
+
+def dense(x, features: int, *, name: str | None = None, use_bias: bool = False,
+          w_init=None, b_init=None):
+    """Last-axis dense — the transformer workhorse (keeps leading dims)."""
+    n_in = int(x.shape[-1])
+    with _maybe_scope(name, "dense"):
+        w = get_parameter_or_create("kernel", (n_in, features),
+                                    w_init or I.lecun_normal())
+        b = get_parameter_or_create("bias", (features,),
+                                    b_init or I.zeros()) if use_bias else None
+    y = F.matmul(x, _compute_cast(w))
+    if b is not None:
+        y = F.add(y, _compute_cast(b))
+    return y
+
+
+def convolution(x, outmaps: int, kernel, *, pad=(0, 0), stride=(1, 1),
+                dilation=(1, 1), group: int = 1, name: str | None = None,
+                w_init=None, b_init=None, with_bias: bool = True):
+    inmaps = int(x.shape[1])
+    kshape = (outmaps, inmaps // group) + tuple(kernel)
+    with _maybe_scope(name, "conv"):
+        w = get_parameter_or_create("W", kshape, w_init or I.he_normal())
+        b = get_parameter_or_create("b", (outmaps,),
+                                    b_init or I.zeros()) if with_bias else None
+    return F.convolution(x, _compute_cast(w),
+                         _compute_cast(b) if b is not None else None,
+                         pad=tuple(pad), stride=tuple(stride),
+                         dilation=tuple(dilation), group=group)
+
+
+def convolution_1d(x, outmaps: int, kernel: int, *, pad: int = 0,
+                   group: int = 1, name: str | None = None, w_init=None,
+                   with_bias: bool = True, b_init=None):
+    inmaps = int(x.shape[1])
+    kshape = (outmaps, inmaps // group, kernel)
+    with _maybe_scope(name, "conv1d"):
+        w = get_parameter_or_create("W", kshape, w_init or I.he_normal())
+        b = get_parameter_or_create("b", (outmaps,),
+                                    b_init or I.zeros()) if with_bias else None
+    return F.convolution_1d(x, _compute_cast(w),
+                            _compute_cast(b) if b is not None else None,
+                            pad=pad, group=group)
+
+
+def embed(ids, n_inputs: int, n_features: int, *, name: str | None = None,
+          w_init=None):
+    with _maybe_scope(name, "embed"):
+        table = get_parameter_or_create("W", (n_inputs, n_features),
+                                        w_init or I.normal(0.02))
+    return F.embed(ids, _compute_cast(table))
+
+
+def layer_normalization(x, *, name: str | None = None, eps: float = 1e-5):
+    dim = int(x.shape[-1])
+    with _maybe_scope(name, "ln"):
+        gamma = get_parameter_or_create("gamma", (dim,), I.ones(),
+                                        dtype=jnp.float32)
+        beta = get_parameter_or_create("beta", (dim,), I.zeros(),
+                                       dtype=jnp.float32)
+    return F.layer_normalization(x, gamma, beta, eps=eps)
+
+
+def rms_norm(x, *, name: str | None = None, eps: float = 1e-6):
+    dim = int(x.shape[-1])
+    with _maybe_scope(name, "rmsnorm"):
+        gamma = get_parameter_or_create("gamma", (dim,), I.ones(),
+                                        dtype=jnp.float32)
+    return F.rms_normalization(x, gamma, eps=eps)
+
+
+def batch_normalization(x, *, name: str | None = None, batch_stat: bool = True,
+                        eps: float = 1e-5):
+    c = int(x.shape[1])
+    with _maybe_scope(name, "bn"):
+        gamma = get_parameter_or_create("gamma", (c,), I.ones(),
+                                        dtype=jnp.float32)
+        beta = get_parameter_or_create("beta", (c,), I.zeros(),
+                                       dtype=jnp.float32)
+        mean = get_parameter_or_create("mean", (c,), I.zeros(),
+                                       need_grad=False, dtype=jnp.float32)
+        var = get_parameter_or_create("var", (c,), I.ones(),
+                                      need_grad=False, dtype=jnp.float32)
+    return F.batch_normalization(x, gamma, beta, mean, var, eps=eps,
+                                 batch_stat=batch_stat)

@@ -1,0 +1,133 @@
+"""``Variable`` — nnabla's data+grad tensor handle (paper §2.1, Listing 1).
+
+A Variable owns a data array (``.d``) and a gradient array (``.g``), and
+remembers the :class:`FunctionNode` that produced it so ``forward()`` /
+``backward()`` can traverse the computation graph in either execution mode
+(static/deferred or dynamic/auto-forward, paper §2.2).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Variable:
+    __slots__ = ("data", "grad", "parent", "need_grad", "name", "_shape",
+                 "_dtype", "persistent")
+
+    def __init__(self, shape: tuple[int, ...] = (), need_grad: bool = False,
+                 data: jax.Array | None = None, name: str = "",
+                 dtype=None):
+        if data is not None:
+            self.data: jax.Array | None = jnp.asarray(data)
+            self._shape = tuple(self.data.shape)
+            self._dtype = self.data.dtype
+        else:
+            self.data = None
+            self._shape = tuple(int(s) for s in shape)
+            self._dtype = jnp.dtype(dtype) if dtype is not None \
+                else jnp.float32
+        self.grad: jax.Array | None = None
+        self.parent = None  # FunctionNode | None
+        self.need_grad = need_grad
+        self.name = name
+        self.persistent = False
+
+    # -- nnabla-parity accessors ------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.data.shape) if self.data is not None else self._shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype if self.data is not None else self._dtype
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def d(self) -> np.ndarray:
+        """Data as numpy (paper: ``x.d = np.random.random(x.shape)``)."""
+        if self.data is None:
+            # Lazily materialize zeros so `x.d[...] = v` style code works.
+            self.data = jnp.zeros(self._shape, self._dtype)
+        return np.asarray(self.data)
+
+    @d.setter
+    def d(self, value: Any) -> None:
+        arr = jnp.asarray(value)
+        if self._shape and tuple(arr.shape) != self._shape:
+            raise ValueError(
+                f"Variable shape {self._shape} != assigned {tuple(arr.shape)}")
+        self.data = arr.astype(self._dtype) if arr.dtype != self._dtype else arr
+
+    @property
+    def g(self) -> np.ndarray:
+        if self.grad is None:
+            self.grad = jnp.zeros(self.shape, self.dtype)
+        return np.asarray(self.grad)
+
+    @g.setter
+    def g(self, value: Any) -> None:
+        self.grad = jnp.asarray(value)
+
+    # -- graph execution ---------------------------------------------------------
+    def forward(self, clear_no_need_grad: bool = False) -> None:
+        """Execute every not-yet-computed ancestor function (topological)."""
+        from repro.core import graph
+        graph.forward(self, clear_no_need_grad=clear_no_need_grad)
+
+    def backward(self, grad: Any = 1.0, clear_buffer: bool = False) -> None:
+        """Backprop from this variable.
+
+        ``grad`` doubles as the loss scale (paper Listing 6:
+        ``loss.backward(loss_scale)``).
+        """
+        from repro.core import graph
+        graph.backward(self, seed_grad=grad, clear_buffer=clear_buffer)
+
+    # -- operator sugar (dispatches into F so the tape sees it) ------------------
+    def _f(self):
+        from repro.core import functions as F
+        return F
+
+    def __add__(self, o):   return self._f().add(self, o)
+    def __radd__(self, o):  return self._f().add(o, self)
+    def __sub__(self, o):   return self._f().sub(self, o)
+    def __rsub__(self, o):  return self._f().sub(o, self)
+    def __mul__(self, o):   return self._f().mul(self, o)
+    def __rmul__(self, o):  return self._f().mul(o, self)
+    def __truediv__(self, o):   return self._f().div(self, o)
+    def __rtruediv__(self, o):  return self._f().div(o, self)
+    def __neg__(self):      return self._f().neg(self)
+    def __pow__(self, o):   return self._f().pow(self, o)
+    def __matmul__(self, o):    return self._f().matmul(self, o)
+
+    def reshape(self, shape):
+        return self._f().reshape(self, shape=tuple(shape))
+
+    def sum(self, axis=None):
+        return self._f().sum(self, axis=axis)
+
+    def mean(self, axis=None):
+        return self._f().mean(self, axis=axis)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        tag = self.name or hex(id(self))
+        state = "unset" if self.data is None else "set"
+        return f"Variable({tag}, shape={self.shape}, data={state})"
+
+
+def as_variable(x: Any) -> Variable:
+    if isinstance(x, Variable):
+        return x
+    return Variable(data=jnp.asarray(x))

@@ -1,0 +1,113 @@
+"""Host data pipeline: sharded, prefetching, deterministically resumable.
+
+The DALI role in the paper's setup (§4), host-side. Batches are synthesized
+(or drawn from a token file) *by global step index*, so a restarted run
+replays the exact same stream — the checkpoint only has to store an integer.
+
+``as_global_array`` builds one sharded jax.Array across the mesh from the
+host batch (the single-controller equivalent of per-process sharded loading:
+each device gets exactly its shard; in a multi-host deployment each process
+would synthesize only its addressable shards — same code path via
+``make_array_from_callback``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Iterator
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class PipelineState:
+    step: int = 0
+
+
+class SyntheticLMPipeline:
+    """Deterministic synthetic next-token-prediction stream."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, *,
+                 seed: int = 17, prefetch: int = 2):
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+        self.state = PipelineState()
+        self._prefetch = prefetch
+        self._q: queue.Queue | None = None
+        self._worker: threading.Thread | None = None
+
+    # ---- deterministic batch synthesis ----
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        B, S = self.shape.global_batch, self.shape.seq_len
+        rng = np.random.default_rng((self.seed, step))
+        # zipf-ish token distribution: more realistic embedding traffic
+        toks = rng.zipf(1.3, size=(B, S + 1)).astype(np.int64)
+        toks = (toks % (self.cfg.vocab_size - 1)) + 1
+        batch = {"tokens": toks[:, :S].astype(np.int32),
+                 "labels": toks[:, 1:].astype(np.int32)}
+        if self.cfg.mrope:
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None, :, None],
+                                  (B, S, 3))
+            batch["positions"] = np.ascontiguousarray(pos)
+        if self.cfg.family == "audio":
+            batch["frames"] = rng.standard_normal(
+                (B, self.cfg.n_audio_frames, self.cfg.d_model)
+            ).astype(np.float32)
+        return batch
+
+    # ---- iterator + prefetch ----
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> dict[str, np.ndarray]:
+        if self._q is None:
+            self._start_worker()
+        assert self._q is not None
+        item = self._q.get()
+        self.state.step += 1
+        return item
+
+    def _start_worker(self) -> None:
+        q = queue.Queue(maxsize=self._prefetch)
+        self._q = q
+
+        def work(start_step: int) -> None:
+            s = start_step
+            while True:
+                q.put(self.batch_at(s))  # bound to THIS queue: a worker
+                s += 1                   # orphaned by restore() blocks forever
+
+        self._worker = threading.Thread(
+            target=work, args=(self.state.step,), daemon=True)
+        self._worker.start()
+
+    # ---- resume ----
+    def snapshot(self) -> dict[str, Any]:
+        return {"step": self.state.step, "seed": self.seed}
+
+    def restore(self, snap: dict[str, Any]) -> None:
+        if self._worker is not None:
+            # drop the prefetch queue; restart from the restored index
+            self._q = None
+            self._worker = None
+        self.state.step = int(snap["step"])
+        self.seed = int(snap["seed"])
+
+
+def as_global_array(batch: dict[str, np.ndarray],
+                    shardings: dict[str, NamedSharding]
+                    ) -> dict[str, jax.Array]:
+    """Host batch -> sharded global jax.Arrays (per-device shard placement)."""
+    out = {}
+    for k, v in batch.items():
+        sh = shardings[k]
+        out[k] = jax.make_array_from_callback(
+            v.shape, sh, lambda idx, v=v: v[idx])
+    return out

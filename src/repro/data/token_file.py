@@ -1,0 +1,45 @@
+
+"""Memory-mapped token-file dataset (the non-synthetic production path).
+
+File format: int32 little-endian flat token stream (``.bin``), the standard
+pre-tokenized corpus layout. Deterministic, random-access by step index —
+the same restart contract as the synthetic pipeline (checkpoint stores one
+integer).
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def write_token_file(path: str, tokens: np.ndarray) -> None:
+    np.asarray(tokens, np.int32).tofile(path)
+
+
+class TokenFilePipeline:
+    """Samples (tokens, labels) windows from a memory-mapped corpus."""
+
+    def __init__(self, path: str, cfg: ModelConfig, shape: ShapeConfig, *,
+                 seed: int = 0, shard: tuple[int, int] = (0, 1)):
+        self.data = np.memmap(path, dtype=np.int32, mode="r")
+        n = (len(self.data) - 1) // shape.seq_len
+        if n <= 0:
+            raise ValueError(f"{path}: too short for seq_len={shape.seq_len}")
+        self.n_windows = n
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+        self.shard_idx, self.n_shards = shard
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        B, S = self.shape.global_batch, self.shape.seq_len
+        rng = np.random.default_rng((self.seed, step, self.shard_idx))
+        idx = rng.integers(0, self.n_windows, B)
+        toks = np.stack([self.data[i * S: i * S + S + 1] for i in idx])
+        toks = np.clip(toks, 0, self.cfg.vocab_size - 1)
+        return {"tokens": toks[:, :S].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}

@@ -1,0 +1,90 @@
+"""Straggler detection + elastic-restart policy (fleet-scale runnability).
+
+On a real multi-pod deployment the failure modes are: a slow host
+(straggler), a dead host (restart from checkpoint on a smaller mesh), and
+transient step blow-ups. This module is the *controller-side* logic — pure
+host code, unit-testable in this container, and exactly what the launcher
+loops call on real hardware:
+
+* ``StragglerMonitor`` — per-step wall-time EWMA + robust z-score; flags
+  sustained slowdowns (>= ``sigma`` for ``patience`` steps), distinguishing
+  a slow fleet (recompile, input stall) from a slow step (GC hiccup).
+* ``ElasticPolicy`` — given the surviving chip count, picks the largest
+  valid mesh <= survivors consistent with the model's divisibility
+  constraints, for re-sharded restart via CheckpointManager.restore
+  (arrays are stored unsharded, so any target mesh works).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+
+
+@dataclasses.dataclass
+class StragglerVerdict:
+    is_straggler: bool
+    z_score: float
+    ewma_s: float
+
+
+class StragglerMonitor:
+    def __init__(self, alpha: float = 0.05, sigma: float = 4.0,
+                 patience: int = 3, warmup: int = 8):
+        self.alpha = alpha
+        self.sigma = sigma
+        self.patience = patience
+        self.warmup = warmup
+        self.ewma: float | None = None
+        self.ewvar: float = 0.0
+        self.n = 0
+        self._flags: deque[bool] = deque(maxlen=patience)
+
+    def observe(self, step_time_s: float) -> StragglerVerdict:
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = step_time_s
+            return StragglerVerdict(False, 0.0, self.ewma)
+        resid = step_time_s - self.ewma
+        std = math.sqrt(self.ewvar) if self.ewvar > 0 else abs(resid) + 1e-9
+        z = resid / (std + 1e-12)
+        slow = self.n > self.warmup and z > self.sigma
+        self._flags.append(slow)
+        # only adapt statistics on non-outlier steps (robustness)
+        if not slow:
+            self.ewma += self.alpha * resid
+            self.ewvar = (1 - self.alpha) * (self.ewvar
+                                             + self.alpha * resid * resid)
+        sustained = len(self._flags) == self.patience and all(self._flags)
+        return StragglerVerdict(sustained, z, self.ewma)
+
+
+@dataclasses.dataclass
+class MeshChoice:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    chips: int
+
+
+class ElasticPolicy:
+    """Pick a restart mesh after losing chips (power-of-two contraction)."""
+
+    def __init__(self, model_axis: int = 16, min_data: int = 1):
+        self.model_axis = model_axis
+        self.min_data = min_data
+
+    def choose(self, surviving_chips: int) -> MeshChoice:
+        model = self.model_axis
+        while model > 1 and surviving_chips < model:
+            model //= 2
+        data = max(self.min_data, 1)
+        d = surviving_chips // model
+        # largest power of two <= d
+        data = 1 << max(0, (d.bit_length() - 1))
+        if data < self.min_data:
+            raise RuntimeError(
+                f"{surviving_chips} chips cannot satisfy data>="
+                f"{self.min_data} with model={model}")
+        return MeshChoice(shape=(data, model), axes=("data", "model"),
+                          chips=data * model)

@@ -1,0 +1,144 @@
+"""Logical-axis sharding rules (t5x/MaxText style).
+
+Models annotate activations and parameters with *logical* axis names
+("batch", "heads", "mlp", ...). A rule table — owned by the launcher, swapped
+per hillclimb experiment — maps logical names to mesh axes. Rules degrade
+gracefully: a logical dim that doesn't divide by its mesh-axis size is left
+unsharded (e.g. kv_heads=8 on a model axis of 16), so one model definition
+serves every mesh.
+
+No mesh set (unit tests, eager plane) -> every call is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = str | tuple[str, ...] | None
+
+
+@dataclasses.dataclass
+class ShardingEnv:
+    mesh: Mesh | None = None
+    # logical axis name -> mesh axis (or tuple of mesh axes, or None)
+    axis_rules: dict[str, AxisVal] = dataclasses.field(default_factory=dict)
+    # param-path regex -> tuple of logical names (one per trailing dim; a
+    # leading stacked-layer dim is auto-padded with "layers")
+    param_rules: list[tuple[str, tuple[str | None, ...]]] = \
+        dataclasses.field(default_factory=list)
+
+
+class _State(threading.local):
+    def __init__(self) -> None:
+        self.env = ShardingEnv()
+
+
+_state = _State()
+
+
+def get_env() -> ShardingEnv:
+    return _state.env
+
+
+def set_env(env: ShardingEnv) -> None:
+    _state.env = env
+
+
+@contextlib.contextmanager
+def sharding_env(env: ShardingEnv):
+    prev = _state.env
+    _state.env = env
+    try:
+        yield env
+    finally:
+        _state.env = prev
+
+
+def _axis_size(mesh: Mesh, val: AxisVal) -> int:
+    if val is None:
+        return 1
+    if isinstance(val, str):
+        return mesh.shape[val]
+    return int(np.prod([mesh.shape[a] for a in val]))
+
+
+def spec_for(names: tuple[str | None, ...],
+             shape: tuple[int, ...] | None = None) -> P:
+    """Logical names -> PartitionSpec under current rules (+ divisibility)."""
+    env = _state.env
+    out: list[AxisVal] = []
+    for i, n in enumerate(names):
+        val = env.axis_rules.get(n) if n else None
+        if val is not None and shape is not None and env.mesh is not None:
+            if shape[i] % _axis_size(env.mesh, val) != 0:
+                val = None  # degrade: dim not divisible by axis size
+        out.append(val)
+    # PartitionSpec forbids using one mesh axis twice; degrade later uses.
+    used: set[str] = set()
+    cleaned: list[AxisVal] = []
+    for val in out:
+        axes = (val,) if isinstance(val, str) else (val or ())
+        if any(a in used for a in axes):
+            cleaned.append(None)
+            continue
+        used.update(axes)
+        cleaned.append(val)
+    return P(*cleaned)
+
+
+def constrain(x: jax.Array, *names: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    env = _state.env
+    if env.mesh is None or env.mesh.empty:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"constrain: {len(names)} names for rank-{x.ndim}")
+    spec = spec_for(tuple(names), tuple(x.shape))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(env.mesh, spec))
+
+
+def param_spec(path: str, shape: tuple[int, ...]) -> P:
+    """Parameter PartitionSpec from the path-regex rule table."""
+    env = _state.env
+    for rx, names in env.param_rules:
+        if re.search(rx, path):
+            padded = names
+            if len(names) < len(shape):  # stacked layer axis in front
+                padded = ("layers",) * (len(shape) - len(names)) + tuple(names)
+            elif len(names) > len(shape):
+                padded = tuple(names[-len(shape):])
+            return spec_for(tuple(padded), tuple(shape))
+    return P()  # replicate by default
+
+
+def params_shardings(params: dict[str, Any]) -> dict[str, NamedSharding]:
+    env = _state.env
+    assert env.mesh is not None
+    return {k: NamedSharding(env.mesh, param_spec(k, tuple(v.shape)))
+            for k, v in params.items()}
+
+
+def tree_shardings(tree: Any, spec_fn) -> Any:
+    """Map ``spec_fn(path, leaf) -> NamedSharding`` over a pytree with paths."""
+    env = _state.env
+    assert env.mesh is not None
+
+    def walk(prefix: str, node: Any) -> Any:
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}/{k}" if prefix else k, v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            vals = [walk(f"{prefix}/{i}", v) for i, v in enumerate(node)]
+            return type(node)(vals)
+        return spec_fn(prefix, node)
+
+    return walk("", tree)

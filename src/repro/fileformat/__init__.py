@@ -1,0 +1,14 @@
+from repro.fileformat.defs import (DatasetDef, ExecutorDef, FunctionDef,
+                                   GlobalConfig, ModelFile, MonitorDef,
+                                   NetworkDef, OptimizerDef, TrainingConfig,
+                                   VariableDef)
+from repro.fileformat.nnp import (NnpExecutor, export_model, load_nnp,
+                                  op_registry, query_unsupported, save_nnp,
+                                  trace_network)
+from repro.fileformat import onnx_mini
+
+__all__ = ["DatasetDef", "ExecutorDef", "FunctionDef", "GlobalConfig",
+           "ModelFile", "MonitorDef", "NetworkDef", "OptimizerDef",
+           "TrainingConfig", "VariableDef", "NnpExecutor", "export_model",
+           "load_nnp", "op_registry", "query_unsupported", "save_nnp",
+           "trace_network", "onnx_mini"]

@@ -1,0 +1,143 @@
+"""NNP message taxonomy (paper §3.1), as serializable dataclasses.
+
+Mirrors NNablaProtoBuf: GlobalConfig, TrainingConfig, Network, Parameter,
+Dataset, Optimizer, Monitor, Executor. The root ``ModelFile`` is what a
+``.nnp`` archive stores (graph as JSON — the protobuf role — plus parameters
+in an .npz — the HDF5 role).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class VariableDef:
+    name: str
+    shape: list[int]
+    dtype: str
+    kind: str = "intermediate"   # input | parameter | intermediate | output
+
+
+@dataclasses.dataclass
+class FunctionDef:
+    name: str                    # unique instance name
+    type: str                    # op type (F registry key)
+    inputs: list[str]
+    outputs: list[str]
+    args: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class NetworkDef:
+    name: str
+    variables: list[VariableDef] = dataclasses.field(default_factory=list)
+    functions: list[FunctionDef] = dataclasses.field(default_factory=list)
+    inputs: list[str] = dataclasses.field(default_factory=list)
+    outputs: list[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class GlobalConfig:
+    default_context: str = "cpu|float"
+
+
+@dataclasses.dataclass
+class TrainingConfig:
+    max_epoch: int = 0
+    iter_per_epoch: int = 0
+    save_best: bool = True
+
+
+@dataclasses.dataclass
+class DatasetDef:
+    name: str = "synthetic"
+    uri: str = ""
+    batch_size: int = 0
+    shuffle: bool = False
+
+
+@dataclasses.dataclass
+class OptimizerDef:
+    name: str = "adam"
+    network: str = ""
+    solver: str = "adam"
+    hyper: dict[str, float] = dataclasses.field(default_factory=dict)
+    dataset: str = ""
+
+
+@dataclasses.dataclass
+class MonitorDef:
+    name: str = "loss"
+    network: str = ""
+    variable: str = ""
+
+
+@dataclasses.dataclass
+class ExecutorDef:
+    name: str = "runtime"
+    network: str = ""
+    inputs: list[str] = dataclasses.field(default_factory=list)
+    outputs: list[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ModelFile:
+    global_config: GlobalConfig = dataclasses.field(default_factory=GlobalConfig)
+    training_config: TrainingConfig = \
+        dataclasses.field(default_factory=TrainingConfig)
+    networks: list[NetworkDef] = dataclasses.field(default_factory=list)
+    datasets: list[DatasetDef] = dataclasses.field(default_factory=list)
+    optimizers: list[OptimizerDef] = dataclasses.field(default_factory=list)
+    monitors: list[MonitorDef] = dataclasses.field(default_factory=list)
+    executors: list[ExecutorDef] = dataclasses.field(default_factory=list)
+
+    def network(self, name: str) -> NetworkDef:
+        for n in self.networks:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+
+def to_dict(obj: Any) -> Any:
+    if dataclasses.is_dataclass(obj):
+        return {f.name: to_dict(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, (list, tuple)):
+        return [to_dict(v) for v in obj]
+    if isinstance(obj, dict):
+        return {k: to_dict(v) for k, v in obj.items()}
+    return obj
+
+
+_NESTED = {
+    ModelFile: {"global_config": GlobalConfig,
+                "training_config": TrainingConfig},
+}
+_LISTS = {
+    ModelFile: {"networks": None, "datasets": DatasetDef,
+                "optimizers": OptimizerDef, "monitors": MonitorDef,
+                "executors": ExecutorDef},
+    # NetworkDef handled explicitly below
+}
+
+
+def network_from_dict(d: dict) -> NetworkDef:
+    return NetworkDef(
+        name=d["name"],
+        variables=[VariableDef(**v) for v in d["variables"]],
+        functions=[FunctionDef(**f) for f in d["functions"]],
+        inputs=list(d["inputs"]),
+        outputs=list(d["outputs"]))
+
+
+def model_from_dict(d: dict) -> ModelFile:
+    return ModelFile(
+        global_config=GlobalConfig(**d.get("global_config", {})),
+        training_config=TrainingConfig(**d.get("training_config", {})),
+        networks=[network_from_dict(n) for n in d.get("networks", [])],
+        datasets=[DatasetDef(**x) for x in d.get("datasets", [])],
+        optimizers=[OptimizerDef(**x) for x in d.get("optimizers", [])],
+        monitors=[MonitorDef(**x) for x in d.get("monitors", [])],
+        executors=[ExecutorDef(**x) for x in d.get("executors", [])])

@@ -1,0 +1,92 @@
+"""``nnp_inspect`` — what Neural Network Console displays, as a CLI.
+
+Layer list, parameter counts, MAC estimates per function, output shapes —
+the paper's §5.1 "footprint the computational workload of the networks
+designed in NNL" story without the GUI.
+
+  PYTHONPATH=src python -m repro.fileformat.inspect_cli model.nnp
+  PYTHONPATH=src python -m repro.fileformat.inspect_cli --arch llama3.2-1b
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.fileformat.defs import ModelFile, NetworkDef
+from repro.fileformat.nnp import load_nnp, query_unsupported
+
+_MAC_OPS = {"matmul", "batch_matmul", "convolution", "einsum", "affine"}
+
+
+def _macs(f, var_shapes: dict[str, list[int]]) -> int:
+    if f.type not in _MAC_OPS or not f.outputs:
+        return 0
+    out = var_shapes.get(f.outputs[0])
+    a = var_shapes.get(f.inputs[0]) if f.inputs else None
+    if not out or not a:
+        return 0
+    k = a[-1] if a else 1
+    return int(np.prod(out)) * k
+
+
+def inspect_network(net: NetworkDef, params: dict) -> None:
+    var_shapes = {v.name: v.shape for v in net.variables}
+    n_params = sum(int(np.prod(v.shape)) for v in net.variables
+                   if v.kind == "parameter")
+    total_macs = 0
+    print(f"network {net.name!r}: {len(net.functions)} functions, "
+          f"{n_params:,} parameters")
+    print(f"  inputs : {[(n, var_shapes.get(n)) for n in net.inputs]}")
+    print(f"  outputs: {[(n, var_shapes.get(n)) for n in net.outputs]}")
+    print(f"  {'function':<22s} {'type':<18s} {'output shape':<18s} MACs")
+    for f in net.functions:
+        macs = _macs(f, var_shapes)
+        total_macs += macs
+        out_shape = var_shapes.get(f.outputs[0], "?") if f.outputs else "?"
+        print(f"  {f.name:<22s} {f.type:<18s} {str(out_shape):<18s} "
+              f"{macs:,}")
+    print(f"  total MACs/forward: {total_macs:,}")
+    unsup = query_unsupported(net)
+    print(f"  unsupported for executor reload: {unsup or 'none'}")
+
+
+def inspect_arch(name: str) -> None:
+    from repro.configs import get_arch
+    from repro.configs.base import SHAPES
+    cfg = get_arch(name)
+    print(f"arch {cfg.name}: family={cfg.family} {cfg.n_layers}L "
+          f"d={cfg.d_model} H={cfg.n_heads}/{cfg.n_kv_heads} "
+          f"ff={cfg.d_ff} V={cfg.vocab_size}")
+    print(f"  params        : {cfg.param_count():,} "
+          f"({cfg.param_count() / 1e9:.2f}B)")
+    print(f"  active params : {cfg.active_param_count():,}")
+    for s in SHAPES.values():
+        if s.kind == "train":
+            toks = s.global_batch * s.seq_len
+            print(f"  {s.name}: 6*N*D = "
+                  f"{6 * cfg.active_param_count() * toks / 1e15:.1f} PFLOP/step")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", help=".nnp archive to inspect")
+    ap.add_argument("--arch", help="inspect an assigned architecture config")
+    args = ap.parse_args(argv)
+    if args.arch:
+        inspect_arch(args.arch)
+        return 0
+    if not args.path:
+        ap.error("give an .nnp path or --arch")
+    model, params = load_nnp(args.path)
+    print(f"{args.path}: {len(model.networks)} network(s), "
+          f"{len(model.executors)} executor(s)")
+    for net in model.networks:
+        inspect_network(net, params)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

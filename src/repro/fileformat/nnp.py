@@ -1,0 +1,193 @@
+"""``.nnp`` archives: trace, save, load, execute, query (paper §3, §3.1).
+
+* ``trace_network`` — run model code on deferred Variables and serialize the
+  resulting graph into a :class:`NetworkDef` (the protobuf role).
+* ``save_nnp`` / ``load_nnp`` — zip of ``model.json`` + ``parameters.npz``
+  (the HDF5 role). Portable: a fresh process reloads and executes without
+  the model's Python code.
+* ``NnpExecutor`` — rebuilds a pure jax callable from the NetworkDef; the
+  round-trip test (identical outputs) is the paper's portability claim.
+* ``query_unsupported`` — the paper's "querying commands ... to check
+  whether it contains unsupported function", both for import and export.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import zipfile
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as nn
+from repro.core import functions as F
+from repro.core import graph as _graph
+from repro.core.parameter import Parameter
+from repro.core.variable import Variable
+from repro.fileformat.defs import (ExecutorDef, FunctionDef, ModelFile,
+                                   NetworkDef, VariableDef, model_from_dict,
+                                   to_dict)
+
+
+def op_registry() -> dict[str, Callable]:
+    """All F ops by type name (wrapper exposes its pure fn)."""
+    reg = {}
+    for name in dir(F):
+        fn = getattr(F, name)
+        if callable(fn) and hasattr(fn, "pure"):
+            reg[name] = fn.pure
+    return reg
+
+
+_JSONABLE = (int, float, str, bool, type(None))
+
+
+def _ser_arg(v: Any) -> Any:
+    if isinstance(v, _JSONABLE):
+        return v
+    if isinstance(v, (tuple, list)):
+        return [_ser_arg(x) for x in v]
+    if isinstance(v, (np.dtype,)):
+        return str(v)
+    if hasattr(v, "dtype") and np.ndim(v) == 0:
+        return float(v)
+    if v in (jnp.float32, jnp.float16, jnp.bfloat16, jnp.int32, jnp.int64):
+        return str(np.dtype(v))
+    return str(v)
+
+
+def trace_network(name: str, fn: Callable, example_inputs: dict[str, Any],
+                  ) -> tuple[NetworkDef, dict[str, np.ndarray]]:
+    """Build a NetworkDef by running ``fn`` on deferred Variables.
+
+    ``example_inputs``: name -> array. Parameters come from the global
+    registry (eager plane), captured with their registered names.
+    Returns (network, parameters).
+    """
+    in_vars = {k: Variable(data=jnp.asarray(v), need_grad=False, name=k)
+               for k, v in example_inputs.items()}
+    out = fn(**in_vars)
+    outputs = out if isinstance(out, (tuple, list)) else [out]
+    out_list = [o for o in outputs if isinstance(o, Variable)]
+    if not out_list:
+        raise ValueError("traced function returned no Variables")
+
+    # Collect the graph in topological order from all outputs.
+    nodes: list[_graph.FunctionNode] = []
+    seen = set()
+    for o in out_list:
+        for node in _graph._topo_nodes(o):
+            if node.uid not in seen:
+                seen.add(node.uid)
+                nodes.append(node)
+    nodes.sort(key=lambda n: n.uid)
+
+    names: dict[int, str] = {}
+    variables: list[VariableDef] = []
+    params: dict[str, np.ndarray] = {}
+
+    def name_of(v: Variable, kind_hint: str = "intermediate") -> str:
+        if id(v) in names:
+            return names[id(v)]
+        if isinstance(v, Parameter):
+            nm, kind = v.name, "parameter"
+            params[nm] = np.asarray(v.data)
+        elif v.name:
+            nm, kind = v.name, "input"
+        else:
+            nm, kind = f"h{len(names)}", kind_hint
+        names[id(v)] = nm
+        variables.append(VariableDef(
+            name=nm, shape=[int(s) for s in v.shape],
+            dtype=str(np.dtype(v.dtype)), kind=kind))
+        return nm
+
+    functions: list[FunctionDef] = []
+    for i, node in enumerate(nodes):
+        ins = [name_of(v) for v in node.inputs]
+        outs = [name_of(v) for v in node.outputs]
+        functions.append(FunctionDef(
+            name=f"{node.name}_{i}", type=node.name, inputs=ins,
+            outputs=outs,
+            args={k: _ser_arg(v) for k, v in node.kwargs.items()}))
+
+    out_names = [names[id(o)] for o in out_list]
+    for vd in variables:
+        if vd.name in out_names and vd.kind == "intermediate":
+            vd.kind = "output"
+    net = NetworkDef(name=name, variables=variables, functions=functions,
+                     inputs=list(example_inputs), outputs=out_names)
+    return net, params
+
+
+def save_nnp(path: str, model: ModelFile,
+             parameters: dict[str, np.ndarray]) -> None:
+    with zipfile.ZipFile(path, "w", zipfile.ZIP_DEFLATED) as z:
+        z.writestr("model.json", json.dumps(to_dict(model), indent=1))
+        buf = io.BytesIO()
+        np.savez(buf, **{k.replace("/", "|"): v
+                         for k, v in parameters.items()})
+        z.writestr("parameters.npz", buf.getvalue())
+
+
+def load_nnp(path: str) -> tuple[ModelFile, dict[str, np.ndarray]]:
+    with zipfile.ZipFile(path) as z:
+        model = model_from_dict(json.loads(z.read("model.json")))
+        with np.load(io.BytesIO(z.read("parameters.npz"))) as npz:
+            params = {k.replace("|", "/"): npz[k] for k in npz.files}
+    return model, params
+
+
+def query_unsupported(net: NetworkDef,
+                      registry: dict[str, Callable] | None = None
+                      ) -> list[str]:
+    reg = registry if registry is not None else op_registry()
+    return sorted({f.type for f in net.functions if f.type not in reg})
+
+
+class NnpExecutor:
+    """Rebuild a jax callable from a NetworkDef (paper's Executor message)."""
+
+    def __init__(self, net: NetworkDef, parameters: dict[str, np.ndarray],
+                 jit: bool = True):
+        missing = query_unsupported(net)
+        if missing:
+            raise ValueError(f"unsupported functions in network: {missing}")
+        self.net = net
+        self.reg = op_registry()
+        self.params = {k: jnp.asarray(v) for k, v in parameters.items()
+                       if any(vd.name == k and vd.kind == "parameter"
+                              for vd in net.variables)}
+        self._fn = jax.jit(self._run) if jit else self._run
+
+    def _run(self, inputs: dict[str, jax.Array],
+             params: dict[str, jax.Array]) -> list[jax.Array]:
+        env: dict[str, Any] = dict(params)
+        env.update(inputs)
+        for f in self.net.functions:
+            args = [env[i] for i in f.inputs]
+            kwargs = {k: (tuple(v) if isinstance(v, list) else v)
+                      for k, v in f.args.items()}
+            out = self.reg[f.type](*args, **kwargs)
+            outs = out if isinstance(out, tuple) else (out,)
+            for nm, val in zip(f.outputs, outs):
+                env[nm] = val
+        return [env[o] for o in self.net.outputs]
+
+    def __call__(self, **inputs) -> list[jax.Array]:
+        arr = {k: jnp.asarray(v) for k, v in inputs.items()}
+        return self._fn(arr, self.params)
+
+
+def export_model(name: str, fn: Callable, example_inputs: dict[str, Any],
+                 path: str, *, executor_name: str = "runtime") -> ModelFile:
+    """One-call export: trace + wrap in ModelFile + save."""
+    net, params = trace_network(name, fn, example_inputs)
+    model = ModelFile(networks=[net], executors=[
+        ExecutorDef(name=executor_name, network=name,
+                    inputs=net.inputs, outputs=net.outputs)])
+    save_nnp(path, model, params)
+    return model

@@ -1,0 +1,125 @@
+"""Mini-ONNX interchange (paper §3: "ONNX to NNP and vice versa").
+
+A faithful subset of the ONNX graph data model (opset-13-ish op names,
+node/initializer/input/output structure) as JSON — enough to round-trip our
+NetworkDefs and to *demonstrate* the compatibility machinery: op-name
+translation tables both ways, plus the unsupported-op query the paper calls
+out for conversion safety.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.fileformat.defs import FunctionDef, NetworkDef, VariableDef
+
+# repro op type -> ONNX op_type
+TO_ONNX = {
+    "add": "Add", "sub": "Sub", "mul": "Mul", "div": "Div", "neg": "Neg",
+    "pow": "Pow", "exp": "Exp", "log": "Log", "sqrt": "Sqrt", "abs": "Abs",
+    "tanh": "Tanh", "sigmoid": "Sigmoid", "relu": "Relu",
+    "leaky_relu": "LeakyRelu", "softplus": "Softplus", "silu": "Silu",
+    "gelu": "Gelu", "softmax": "Softmax", "log_softmax": "LogSoftmax",
+    "matmul": "MatMul", "batch_matmul": "MatMul", "reshape": "Reshape",
+    "transpose": "Transpose", "concatenate": "Concat", "pad": "Pad",
+    "squeeze": "Squeeze", "expand_dims": "Unsqueeze",
+    "sum": "ReduceSum", "mean": "ReduceMean", "max": "ReduceMax",
+    "min": "ReduceMin", "convolution": "Conv", "max_pooling": "MaxPool",
+    "average_pooling": "AveragePool",
+    "global_average_pooling": "GlobalAveragePool",
+    "embed": "Gather", "gather": "Gather", "one_hot": "OneHot",
+    "where": "Where", "cast": "Cast",
+    "layer_normalization": "LayerNormalization",
+    "batch_normalization": "BatchNormalization",
+    "softmax_cross_entropy": "SoftmaxCrossEntropyLoss",
+    "argmax": "ArgMax", "cumsum": "CumSum", "top_k": "TopK",
+    "clip_by_value": "Clip", "stop_gradient": "Identity",
+}
+FROM_ONNX = {v: k for k, v in TO_ONNX.items()}
+# where several repro ops share one ONNX type, pick the canonical inverse
+FROM_ONNX["MatMul"] = "matmul"
+FROM_ONNX["Identity"] = "stop_gradient"
+
+
+def unsupported_for_export(net: NetworkDef) -> list[str]:
+    return sorted({f.type for f in net.functions if f.type not in TO_ONNX})
+
+
+def unsupported_for_import(onnx_graph: dict) -> list[str]:
+    return sorted({n["op_type"] for n in onnx_graph["node"]
+                   if n["op_type"] not in FROM_ONNX})
+
+
+def export_onnx(net: NetworkDef, params: dict[str, np.ndarray],
+                strict: bool = True) -> dict[str, Any]:
+    """NetworkDef -> ONNX-shaped JSON dict (ModelProto-lite)."""
+    missing = unsupported_for_export(net)
+    if missing and strict:
+        raise ValueError(
+            f"functions not supported by the ONNX exporter: {missing} "
+            "(run unsupported_for_export() first — paper §3)")
+    nodes = []
+    for f in net.functions:
+        if f.type not in TO_ONNX:
+            continue
+        nodes.append({
+            "name": f.name, "op_type": TO_ONNX[f.type],
+            "input": list(f.inputs), "output": list(f.outputs),
+            "attribute": dict(f.args),
+        })
+    initializer = [{
+        "name": k, "dims": list(v.shape), "data_type": str(v.dtype),
+        "raw_data_b64_len": int(v.nbytes),
+    } for k, v in params.items()]
+    vinfo = {v.name: v for v in net.variables}
+    graph = {
+        "name": net.name,
+        "node": nodes,
+        "initializer": initializer,
+        "input": [{"name": n, "shape": vinfo[n].shape,
+                   "dtype": vinfo[n].dtype} for n in net.inputs],
+        "output": [{"name": n, "shape": vinfo[n].shape,
+                    "dtype": vinfo[n].dtype} for n in net.outputs],
+    }
+    return {"ir_version": 8, "opset_import": [{"version": 13}],
+            "producer_name": "repro-nnl", "graph": graph}
+
+
+def import_onnx(model: dict[str, Any]) -> NetworkDef:
+    """ONNX-shaped JSON dict -> NetworkDef (op names translated back)."""
+    g = model["graph"]
+    missing = unsupported_for_import(g)
+    if missing:
+        raise ValueError(f"ONNX ops unsupported by importer: {missing}")
+    functions = [FunctionDef(
+        name=n["name"], type=FROM_ONNX[n["op_type"]],
+        inputs=list(n["input"]), outputs=list(n["output"]),
+        args=dict(n.get("attribute", {}))) for n in g["node"]]
+    variables = []
+    seen = set()
+    for io_list, kind in ((g["input"], "input"), (g["output"], "output")):
+        for x in io_list:
+            if x["name"] not in seen:
+                seen.add(x["name"])
+                variables.append(VariableDef(
+                    name=x["name"], shape=list(x["shape"]),
+                    dtype=x["dtype"], kind=kind))
+    for init in g["initializer"]:
+        if init["name"] not in seen:
+            seen.add(init["name"])
+            variables.append(VariableDef(
+                name=init["name"], shape=list(init["dims"]),
+                dtype=init["data_type"], kind="parameter"))
+    for n in g["node"]:
+        for out in n["output"]:
+            if out not in seen:
+                seen.add(out)
+                variables.append(VariableDef(
+                    name=out, shape=[], dtype="float32",
+                    kind="intermediate"))
+    return NetworkDef(name=g["name"], variables=variables,
+                      functions=functions,
+                      inputs=[x["name"] for x in g["input"]],
+                      outputs=[x["name"] for x in g["output"]])

@@ -1,0 +1,66 @@
+"""Kernel dispatch layer.
+
+Models call these; the active :class:`repro.core.context.Context` decides
+whether the Pallas TPU kernel, its interpret-mode build (CPU validation), or
+the plain-XLA reference executes. The dry-run container always takes the XLA
+path (TPU Pallas cannot lower on CPU backends); real-TPU deployments flip
+``Context.kernels`` to ``"pallas"``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import context as _ctx
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.ssd import ref as ssd_ref
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None,
+              unroll: int | bool = 1, block: int = 1024) -> jax.Array:
+    mode = _ctx.get_default_context().kernels
+    if mode == "xla":
+        return fa_ref.mha_reference(q, k, v, causal=causal, window=window,
+                                    scale=scale)
+    if mode == "xla_chunked":
+        # flash algorithm in plain XLA (online softmax over KV blocks).
+        # Cost probes fully unroll the block scans (while-body undercount);
+        # they use a larger block so the unrolled HLO stays compilable —
+        # total FLOPs/bytes are block-size invariant.
+        if unroll is True:
+            block = max(block, 4096)
+        return fa_ref.mha_chunked(q, k, v, causal=causal, window=window,
+                                  scale=scale, block_q=block, block_k=block,
+                                  unroll=unroll)
+    from repro.kernels.flash_attention import flash_attention as fa
+    return fa.flash_attention(q, k, v, causal=causal, window=window,
+                              scale=scale,
+                              interpret=(mode == "pallas_interpret"))
+
+
+def attention_decode(q, k_cache, v_cache, lengths, *, scale=None) -> jax.Array:
+    mode = _ctx.get_default_context().kernels
+    if mode in ("xla", "xla_chunked"):
+        return fa_ref.decode_reference(q, k_cache, v_cache, lengths,
+                                       scale=scale)
+    from repro.kernels.flash_attention import flash_attention as fa
+    return fa.flash_decode(q, k_cache, v_cache, lengths, scale=scale,
+                           interpret=(mode == "pallas_interpret"))
+
+
+def ssd(x, dt, A, Bm, Cm, D=None, *, chunk: int = 64, h0=None,
+        return_state: bool = False, unroll: int | bool = 1):
+    mode = _ctx.get_default_context().kernels
+    if mode in ("xla", "xla_chunked"):
+        return ssd_ref.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk, h0=h0,
+                                   return_state=return_state, unroll=unroll)
+    from repro.kernels.ssd import ssd_kernel
+    return ssd_kernel.ssd(x, dt, A, Bm, Cm, D, chunk=chunk, h0=h0,
+                          return_state=return_state,
+                          interpret=(mode == "pallas_interpret"))
+
+
+def ssd_decode_step(h, x_t, dt_t, A, B_t, C_t, D=None):
+    # Single-token state update is elementwise-dominated; XLA fuses it well.
+    return ssd_ref.ssd_decode_step(h, x_t, dt_t, A, B_t, C_t, D)

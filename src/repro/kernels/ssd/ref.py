@@ -1,0 +1,158 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space duality) scan.
+
+``ssd_naive``   — token-by-token linear recurrence (the ground truth).
+``ssd_chunked`` — the SSD block-decomposition (intra-chunk quadratic +
+inter-chunk state recurrence) in plain jnp; this is both the oracle for the
+Pallas kernel's chunking logic and the XLA fallback the full models lower on
+the dry-run.
+
+Shapes (following the Mamba-2 paper):
+  x  (B, S, H, P)   per-head inputs        H heads, P head_dim
+  dt (B, S, H)      softplus-positive step sizes
+  A  (H,)           negative decay rates (scalar per head, SSD restriction)
+  Bm (B, S, G, N)   input->state projection   G state groups, N state dim
+  Cm (B, S, G, N)   state->output projection
+  D  (H,)           skip connection
+Returns y (B, S, H, P); final state (B, H, P, N) if requested.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _expand_groups(m: jax.Array, H: int) -> jax.Array:
+    """(B, S, G, N) -> (B, S, H, N) by repeating each group H//G times."""
+    B, S, G, N = m.shape
+    rep = H // G
+    return jnp.repeat(m, rep, axis=2) if rep > 1 else m
+
+
+def ssd_naive(x, dt, A, Bm, Cm, D=None, *, h0=None, return_state=False):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = _expand_groups(Bm.astype(jnp.float32), H)
+    Cf = _expand_groups(Cm.astype(jnp.float32), H)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))          # (B,S,H)
+
+    def step(h, inp):
+        xt, dat, dtt, bt, ct = inp
+        # h: (B,H,P,N)
+        h = h * dat[..., None, None] \
+            + (dtt[..., None] * xt)[..., None] * bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0
+    inps = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dA, 1, 0),
+            jnp.moveaxis(dtf, 1, 0), jnp.moveaxis(Bf, 1, 0),
+            jnp.moveaxis(Cf, 1, 0))
+    hT, ys = lax.scan(step, h0, inps)
+    y = jnp.moveaxis(ys, 0, 1)                          # (B,S,H,P)
+    if D is not None:
+        y = y + xf * D.astype(jnp.float32)[:, None]
+    y = y.astype(x.dtype)
+    return (y, hT) if return_state else y
+
+
+def _segsum(logd: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} logd[..., k].
+
+    Returns -inf above the diagonal (strictly causal decay matrix in log
+    space). logd: (..., Q) -> (..., Q, Q).
+    """
+    Q = logd.shape[-1]
+    csum = jnp.cumsum(logd, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]      # sum_{j<k<=i}
+    i = jnp.arange(Q)[:, None]
+    j = jnp.arange(Q)[None, :]
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D=None, *, chunk: int = 64, h0=None,
+                return_state=False, unroll: int | bool = 1):
+    """Mamba-2 §6 block decomposition. S must be a multiple of ``chunk``."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    if S % chunk:
+        raise ValueError(f"S={S} not a multiple of chunk={chunk}")
+    nc, Q = S // chunk, chunk
+
+    # matmul INPUTS stay in the storage dtype (bf16 on the MXU), accumulation
+    # in f32 via preferred_element_type — mirrors the Pallas kernel's numerics
+    # and halves the big-tensor HBM traffic vs an all-f32 reference.
+    mm = x.dtype
+    xf = x.reshape(B, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, Q, H)
+    Bf = _expand_groups(Bm, H).reshape(B, nc, Q, H, N)
+    Cf = _expand_groups(Cm, H).reshape(B, nc, Q, H, N)
+    logd = dtf * A.astype(jnp.float32)                  # (B,nc,Q,H) log decay
+    xbar = (xf.astype(jnp.float32) * dtf[..., None]).astype(mm)
+
+    # ---- intra-chunk (quadratic, "attention-like") ----
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(logd, -1, -2)))      # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cf, Bf,
+                        preferred_element_type=jnp.float32)  # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp",
+                         (scores * Lmat).astype(mm), xbar,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk summary states ----
+    csum = jnp.cumsum(logd, axis=2)                          # (B,nc,Q,H)
+    decay_to_end = jnp.exp(csum[:, :, -1:, :] - csum)        # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcqhn,bcqhp->bchnp",
+        (Bf.astype(jnp.float32) * decay_to_end[..., None]).astype(mm), xbar,
+        preferred_element_type=jnp.float32)                  # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    chunk_decay = jnp.exp(csum[:, :, -1, :])                 # (B,nc,H)
+
+    def scan_fn(h, inp):
+        s_c, d_c = inp                                       # (B,H,N,P),(B,H)
+        h_new = h * d_c[..., None, None] + s_c
+        return h_new, h                                      # emit state *before* chunk
+
+    h_init = jnp.zeros((B, H, N, P), jnp.float32) if h0 is None \
+        else jnp.moveaxis(h0, 2, 3)                          # accept (B,H,P,N)
+    hT, h_prev = lax.scan(
+        scan_fn, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=unroll)
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(csum)                         # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcqhn,bchnp->bcqhp",
+        (Cf.astype(jnp.float32) * decay_from_start[..., None]).astype(mm),
+        h_prev.astype(mm), preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[:, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, jnp.moveaxis(hT, 2, 3)                     # (B,H,P,N)
+    return y
+
+
+def ssd_decode_step(h, x_t, dt_t, A, B_t, C_t, D=None):
+    """One-token state update. h (B,H,P,N); x_t (B,H,P); dt_t (B,H);
+    B_t/C_t (B,G,N). Returns (y_t (B,H,P), h')."""
+    B_, H, P, N = h.shape
+    Bf = _expand_groups(B_t[:, None].astype(jnp.float32), H)[:, 0]
+    Cf = _expand_groups(C_t[:, None].astype(jnp.float32), H)[:, 0]
+    dtf = dt_t.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))                # (B,H)
+    xf = x_t.astype(jnp.float32)
+    h_new = h * dA[..., None, None] \
+        + (dtf[..., None] * xf)[..., None] * Bf[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Cf)
+    if D is not None:
+        y = y + xf * D.astype(jnp.float32)[:, None]
+    return y.astype(x_t.dtype), h_new

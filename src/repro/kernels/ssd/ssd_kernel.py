@@ -1,0 +1,140 @@
+"""Mamba-2 SSD scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD block decomposition: one (batch, head) per outer
+grid cell, chunks streamed along the innermost (sequential) grid axis with
+the running (N, P) state held in VMEM scratch — the recurrence carries across
+grid steps instead of across GPU thread blocks. Per chunk the kernel does the
+three MXU matmuls of the duality form (C·Bᵀ masked by the decay matrix,
+state read-out, state update) in fp32.
+
+Chunk tiles: Q x N and Q x P with Q, N, P multiples of the 128-lane /
+8-sublane layout where the config allows (Q=128+ recommended).
+
+Validated against ``ref.ssd_chunked``/``ref.ssd_naive`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
+                h_scr, *, chunk: int, has_d: bool):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)       # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)        # (Q,)
+    A = a_ref[0]                                       # scalar (f32, SMEM)
+    Bm = b_ref[0, 0, :, 0, :].astype(jnp.float32)      # (Q, N)
+    Cm = c_ref[0, 0, :, 0, :].astype(jnp.float32)      # (Q, N)
+
+    logd = dt * A                                      # (Q,)
+    csum = jnp.cumsum(logd)                            # (Q,)
+    xbar = x * dt[:, None]                             # (Q, P)
+
+    # intra-chunk: masked (C Bᵀ) with pairwise decay
+    i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ldiff = csum[:, None] - csum[None, :]              # log decay i<-j
+    L = jnp.where(i >= j, jnp.exp(ldiff), 0.0)         # (Q, Q)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * L, xbar, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk: read out the carried state
+    decay_from_start = jnp.exp(csum)[:, None]          # (Q, 1)
+    h_prev = h_scr[...]                                # (N, P)
+    y += jax.lax.dot_general(Cm * decay_from_start, h_prev,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    if has_d:
+        y += x * d_ref[0]
+
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: h = exp(sum logd) h + (B * decay_to_end)ᵀ xbar
+    total = csum[chunk - 1]
+    decay_to_end = jnp.exp(total - csum)[:, None]      # (Q, 1)
+    h_new = jnp.exp(total) * h_prev \
+        + jax.lax.dot_general(Bm * decay_to_end, xbar,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    h_scr[...] = h_new
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        hout_ref[0, 0, :, :] = h_new
+
+
+def ssd(x, dt, A, Bm, Cm, D=None, *, chunk: int = 64, h0=None,
+        return_state: bool = False, interpret: bool = False):
+    """Pallas SSD. Shapes as in :mod:`repro.kernels.ssd.ref`.
+
+    ``h0`` is not supported in-kernel (prefill starts cold); callers that
+    split sequences across calls combine states at the ref layer.
+    """
+    if h0 is not None:
+        raise NotImplementedError("kernel path starts from h=0; "
+                                  "use the ref for stateful continuation")
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    if S % chunk:
+        raise ValueError(f"S={S} % chunk={chunk} != 0")
+    nc = S // chunk
+    group = H // G
+
+    grid = (B, H, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, has_d=D is not None)
+    d_arr = (D if D is not None else jnp.zeros((H,))).astype(jnp.float32)
+
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, P),
+                         lambda b, h, ci: (b, ci, 0, h, 0)),
+            pl.BlockSpec((1, 1, chunk, 1),
+                         lambda b, h, ci: (b, ci, 0, h)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, chunk, 1, N),
+                         lambda b, h, ci, g=group: (b, ci, 0, h // g, 0)),
+            pl.BlockSpec((1, 1, chunk, 1, N),
+                         lambda b, h, ci, g=group: (b, ci, 0, h // g, 0)),
+            pl.BlockSpec((1,), lambda b, h, ci: (h,),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, P),
+                         lambda b, h, ci: (b, ci, 0, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, chunk, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x.reshape(B, nc, chunk, H, P),
+      dt.reshape(B, nc, chunk, H),
+      A.astype(jnp.float32),
+      Bm.reshape(B, nc, chunk, G, N),
+      Cm.reshape(B, nc, chunk, G, N),
+      d_arr)
+
+    y = y.reshape(B, S, H, P)
+    if return_state:
+        return y, jnp.moveaxis(hT, 2, 3)  # (B, H, P, N)
+    return y

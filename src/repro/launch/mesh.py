@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips (TPU v5e pod), axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — 'pod' is the
+cross-pod (DCN-connected) axis; it carries either outer data parallelism
+(default) or pipeline stages (PP mode).
+
+Functions, not module constants — importing this module never touches jax
+device state (smoke tests must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            " before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Small helper meshes for tests/benchmarks (e.g. (8,) 'data')."""
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

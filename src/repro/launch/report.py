@@ -1,0 +1,96 @@
+"""Render EXPERIMENTS.md tables from dry-run result JSONs."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def load_results(dir_: pathlib.Path, mesh: str) -> list[dict]:
+    out = []
+    for p in sorted(dir_.glob(f"*__{mesh}.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def fmt_bytes(n) -> str:
+    if n is None:
+        return "-"
+    return f"{n / 2**30:.1f}"
+
+
+def roofline_table(results: list[dict]) -> str:
+    head = ("| arch | shape | kind | t_comp (s) | t_mem (s) | t_coll (s) | "
+            "bound | bound t (s) | roofline frac | useful | MFU@bound | "
+            "temp GiB |\n"
+            "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in results:
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skip | - | - | - | "
+                        f"— {r['reason'][:60]}… | - | - | - | - | - |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - | "
+                        f"{r.get('error', '')[:60]} | - | - | - | - | - |")
+            continue
+        t = r["roofline"]
+        temp = r["memory_analysis"].get("temp_size_in_bytes")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {t['t_compute_s']:.4f} | {t['t_memory_s']:.4f} "
+            f"| {t['t_collective_s']:.4f} | {t['bottleneck']} "
+            f"| {t['step_time_lower_bound_s']:.4f} "
+            f"| {t['roofline_fraction']:.3f} "
+            f"| {t.get('useful_compute_ratio', 0):.2f} "
+            f"| {t.get('mfu_at_bound', 0):.3f} "
+            f"| {fmt_bytes(temp)} |")
+    return head + "\n".join(rows) + "\n"
+
+
+def dryrun_table(results: list[dict]) -> str:
+    head = ("| arch | shape | mesh | status | compile (s) | args GiB/chip | "
+            "temp GiB/chip | AR/AG/RS/A2A/CP count | coll GiB/chip |\n"
+            "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in results:
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skipped | - | - | - | - | - |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR {r.get('error', '')[:50]} | - | - | - | - | - |")
+            continue
+        m = r["memory_analysis"]
+        c = r["collectives"]["by_kind_count"]
+        t = r["roofline"]
+        counts = "/".join(str(int(round(c.get(k, 0)))) for k in
+                          ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compile_s']} | {fmt_bytes(m.get('argument_size_in_bytes'))} "
+            f"| {fmt_bytes(m.get('temp_size_in_bytes'))} | {counts} "
+            f"| {t['collective_operand_bytes'] / 2**30:.2f} |")
+    return head + "\n".join(rows) + "\n"
+
+
+def main() -> int:
+    base = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
+        "results" / "dryrun"
+    single = load_results(base, "16x16")
+    multi = load_results(base, "2x16x16")
+    print("## Single-pod (16x16, 256 chips) roofline\n")
+    print(roofline_table(single))
+    print("\n## Dry-run detail (single-pod)\n")
+    print(dryrun_table(single))
+    print("\n## Multi-pod (2x16x16, 512 chips) dry-run\n")
+    print(dryrun_table(multi))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,235 @@
+"""Rule tables mapping logical axes / parameter paths to the mesh.
+
+This file IS the parallelism policy: DP over (pod, data), TP over model
+(Megatron column->row), EP over model for MoE experts, sequence sharding for
+long-context cells, ZeRO-1 sharding of optimizer state over data. Hillclimb
+experiments swap these tables (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingEnv, spec_for
+
+# parameter-path regex -> logical dim names (trailing dims; leading stacked
+# layer axes are auto-padded with "layers")
+PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"tok_emb/W$", ("vocab", "embed")),
+    (r"lm_head/kernel$", ("embed", "vocab")),
+    (r"dec_pos/W$", ("position", "embed")),
+    (r"(_q|_k|_v)/kernel$", ("embed", "heads_merged")),
+    (r"(_q|_k|_v)/bias$", ("heads_merged",)),
+    (r"cross_(k|v)/kernel$", ("embed", "heads_merged")),
+    (r"_o/kernel$", ("heads_merged", "embed")),
+    (r"mlp_(gate|up)/kernel$", ("embed", "mlp")),
+    (r"mlp_up/bias$", ("mlp",)),
+    (r"mlp_down/kernel$", ("mlp", "embed")),
+    (r"_router/kernel$", (None, None)),
+    (r"_wi_(gate|up)$", ("expert", "embed", None)),
+    (r"_wo$", ("expert", None, "embed")),
+    (r"mamba_in/kernel$", ("embed", "ssm_fused")),
+    (r"mamba_(z|x)/kernel$", ("embed", "ssm_inner")),
+    (r"mamba_(bc|dtp)/kernel$", (None, None)),
+    (r"mamba_convx/W$", ("ssm_inner", None, None)),
+    (r"mamba_convbc/W$", (None, None, None)),
+    (r"mamba_conv/W$", ("conv_ch", None, None)),
+    (r"mamba_conv/b$", (None,)),
+    (r"mamba_out/kernel$", ("ssm_inner", "embed")),
+    (r"mamba_norm/gamma$", ("ssm_inner",)),
+    # everything else (norms, A_log, D, dt_bias, small biases): replicate
+]
+
+
+RULE_PRESETS = {
+    # pure data parallelism: batch over every axis, params replicated
+    # (+ ZeRO-1 shards optimizer state). Right answer for <1B models where
+    # TP's per-layer collectives dominate.
+    "dp_only": {
+        "heads": None, "heads_merged": None, "kv_heads": None, "mlp": None,
+        "vocab": None, "expert": None, "ssm_inner": None, "ssm_fused": None,
+        "conv_ch": None, "position": None,
+    },
+}
+
+
+def make_axis_rules(mesh: Mesh, cfg: ModelConfig,
+                    shape: ShapeConfig) -> dict[str, Any]:
+    axes = set(mesh.axis_names)
+    dp: Any = ("pod", "data") if "pod" in axes else "data"
+
+    # decode KV cache layout: prefer head sharding when divisible (no
+    # softmax-axis collectives); fall back to sequence sharding (flash-decode
+    # style) so 0.5M-token caches still fit.
+    model_size = mesh.shape["model"]
+    kv_heads_shardable = cfg.n_kv_heads % model_size == 0
+    rules: dict[str, Any] = {
+        "batch": dp,
+        "batch_kv": ("data", "model"),   # merged (batch, kv_head) attention
+        "attn_seq": "model",             # seq-sharded attention (degraded heads)
+        "expert_group": dp,
+        "seq": None,
+        "embed": None,
+        "frames": None,
+        "position": "model",
+        "heads": "model",
+        "heads_merged": "model",
+        "kv_heads": "model" if kv_heads_shardable else None,
+        "kv_seq": None if kv_heads_shardable else "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "ssm_inner": "model",
+        "ssm_fused": "model",
+        "conv_ch": "model",
+        "state": None,
+        "layers": None,
+    }
+    if shape.kind == "decode" and shape.global_batch < _axis_len(mesh, dp):
+        # tiny-batch decode (long_500k): batch can't use all of DP; shard the
+        # sequence/cache dim over data as well where possible.
+        rules["kv_seq"] = ("data",) if kv_heads_shardable else ("data", "model")
+        rules["batch"] = None
+    return rules
+
+
+def _axis_len(mesh: Mesh, val) -> int:
+    if val is None:
+        return 1
+    if isinstance(val, str):
+        return mesh.shape[val]
+    return int(np.prod([mesh.shape[a] for a in val]))
+
+
+def make_env(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig,
+             *, axis_overrides: dict[str, Any] | None = None,
+             rules_preset: str | None = None,
+             param_overrides: list[tuple[str, tuple[str | None, ...]]] | None = None
+             ) -> ShardingEnv:
+    rules = make_axis_rules(mesh, cfg, shape)
+    if rules_preset:
+        rules.update(RULE_PRESETS[rules_preset])
+        if rules_preset == "dp_only":
+            # greedy: largest set of mesh axes whose product divides the
+            # global batch (multi-pod: B=256 can't use all 512 chips for DP)
+            sel: list[str] = []
+            prod = 1
+            for a in sorted(mesh.axis_names, key=lambda a: -mesh.shape[a]):
+                if shape.global_batch % (prod * mesh.shape[a]) == 0:
+                    sel.append(a)
+                    prod *= mesh.shape[a]
+            dp = tuple(sel) if sel else None
+            rules["batch"] = dp
+            rules["expert_group"] = dp
+    if axis_overrides:
+        rules.update(axis_overrides)
+    param_rules = list(param_overrides or []) + PARAM_RULES
+    return ShardingEnv(mesh=mesh, axis_rules=rules, param_rules=param_rules)
+
+
+# --------------------------------------------------------------------------- #
+# state shardings
+# --------------------------------------------------------------------------- #
+
+def train_state_shardings(state_shapes, env: ShardingEnv):
+    """Shardings for the whole TrainState: params by rule table; optimizer
+    state (masters + slots) additionally ZeRO-1-sharded over data."""
+    from repro.distributed.sharding import param_spec, sharding_env
+    from repro.distributed.train_step import TrainState
+    mesh = env.mesh
+    assert mesh is not None
+    with sharding_env(env):
+        p_sh = {k: NamedSharding(mesh, param_spec(k, tuple(v.shape)))
+                for k, v in state_shapes.params.items()}
+
+        def opt_leaf(param_path: str, sds) -> NamedSharding:
+            pshape = tuple(state_shapes.params[param_path].shape)
+            if tuple(sds.shape) == pshape:
+                base = param_spec(param_path, pshape)
+            else:  # factored slots (adafactor): start from replicated
+                base = P()
+            return NamedSharding(
+                mesh, zero1_spec(base, tuple(sds.shape), mesh))
+
+        opt = state_shapes.opt_state
+        opt_sh = {
+            "step": NamedSharding(mesh, P()),
+            "master": {k: opt_leaf(k, v) for k, v in opt["master"].items()},
+            "slots": {k: {s: opt_leaf(k, v) for s, v in d.items()}
+                      for k, d in opt["slots"].items()},
+        }
+        scaler_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                 state_shapes.scaler_state)
+        return TrainState(params=p_sh, opt_state=opt_sh,
+                          scaler_state=scaler_sh,
+                          step=NamedSharding(mesh, P()))
+
+
+def zero1_spec(spec: P, shape: tuple[int, ...], mesh: Mesh,
+               axis: Any = "data") -> P:
+    """ZeRO-1: extend a param spec by sharding its largest unsharded dim over
+    the data axis (optimizer state + master weights only)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    axis_size = _axis_len(mesh, axis)
+    best, best_dim = -1, -1
+    for i, (p, s) in enumerate(zip(parts, shape)):
+        if p is None and s % axis_size == 0 and s > best:
+            best, best_dim = s, i
+    if best_dim >= 0:
+        parts[best_dim] = axis
+    return P(*parts)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                env: ShardingEnv) -> dict[str, P]:
+    """PartitionSpecs for the input batch dict (mirrors input_specs)."""
+    from repro.distributed.sharding import sharding_env
+    with sharding_env(env):
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": spec_for(("batch", "seq")),
+                     "labels": spec_for(("batch", "seq"))}
+            if cfg.mrope:
+                specs["positions"] = spec_for(("batch", "seq", None))
+            if cfg.family == "audio":
+                specs["frames"] = spec_for(("batch", "frames", "embed"))
+            return specs
+        specs = {"tokens": spec_for(("batch", None)),
+                 "pos": P()}
+        if cfg.mrope:
+            specs["positions"] = spec_for(("batch", None, None))
+        return specs
+
+
+def decode_state_specs_sharding(state_specs: Any, env: ShardingEnv) -> Any:
+    """Shardings for the decode state pytree by dim semantics.
+
+    KV caches are (layers, batch, seq, kv_heads, head_dim); SSM state is
+    (layers, batch, H, P, N); conv buffers (layers, batch, k, ch).
+    """
+    from repro.distributed.sharding import sharding_env, tree_shardings
+    mesh = env.mesh
+    assert mesh is not None
+
+    def leaf(path: str, sds) -> NamedSharding:
+        shape = tuple(sds.shape)
+        last = path.split("/")[-1]
+        if last in ("k", "v"):
+            names = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        elif last == "h":
+            names = ("layers", "batch", "heads", None, "state")
+        elif last == "conv":
+            names = ("layers", "batch", None, "conv_ch")
+        else:
+            names = (None,) * len(shape)
+        names = tuple(names[:len(shape)])
+        names = names + (None,) * (len(shape) - len(names))
+        return NamedSharding(mesh, spec_for(names, shape))
+
+    with sharding_env(env):
+        return tree_shardings(state_specs, leaf)

@@ -1,0 +1,201 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 50 --batch 8 --seq 128
+
+Wires every subsystem: config -> model -> data pipeline -> solver + loss
+scaling -> (optional) mesh + sharding rules -> compiled train step ->
+checkpoint manager (atomic, async, auto-resume) -> straggler monitor.
+``--devices N`` re-execs with N host devices and runs data-parallel via the
+same rule tables as the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _maybe_reexec_with_devices(argv) -> None:
+    try:
+        idx = argv.index("--devices")
+        n = int(argv[idx + 1])
+    except ValueError:
+        return
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if flag not in os.environ.get("XLA_FLAGS", ""):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
+        os.execve(sys.executable,
+                  [sys.executable, "-m", "repro.launch.train"] + argv, env)
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    _maybe_reexec_with_devices(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    import repro.core as nn
+    from repro.configs import SHAPES, get_arch
+    from repro.configs.base import ShapeConfig
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.data.pipeline import SyntheticLMPipeline, as_global_array
+    from repro.distributed.resilience import StragglerMonitor
+    from repro.distributed.sharding import param_spec, sharding_env
+    from repro.distributed.train_step import (init_train_state,
+                                              make_train_step)
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.shardings import batch_specs, make_env
+    from repro.models.registry import get_model
+    from repro.monitor import Monitor, MonitorCSV, MonitorSeries
+    from repro.precision.loss_scale import dynamic_scaler, static_scaler
+    from repro.solvers import make_solver
+    from repro.solvers.schedules import SCHEDULES, cosine
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", default="constant",
+                    choices=sorted(SCHEDULES))
+    ap.add_argument("--warmup", type=int, default=0)
+    ap.add_argument("--monitor-dir", default="")
+    ap.add_argument("--solver", default="adam")
+    ap.add_argument("--type-config", default="float",
+                    choices=["float", "bf16", "half", "pure_bf16"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="host devices for data-parallel demo")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=17)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    cfg = dataclasses.replace(cfg, remat="none")
+    api = get_model(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    ctx = nn.get_extension_context("cpu", type_config=args.type_config)
+    nn.set_default_context(ctx)
+    scaler = dynamic_scaler() if ctx.policy.needs_loss_scaling \
+        else static_scaler(1.0)
+    solver = make_solver(args.solver, **(
+        {"alpha": args.lr} if args.solver in ("adam", "adamw")
+        else {"lr": args.lr}))
+
+    n_dev = len(jax.devices())
+    mesh = make_host_mesh((n_dev, 1), ("data", "model")) if n_dev > 1 else None
+    env = make_env(mesh, cfg, shape) if mesh is not None else None
+
+    pipe = SyntheticLMPipeline(cfg, shape, seed=args.seed)
+
+    def loss(p, batch):
+        return nn.apply(lambda **kw: api.loss_fn(**kw), p, **batch)
+
+    step_fn = make_train_step(loss, solver, scaler,
+                              microbatches=args.microbatches)
+
+    def build_state():
+        sample = pipe.batch_at(0)
+        params = nn.init(lambda **kw: api.loss_fn(**kw), jax.random.key(0),
+                         **{k: jnp.asarray(v) for k, v in sample.items()})
+        return init_train_state(params, solver, scaler)
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    if env is not None:
+        with sharding_env(env):
+            state = build_state()
+            bspecs = batch_specs(cfg, shape, env)
+            batch_sh = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+            jstep = jax.jit(step_fn, donate_argnums=(0,))
+    else:
+        state = build_state()
+        batch_sh = None
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
+
+    start = 0
+    if ckpt is not None:
+        restored = ckpt.restore_latest(jax.tree.map(np.asarray, state))
+        if restored is not None:
+            start, host_state = restored
+            state = jax.tree.map(jnp.asarray, host_state)
+            meta = {}
+            pipe.restore({"step": start, "seed": args.seed})
+            print(f"[resume] restored step {start}", flush=True)
+
+    monitor = StragglerMonitor()
+    if args.schedule == "constant":
+        sched = SCHEDULES["constant"](args.lr)
+    elif args.schedule == "cosine":
+        sched = cosine(args.lr, args.steps, args.warmup)
+    else:
+        sched = SCHEDULES[args.schedule](args.lr, args.warmup or 1000)
+    mon_series = mon_csv = None
+    if args.monitor_dir:
+        mon = Monitor(args.monitor_dir)
+        mon_series = MonitorSeries("loss", mon, interval=args.log_every)
+        mon_csv = MonitorCSV(mon.path / "training.csv",
+                             ["loss", "lr", "grad_norm", "step_time_s"])
+    losses = []
+    t_total = time.time()
+    for step in range(start, args.steps):
+        t0 = time.time()
+        solver.set_learning_rate(float(sched(step)))
+        batch = pipe.batch_at(step)
+        if env is not None:
+            batch = as_global_array(batch, batch_sh)
+        else:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if env is not None:
+            with sharding_env(env):
+                state, metrics = jstep(state, batch)
+        else:
+            state, metrics = jstep(state, batch)
+        loss_v = float(metrics["loss"])
+        losses.append(loss_v)
+        dt = time.time() - t0
+        if mon_series is not None:
+            mon_series.add(step, loss_v)
+            mon_csv.add(step, loss=loss_v, lr=float(sched(step)),
+                        grad_norm=float(metrics["grad_norm"]),
+                        step_time_s=dt)
+        verdict = monitor.observe(dt)
+        if verdict.is_straggler:
+            print(f"[straggler] step {step}: z={verdict.z_score:.1f} "
+                  f"ewma={verdict.ewma_s:.3f}s", flush=True)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {loss_v:8.4f}  "
+                  f"scale {float(metrics['loss_scale']):g}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  {dt:.3f}s",
+                  flush=True)
+        if ckpt is not None and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async(step + 1, state,
+                            extra={"pipe": pipe.snapshot()})
+    if ckpt is not None:
+        ckpt.wait()
+    span = time.time() - t_total
+    print(f"done: {args.steps - start} steps in {span:.1f}s  "
+          f"first-loss {losses[0]:.4f}  last-loss {losses[-1]:.4f}",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

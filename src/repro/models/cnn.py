@@ -1,0 +1,95 @@
+"""CNNs for paper-parity benchmarks: LeNet (paper Listing 4) and ResNets
+(paper §4 Tables 1–2).
+
+These run on the *eager Variable plane* as well as the functional one — the
+LeNet below is a line-for-line port of the paper's Listing 4.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+import repro.core as nn
+from repro.core import functions as F
+from repro.core import parametric as PF
+
+
+def lenet(x):
+    """Paper Listing 4, verbatim structure."""
+    h = PF.convolution(x, 16, (5, 5), name="conv1")
+    h = F.max_pooling(h, kernel=(2, 2))
+    h = F.relu(h, inplace=False)
+    h = PF.convolution(h, 16, (5, 5), name="conv2")
+    h = F.max_pooling(h, kernel=(2, 2))
+    h = F.relu(h, inplace=False)
+    h = PF.affine(h, 50, name="affine3")
+    h = F.relu(h, inplace=False)
+    h = PF.affine(h, 10, name="affine4")
+    return h
+
+
+def _bn_act(x, name, batch_stat=True):
+    h = PF.batch_normalization(x, name=name, batch_stat=batch_stat)
+    return F.relu(h)
+
+
+def basic_block(x, planes, stride, name, batch_stat=True):
+    with nn.parameter_scope(name):
+        h = PF.convolution(x, planes, (3, 3), pad=(1, 1),
+                           stride=(stride, stride), name="conv1",
+                           with_bias=False)
+        h = _bn_act(h, "bn1", batch_stat)
+        h = PF.convolution(h, planes, (3, 3), pad=(1, 1), name="conv2",
+                           with_bias=False)
+        h = PF.batch_normalization(h, name="bn2", batch_stat=batch_stat)
+        if stride != 1 or x.shape[1] != planes:
+            x = PF.convolution(x, planes, (1, 1), stride=(stride, stride),
+                               name="down", with_bias=False)
+            x = PF.batch_normalization(x, name="bn_down",
+                                       batch_stat=batch_stat)
+        return F.relu(h + x)
+
+
+def bottleneck_block(x, planes, stride, name, batch_stat=True):
+    with nn.parameter_scope(name):
+        h = PF.convolution(x, planes, (1, 1), name="conv1", with_bias=False)
+        h = _bn_act(h, "bn1", batch_stat)
+        h = PF.convolution(h, planes, (3, 3), pad=(1, 1),
+                           stride=(stride, stride), name="conv2",
+                           with_bias=False)
+        h = _bn_act(h, "bn2", batch_stat)
+        h = PF.convolution(h, planes * 4, (1, 1), name="conv3",
+                           with_bias=False)
+        h = PF.batch_normalization(h, name="bn3", batch_stat=batch_stat)
+        if stride != 1 or x.shape[1] != planes * 4:
+            x = PF.convolution(x, planes * 4, (1, 1),
+                               stride=(stride, stride), name="down",
+                               with_bias=False)
+            x = PF.batch_normalization(x, name="bn_down",
+                                       batch_stat=batch_stat)
+        return F.relu(h + x)
+
+
+_RESNET_SPECS = {
+    "resnet18": (basic_block, (2, 2, 2, 2)),
+    "resnet50": (bottleneck_block, (3, 4, 6, 3)),
+}
+
+
+def resnet(x, arch: str = "resnet18", num_classes: int = 1000,
+           batch_stat: bool = True, width: int = 64):
+    """NCHW input. ``width=16`` gives the reduced benchmark variant."""
+    block, reps = _RESNET_SPECS[arch]
+    h = PF.convolution(x, width, (7, 7), pad=(3, 3), stride=(2, 2),
+                       name="conv1", with_bias=False)
+    h = _bn_act(h, "bn1", batch_stat)
+    h = F.max_pooling(h, kernel=(3, 3), stride=(2, 2), pad=(1, 1))
+    planes = width
+    for stage, n in enumerate(reps):
+        for i in range(n):
+            stride = 2 if (stage > 0 and i == 0) else 1
+            h = block(h, planes, stride, f"stage{stage}_block{i}",
+                      batch_stat)
+        planes *= 2
+    h = F.global_average_pooling(h)
+    return PF.affine(h, num_classes, name="fc")

@@ -1,0 +1,182 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + a *shared* attention block
+(arXiv:2411.15242) applied every ``attn_every`` layers.
+
+The shared block's parameters are created once (``nn.capture``) and closed
+over inside the layer scan — one physical copy, applied at several depths,
+exactly the Zamba2 parameter-sharing trick. (We simplify away Zamba2's
+per-invocation LoRA deltas; noted in DESIGN.md.)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+import repro.core as nn
+from repro.core import functions as F
+from repro.configs.base import ModelConfig
+from repro.models import mamba as M
+from repro.models import transformer as T
+
+
+def _shared_block(cfg: ModelConfig, x, cos, sin, *, cache=None,
+                  cache_pos=None):
+    """Pre-norm attention + MLP with the cfg's attention geometry."""
+    h = T.norm(cfg, x, "ln_attn")
+    a, new_cache = T.attention(cfg, h, cos, sin, cache=cache,
+                               cache_pos=cache_pos)
+    x = x + a
+    h = T.norm(cfg, x, "ln_mlp")
+    x = x + T.mlp(cfg, h)
+    return x, new_cache
+
+
+def forward(cfg: ModelConfig, tokens, positions=None, last_only: bool = False):
+    B, S = tokens.shape[:2]
+    if positions is None:
+        positions = T.default_positions(cfg, B, S)
+    x = T.embed_tokens(cfg, tokens)
+    cos, sin = T.rope_tables(cfg, positions)
+
+    shared = nn.capture(
+        "shared_attn", lambda: _shared_block(cfg, x, cos, sin))
+
+    every = max(1, cfg.attn_every)
+
+    def block(h, idx):
+        h = h + M.mamba2_block(cfg, T.norm(cfg, h, "ln"))
+        is_attn = (idx % every) == (every - 1)
+
+        def with_attn(v):
+            out, _ = nn.apply_shared(shared, _shared_block, cfg, v, cos, sin)
+            return out
+
+        return lax.cond(is_attn, with_attn, lambda v: v, h)
+
+    x = nn.layer_stack("layers", cfg.n_layers, block, x, remat=cfg.remat,
+                       unroll=cfg.scan_unroll)
+    if last_only:
+        x = x[:, -1:]
+    x = T.norm(cfg, x, "ln_final")
+    return T.lm_head(cfg, x), jnp.zeros((), jnp.float32)
+
+
+def forward_hidden(cfg: ModelConfig, tokens, positions=None):
+    B, S = tokens.shape[:2]
+    if positions is None:
+        positions = T.default_positions(cfg, B, S)
+    x = T.embed_tokens(cfg, tokens)
+    cos, sin = T.rope_tables(cfg, positions)
+    shared = nn.capture(
+        "shared_attn", lambda: _shared_block(cfg, x, cos, sin))
+    every = max(1, cfg.attn_every)
+
+    def block(h, idx):
+        h = h + M.mamba2_block(cfg, T.norm(cfg, h, "ln"))
+        is_attn = (idx % every) == (every - 1)
+
+        def with_attn(v):
+            out, _ = nn.apply_shared(shared, _shared_block, cfg, v, cos, sin)
+            return out
+
+        return lax.cond(is_attn, with_attn, lambda v: v, h)
+
+    x = nn.layer_stack("layers", cfg.n_layers, block, x, remat=cfg.remat,
+                       unroll=cfg.scan_unroll)
+    return T.norm(cfg, x, "ln_final")
+
+
+def loss_fn(cfg: ModelConfig, tokens, labels, positions=None):
+    if cfg.loss_chunk:
+        x = forward_hidden(cfg, tokens, positions)
+        return T.ce_from_hidden_chunked(cfg, x, labels, cfg.loss_chunk)
+    logits, _ = forward(cfg, tokens, positions)
+    return jnp.mean(F.softmax_cross_entropy(logits, labels))
+
+
+# --------------------------------------------------------------------------- #
+# decode: SSM state per layer + KV cache per *attention site*
+# --------------------------------------------------------------------------- #
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    every = max(1, cfg.attn_every)
+    return sum(1 for i in range(cfg.n_layers) if (i % every) == (every - 1))
+
+
+def init_state(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict[str, Any]:
+    hd = cfg.resolved_head_dim
+    sites = n_attn_sites(cfg)
+    kv_shape = (sites, batch, max_seq, cfg.n_kv_heads, hd)
+    return {"ssm": M.init_state(cfg, batch, dtype),
+            "kv": {"k": jnp.zeros(kv_shape, dtype),
+                   "v": jnp.zeros(kv_shape, dtype)}}
+
+
+def state_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    sites = n_attn_sites(cfg)
+    kv_shape = (sites, batch, max_seq, cfg.n_kv_heads, hd)
+    return {"ssm": M.state_specs(cfg, batch, dtype),
+            "kv": {"k": jax.ShapeDtypeStruct(kv_shape, dtype),
+                   "v": jax.ShapeDtypeStruct(kv_shape, dtype)}}
+
+
+def decode_step(cfg: ModelConfig, tokens, state: dict[str, Any],
+                pos: jax.Array, positions=None):
+    B, S = tokens.shape
+    if positions is None:
+        positions = T.default_positions(cfg, B, S, offset=pos)
+    x = T.embed_tokens(cfg, tokens)
+    cos, sin = T.rope_tables(cfg, positions)
+
+    shared = nn.capture(
+        "shared_attn", lambda: _shared_block(cfg, x, cos, sin))
+
+    every = max(1, cfg.attn_every)
+    # map layer idx -> attention-site index (or -1)
+    site_of_layer = []
+    s = 0
+    for i in range(cfg.n_layers):
+        if (i % every) == (every - 1):
+            site_of_layer.append(s)
+            s += 1
+        else:
+            site_of_layer.append(-1)
+    site_map = jnp.asarray(site_of_layer, jnp.int32)
+
+    def block(carry, idx, ssm_layer_state):
+        h, kv = carry
+        out, new_ssm = M.mamba2_block_step(cfg, T.norm(cfg, h, "ln"),
+                                           ssm_layer_state)
+        h = h + out
+        site = site_map[idx]
+
+        def with_attn(args):
+            h_, kv_ = args
+            k_site = lax.dynamic_index_in_dim(kv_["k"], site, 0,
+                                              keepdims=False)
+            v_site = lax.dynamic_index_in_dim(kv_["v"], site, 0,
+                                              keepdims=False)
+            h2, new_cache = nn.apply_shared(
+                shared, _shared_block, cfg, h_, cos, sin,
+                cache=(k_site, v_site), cache_pos=pos)
+            kk = lax.dynamic_update_index_in_dim(kv_["k"], new_cache[0],
+                                                 site, 0)
+            vv = lax.dynamic_update_index_in_dim(kv_["v"], new_cache[1],
+                                                 site, 0)
+            return h2, {"k": kk, "v": vv}
+
+        if n_attn_sites(cfg) > 0:  # static: probe configs may have none
+            h, kv = lax.cond(site >= 0, with_attn, lambda a: a, (h, kv))
+        return (h, kv), new_ssm
+
+    (x, kv), new_ssm = nn.layer_stack_with_output(
+        "layers", cfg.n_layers, block, (x, state["kv"]), xs=state["ssm"],
+        unroll=cfg.scan_unroll)
+    x = T.norm(cfg, x, "ln_final")
+    return T.lm_head(cfg, x), {"ssm": new_ssm, "kv": kv}

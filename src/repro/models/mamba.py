@@ -1,0 +1,297 @@
+"""Mamba-2 (SSD / state-space duality, arXiv:2405.21060) block and LM.
+
+The block follows the Mamba-2 reference: fused in-projection to
+(z, xBC, dt), short causal depthwise conv on (x, B, C), SSD scan with scalar
+per-head decay, gated RMSNorm, out-projection. The SSD itself dispatches
+through :mod:`repro.kernels.ops` (Pallas kernel on TPU, chunked-jnp on XLA).
+
+Decode carries O(1) state per layer: the SSD state (B, H, P, N) fp32 and the
+conv ring buffer (B, conv-1, conv_ch) — no KV cache, which is why this family
+runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+import repro.core as nn
+from repro.core import context as _ctx
+from repro.core import functions as F
+from repro.core import initializer as I
+from repro.core import parametric as PF
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops as K
+from repro.models import transformer as T
+
+
+def _dims(cfg: ModelConfig, d: int) -> tuple[int, int, int, int, int, int]:
+    d_inner = cfg.ssm_expand * d
+    H = d_inner // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    conv_ch = d_inner + 2 * G * N
+    return d_inner, H, P, G, N, conv_ch
+
+
+def _block_params(cfg: ModelConfig, d: int, name: str):
+    d_inner, H, P, G, N, conv_ch = _dims(cfg, d)
+    cdt = _ctx.get_default_context().policy.compute_dtype
+    if cfg.ssm_split_proj:
+        # TP-clean layout: separate projections so the model-axis shards
+        # never straddle the z/x/B/C split points (kills the per-layer
+        # resharding all-gathers of the fused kernel).
+        w_z = nn.get_parameter_or_create(
+            f"{name}_z/kernel", (d, d_inner), I.lecun_normal())
+        w_x = nn.get_parameter_or_create(
+            f"{name}_x/kernel", (d, d_inner), I.lecun_normal())
+        w_bc = nn.get_parameter_or_create(
+            f"{name}_bc/kernel", (d, 2 * G * N), I.lecun_normal())
+        w_dt = nn.get_parameter_or_create(
+            f"{name}_dtp/kernel", (d, H), I.lecun_normal())
+        conv_x = nn.get_parameter_or_create(
+            f"{name}_convx/W", (d_inner, 1, cfg.ssm_conv), I.uniform_fanin())
+        conv_bc = nn.get_parameter_or_create(
+            f"{name}_convbc/W", (2 * G * N, 1, cfg.ssm_conv),
+            I.uniform_fanin())
+        conv_b = nn.get_parameter_or_create(
+            f"{name}_conv/b", (conv_ch,), I.zeros())
+        A_log = nn.get_parameter_or_create(
+            f"{name}_A_log", (H,), I.uniform(1.0), dtype=jnp.float32)
+        Dskip = nn.get_parameter_or_create(
+            f"{name}_D", (H,), I.ones(), dtype=jnp.float32)
+        dt_bias = nn.get_parameter_or_create(
+            f"{name}_dt_bias", (H,), I.zeros(), dtype=jnp.float32)
+        gamma = nn.get_parameter_or_create(
+            f"{name}_norm/gamma", (d_inner,), I.ones(), dtype=jnp.float32)
+        w_out = nn.get_parameter_or_create(
+            f"{name}_out/kernel", (d_inner, d), I.scaled_normal(1.0, d_inner))
+        return dict(split=True, w_z=w_z.astype(cdt), w_x=w_x.astype(cdt),
+                    w_bc=w_bc.astype(cdt), w_dt=w_dt.astype(cdt),
+                    conv_x=conv_x.astype(cdt), conv_bc=conv_bc.astype(cdt),
+                    conv_b=conv_b.astype(cdt), A_log=A_log, D=Dskip,
+                    dt_bias=dt_bias, gamma=gamma, w_out=w_out.astype(cdt))
+    w_in = nn.get_parameter_or_create(
+        f"{name}_in/kernel", (d, 2 * d_inner + 2 * G * N + H),
+        I.lecun_normal())
+    conv_w = nn.get_parameter_or_create(
+        f"{name}_conv/W", (conv_ch, 1, cfg.ssm_conv), I.uniform_fanin())
+    conv_b = nn.get_parameter_or_create(
+        f"{name}_conv/b", (conv_ch,), I.zeros())
+    A_log = nn.get_parameter_or_create(
+        f"{name}_A_log", (H,), I.uniform(1.0), dtype=jnp.float32)
+    Dskip = nn.get_parameter_or_create(
+        f"{name}_D", (H,), I.ones(), dtype=jnp.float32)
+    dt_bias = nn.get_parameter_or_create(
+        f"{name}_dt_bias", (H,), I.zeros(), dtype=jnp.float32)
+    gamma = nn.get_parameter_or_create(
+        f"{name}_norm/gamma", (d_inner,), I.ones(), dtype=jnp.float32)
+    w_out = nn.get_parameter_or_create(
+        f"{name}_out/kernel", (d_inner, d), I.scaled_normal(1.0, d_inner))
+    return dict(split=False, w_in=w_in.astype(cdt), conv_w=conv_w.astype(cdt),
+                conv_b=conv_b.astype(cdt), A_log=A_log, D=Dskip,
+                dt_bias=dt_bias, gamma=gamma, w_out=w_out.astype(cdt))
+
+
+def _split_proj(cfg, d, zxbcdt):
+    d_inner, H, P, G, N, conv_ch = _dims(cfg, d)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+    return z, xBC, dt
+
+
+def _gated_norm(y, z, gamma, eps=1e-6):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * lax.rsqrt(ms + eps) * gamma).astype(y.dtype)
+
+
+def _causal_dwconv(x_t, w, conv_k):
+    """x_t (B, ch, S) fp32; w (ch, 1, k) -> (B, ch, S) fp32.
+
+    Written as k shifted multiply-adds instead of lax.conv: identical math
+    (k is 4), but elementwise ops partition transparently under SPMD — the
+    conv op was getting replicated across the mesh (the 30 GiB temp spike).
+    """
+    S = x_t.shape[-1]
+    xp = jnp.pad(x_t, ((0, 0), (0, 0), (conv_k - 1, 0)))
+    out = jnp.zeros_like(x_t)
+    for j in range(conv_k):
+        out = out + xp[:, :, j:j + S] * w[:, 0, j][None, :, None]
+    return out
+
+
+def mamba2_block(cfg: ModelConfig, x, *, name: str = "mamba"):
+    """Full-sequence SSD block. x (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    d_inner, H, P, G, N, conv_ch = _dims(cfg, d)
+    p = _block_params(cfg, d, name)
+
+    if p["split"]:
+        z = jnp.einsum("bsd,dk->bsk", x, p["w_z"])
+        xs = jnp.einsum("bsd,dk->bsk", x, p["w_x"])
+        bc = jnp.einsum("bsd,dk->bsk", x, p["w_bc"])
+        dt = jnp.einsum("bsd,dk->bsk", x, p["w_dt"])
+        z = constrain(z, "batch", "seq", "ssm_inner")
+        xs = constrain(xs, "batch", "seq", "ssm_inner")
+        cx = _causal_dwconv(jnp.swapaxes(xs, 1, 2).astype(jnp.float32),
+                            p["conv_x"].astype(jnp.float32), cfg.ssm_conv)
+        cbc = _causal_dwconv(jnp.swapaxes(bc, 1, 2).astype(jnp.float32),
+                             p["conv_bc"].astype(jnp.float32), cfg.ssm_conv)
+        cb = p["conv_b"].astype(jnp.float32)
+        cx = cx + cb[:d_inner][None, :, None]
+        cbc = cbc + cb[d_inner:][None, :, None]
+        x_ssm = jnp.swapaxes(jax.nn.silu(cx).astype(x.dtype), 1, 2) \
+            .reshape(B, S, H, P)
+        bc_o = jnp.swapaxes(jax.nn.silu(cbc).astype(x.dtype), 1, 2)
+        Bm = bc_o[..., :G * N].reshape(B, S, G, N)
+        Cm = bc_o[..., G * N:].reshape(B, S, G, N)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    else:
+        zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+        z, xBC, dt = _split_proj(cfg, d, zxbcdt)
+        z = constrain(z, "batch", "seq", "ssm_inner")
+        xBC = constrain(xBC, "batch", "seq", None)
+
+        xBC_t = jnp.swapaxes(xBC, 1, 2).astype(jnp.float32)   # (B, ch, S)
+        conv = _causal_dwconv(xBC_t, p["conv_w"].astype(jnp.float32),
+                              cfg.ssm_conv)
+        conv = conv + p["conv_b"].astype(jnp.float32)[None, :, None]
+        xBC = jax.nn.silu(conv).astype(x.dtype)
+        xBC = jnp.swapaxes(xBC, 1, 2)                         # (B, S, ch)
+
+        x_ssm = xBC[..., :d_inner].reshape(B, S, H, P)
+        Bm = xBC[..., d_inner:d_inner + G * N].reshape(B, S, G, N)
+        Cm = xBC[..., d_inner + G * N:].reshape(B, S, G, N)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    x_ssm = constrain(x_ssm, "batch", "seq", "heads", None)
+    y = K.ssd(x_ssm, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk,
+              unroll=cfg.scan_unroll is True)
+    y = constrain(y, "batch", "seq", "heads", None)
+    y = y.reshape(B, S, d_inner)
+
+    y = _gated_norm(y, z, p["gamma"])
+    y = constrain(y, "batch", "seq", "ssm_inner")
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+def mamba2_block_step(cfg: ModelConfig, x, state: dict[str, Any],
+                      *, name: str = "mamba"):
+    """Single-token step. x (B, 1, d); state {"h": (B,H,P,N) f32,
+    "conv": (B, conv-1, conv_ch)}. Returns (out, new_state)."""
+    B, S, d = x.shape
+    assert S == 1
+    d_inner, H, P, G, N, conv_ch = _dims(cfg, d)
+    p = _block_params(cfg, d, name)
+
+    if p["split"]:
+        z = jnp.einsum("bsd,dk->bsk", x, p["w_z"])
+        xBC = jnp.concatenate(
+            [jnp.einsum("bsd,dk->bsk", x, p["w_x"]),
+             jnp.einsum("bsd,dk->bsk", x, p["w_bc"])], axis=-1)
+        dt = jnp.einsum("bsd,dk->bsk", x, p["w_dt"])
+        conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=0)
+    else:
+        zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+        z, xBC, dt = _split_proj(cfg, d, zxbcdt)
+        conv_w = p["conv_w"]
+
+    window = jnp.concatenate([state["conv"], xBC.astype(state["conv"].dtype)],
+                             axis=1)                      # (B, conv, ch)
+    w = jnp.swapaxes(conv_w[:, 0, :], 0, 1)               # (kernel, ch)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC_o = jax.nn.silu(conv)[:, None, :].astype(x.dtype)  # (B,1,ch)
+    new_conv = window[:, 1:]
+
+    x_t = xBC_o[:, 0, :d_inner].reshape(B, H, P)
+    B_t = xBC_o[:, 0, d_inner:d_inner + G * N].reshape(B, G, N)
+    C_t = xBC_o[:, 0, d_inner + G * N:].reshape(B, G, N)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y_t, h_new = K.ssd_decode_step(state["h"], x_t, dt_t, A, B_t, C_t, p["D"])
+    y = y_t.reshape(B, 1, d_inner)
+    y = _gated_norm(y, z, p["gamma"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    return out, {"h": h_new, "conv": new_conv}
+
+
+# --------------------------------------------------------------------------- #
+# pure-SSM LM (mamba2-370m)
+# --------------------------------------------------------------------------- #
+
+def forward(cfg: ModelConfig, tokens, positions=None, last_only: bool = False):
+    del positions
+    x = T.embed_tokens(cfg, tokens)
+
+    def block(h, idx):
+        return h + mamba2_block(cfg, T.norm(cfg, h, "ln"))
+
+    x = nn.layer_stack("layers", cfg.n_layers, block, x, remat=cfg.remat,
+                       unroll=cfg.scan_unroll)
+    if last_only:
+        x = x[:, -1:]
+    x = T.norm(cfg, x, "ln_final")
+    return T.lm_head(cfg, x), jnp.zeros((), jnp.float32)
+
+
+def forward_hidden(cfg: ModelConfig, tokens):
+    x = T.embed_tokens(cfg, tokens)
+
+    def block(h, idx):
+        return h + mamba2_block(cfg, T.norm(cfg, h, "ln"))
+
+    x = nn.layer_stack("layers", cfg.n_layers, block, x, remat=cfg.remat,
+                       unroll=cfg.scan_unroll)
+    return T.norm(cfg, x, "ln_final")
+
+
+def loss_fn(cfg: ModelConfig, tokens, labels, positions=None):
+    if cfg.loss_chunk:
+        x = forward_hidden(cfg, tokens)
+        return T.ce_from_hidden_chunked(cfg, x, labels, cfg.loss_chunk)
+    logits, _ = forward(cfg, tokens)
+    return jnp.mean(F.softmax_cross_entropy(logits, labels))
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+               ) -> dict[str, Any]:
+    d_inner, H, P, G, N, conv_ch = _dims(cfg, cfg.d_model)
+    L = cfg.n_layers
+    return {"h": jnp.zeros((L, batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch), dtype)}
+
+
+def state_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d_inner, H, P, G, N, conv_ch = _dims(cfg, cfg.d_model)
+    L = cfg.n_layers
+    return {"h": jax.ShapeDtypeStruct((L, batch, H, P, N), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((L, batch, cfg.ssm_conv - 1, conv_ch),
+                                         dtype)}
+
+
+def decode_step(cfg: ModelConfig, tokens, state: dict[str, Any],
+                pos: jax.Array, positions=None):
+    """tokens (B, 1); state from :func:`init_state`. Returns (logits, state)."""
+    del pos, positions  # SSM state is position-free
+    x = T.embed_tokens(cfg, tokens)
+
+    def block(h, idx, layer_state):
+        out, new_state = mamba2_block_step(cfg, T.norm(cfg, h, "ln"),
+                                           layer_state)
+        return h + out, new_state
+
+    x, new_state = nn.layer_stack_with_output(
+        "layers", cfg.n_layers, block, x, xs=state, unroll=cfg.scan_unroll)
+    x = T.norm(cfg, x, "ln_final")
+    return T.lm_head(cfg, x), new_state

@@ -1,0 +1,133 @@
+"""Model API registry: one uniform surface per architecture family.
+
+``ModelApi`` is what the launcher, dry-run, serving and tests program
+against: ``loss_fn(tokens, labels, **extras)``, ``forward``, ``decode_step``,
+plus shape-struct providers for inputs and decode state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Callable
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import hybrid, mamba, transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    forward: Callable            # (tokens, **extras) -> (logits, aux)
+    loss_fn: Callable            # (tokens, labels, **extras) -> scalar
+    decode_step: Callable | None # (tokens, state, pos, **extras) -> (logits, state)
+    decode_state_specs: Callable | None  # (batch, max_seq) -> pytree of SDS
+    decode_state_init: Callable | None
+
+    def input_specs(self, shape: ShapeConfig,
+                    cache_dtype=jnp.bfloat16) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        B = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            S = shape.seq_len
+            specs: dict[str, Any] = {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+            if cfg.mrope:
+                specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), jnp.int32)
+            if cfg.family == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+            return specs
+        # decode: one new token against a seq_len-deep cache/state
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "state": self.decode_state_specs(B, shape.seq_len, cache_dtype),
+        }
+        if cfg.mrope:
+            specs["positions"] = jax.ShapeDtypeStruct((B, 1, 3), jnp.int32)
+        return specs
+
+
+def _lm_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        forward=lambda tokens, **kw: transformer.forward(cfg, tokens, **kw),
+        loss_fn=lambda tokens, labels, **kw: transformer.loss_fn(
+            cfg, tokens, labels, **kw),
+        decode_step=lambda tokens, state, pos, **kw: transformer.decode_step(
+            cfg, tokens, state, pos, **kw),
+        decode_state_specs=lambda b, s, dt=jnp.bfloat16:
+            transformer.kv_cache_specs(cfg, b, s, dt),
+        decode_state_init=lambda b, s, dt=jnp.bfloat16:
+            transformer.init_kv_cache(cfg, b, s, dt),
+    )
+
+
+def _ssm_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        forward=lambda tokens, **kw: mamba.forward(cfg, tokens, **kw),
+        loss_fn=lambda tokens, labels, **kw: mamba.loss_fn(
+            cfg, tokens, labels, **kw),
+        decode_step=lambda tokens, state, pos, **kw: mamba.decode_step(
+            cfg, tokens, state, pos, **kw),
+        # SSM state is O(1) in seq; max_seq arg ignored
+        decode_state_specs=lambda b, s, dt=jnp.bfloat16:
+            mamba.state_specs(cfg, b, dt),
+        decode_state_init=lambda b, s, dt=jnp.bfloat16:
+            mamba.init_state(cfg, b, dt),
+    )
+
+
+def _hybrid_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        forward=lambda tokens, **kw: hybrid.forward(cfg, tokens, **kw),
+        loss_fn=lambda tokens, labels, **kw: hybrid.loss_fn(
+            cfg, tokens, labels, **kw),
+        decode_step=lambda tokens, state, pos, **kw: hybrid.decode_step(
+            cfg, tokens, state, pos, **kw),
+        decode_state_specs=lambda b, s, dt=jnp.bfloat16:
+            hybrid.state_specs(cfg, b, s, dt),
+        decode_state_init=lambda b, s, dt=jnp.bfloat16:
+            hybrid.init_state(cfg, b, s, dt),
+    )
+
+
+def _audio_api(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        forward=lambda tokens, frames=None, **kw: whisper.forward(
+            cfg, tokens, frames, **kw),
+        loss_fn=lambda tokens, labels, frames=None, **kw: whisper.loss_fn(
+            cfg, tokens, labels, frames, **kw),
+        decode_step=lambda tokens, state, pos, **kw: whisper.decode_step(
+            cfg, tokens, state, pos, **kw),
+        decode_state_specs=lambda b, s, dt=jnp.bfloat16:
+            whisper.state_specs(cfg, b, s, dt),
+        decode_state_init=None,  # requires frames; use whisper.init_decode_state
+    )
+
+
+_FAMILY_API = {
+    "dense": _lm_api,
+    "vlm": _lm_api,
+    "moe": _lm_api,
+    "ssm": _ssm_api,
+    "hybrid": _hybrid_api,
+    "audio": _audio_api,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    try:
+        return _FAMILY_API[cfg.family](cfg)
+    except KeyError as e:
+        raise ValueError(f"no model family {cfg.family!r}") from e

@@ -1,0 +1,201 @@
+"""Whisper-medium backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+Per the assignment the conv/mel frontend is a STUB — ``input_specs()``
+provides precomputed frame embeddings (B, n_frames, d_model). The backbone is
+faithful: sinusoidal positions + non-causal self-attention encoder; decoder
+with causal self-attention, cross-attention against the encoder output,
+learned positions, LayerNorm + GELU.
+
+Serving: cross-attention K/V are computed once per request
+(:func:`init_decode_state`) and reused every decode step.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as nn
+from repro.core import functions as F
+from repro.core import initializer as I
+from repro.core import parametric as PF
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import transformer as T
+
+
+def _sinusoid(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def encode(cfg: ModelConfig, frames):
+    """frames: (B, F, d_model) stub embeddings -> (B, F, d_model)."""
+    B, S, d = frames.shape
+    x = frames + _sinusoid(S, d).astype(frames.dtype)[None]
+    x = constrain(x, "batch", "frames", "embed")
+    dummy = jnp.zeros((B, S), jnp.int32)
+    cos, sin = T.rope_tables(cfg, dummy)  # unused (use_rope=False) but shaped
+
+    def block(h, idx):
+        a, _ = T.attention(cfg, T.norm(cfg, h, "ln_attn"), cos, sin,
+                           causal=False, use_rope=False)
+        h = h + a
+        return h + T.mlp(cfg, T.norm(cfg, h, "ln_mlp"))
+
+    x = nn.layer_stack("enc_layers", cfg.n_encoder_layers, block, x,
+                       remat=cfg.remat, unroll=cfg.scan_unroll)
+    return T.norm(cfg, x, "ln_enc_final")
+
+
+def _decoder_positions_embed(cfg: ModelConfig, S: int, offset=0):
+    table = nn.get_parameter_or_create(
+        "dec_pos/W", (cfg.max_position, cfg.d_model), I.normal(0.01))
+    idx = jnp.arange(S, dtype=jnp.int32) + offset
+    return jnp.take(table, idx, axis=0)
+
+
+def _decoder_block(cfg: ModelConfig, x, enc_out, cos, sin, *,
+                   self_cache=None, cache_pos=None, cross_kv=None):
+    h = T.norm(cfg, x, "ln_self")
+    a, new_self = T.attention(cfg, h, cos, sin, name="self",
+                              cache=self_cache, cache_pos=cache_pos,
+                              use_rope=False)
+    x = x + a
+    h = T.norm(cfg, x, "ln_cross")
+    if cross_kv is None:
+        Kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        Bsz, Fl, _ = enc_out.shape
+        k = PF.dense(enc_out, Kh * hd, name="cross_k").reshape(Bsz, Fl, Kh, hd)
+        v = PF.dense(enc_out, Kh * hd, name="cross_v").reshape(Bsz, Fl, Kh, hd)
+        cross_kv = (k, v)
+    c, _ = T.attention(cfg, h, cos, sin, name="cross", cross_kv=cross_kv,
+                       causal=False, use_rope=False)
+    x = x + c
+    h = T.norm(cfg, x, "ln_mlp")
+    return x + T.mlp(cfg, h), new_self, cross_kv
+
+
+def forward(cfg: ModelConfig, tokens, frames=None, positions=None,
+            last_only: bool = False):
+    """Training/prefill: tokens (B, S) decoder inputs, frames stub."""
+    B, S = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((B, cfg.n_audio_frames, cfg.d_model),
+                           T.embed_tokens(cfg, tokens).dtype)
+    enc_out = encode(cfg, frames)
+
+    x = T.embed_tokens(cfg, tokens)
+    x = x + _decoder_positions_embed(cfg, S).astype(x.dtype)[None]
+    dummy = jnp.zeros((B, S), jnp.int32)
+    cos, sin = T.rope_tables(cfg, dummy)
+
+    def block(h, idx):
+        h, _, _ = _decoder_block(cfg, h, enc_out, cos, sin)
+        return h
+
+    x = nn.layer_stack("dec_layers", cfg.n_layers, block, x, remat=cfg.remat,
+                       unroll=cfg.scan_unroll)
+    if last_only:
+        x = x[:, -1:]
+    x = T.norm(cfg, x, "ln_final")
+    return T.lm_head(cfg, x), jnp.zeros((), jnp.float32)
+
+
+def forward_hidden(cfg: ModelConfig, tokens, frames=None):
+    B, S = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((B, cfg.n_audio_frames, cfg.d_model),
+                           T.embed_tokens(cfg, tokens).dtype)
+    enc_out = encode(cfg, frames)
+    x = T.embed_tokens(cfg, tokens)
+    x = x + _decoder_positions_embed(cfg, S).astype(x.dtype)[None]
+    dummy = jnp.zeros((B, S), jnp.int32)
+    cos, sin = T.rope_tables(cfg, dummy)
+
+    def block(h, idx):
+        h, _, _ = _decoder_block(cfg, h, enc_out, cos, sin)
+        return h
+
+    x = nn.layer_stack("dec_layers", cfg.n_layers, block, x, remat=cfg.remat,
+                       unroll=cfg.scan_unroll)
+    return T.norm(cfg, x, "ln_final")
+
+
+def loss_fn(cfg: ModelConfig, tokens, labels, frames=None, positions=None):
+    if cfg.loss_chunk:
+        x = forward_hidden(cfg, tokens, frames)
+        return T.ce_from_hidden_chunked(cfg, x, labels, cfg.loss_chunk)
+    logits, _ = forward(cfg, tokens, frames)
+    return jnp.mean(F.softmax_cross_entropy(logits, labels))
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+
+def init_decode_state(cfg: ModelConfig, frames, max_seq: int,
+                      dtype=jnp.bfloat16) -> dict[str, Any]:
+    """Run the encoder + per-layer cross-K/V projections once."""
+    B = frames.shape[0]
+    enc_out = encode(cfg, frames)
+    Kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    Fl = enc_out.shape[1]
+
+    def block(carry, idx):
+        k = PF.dense(enc_out, Kh * hd, name="cross_k").reshape(B, Fl, Kh, hd)
+        v = PF.dense(enc_out, Kh * hd, name="cross_v").reshape(B, Fl, Kh, hd)
+        return carry, {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    # Reuse the dec_layers stacked params (read mode slices the whole layer
+    # dict; the body only touches the cross_k/cross_v entries). Must run
+    # against params initialized via forward().
+    _, cross = nn.layer_stack_with_output(
+        "dec_layers", cfg.n_layers, block, jnp.zeros(()))
+    kv_shape = (cfg.n_layers, B, max_seq, Kh, hd)
+    return {"cross": cross,
+            "self_kv": {"k": jnp.zeros(kv_shape, dtype),
+                        "v": jnp.zeros(kv_shape, dtype)}}
+
+
+def state_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16):
+    Kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L, Fl = cfg.n_layers, cfg.n_audio_frames
+    return {"cross": {"k": jax.ShapeDtypeStruct((L, batch, Fl, Kh, hd), dtype),
+                      "v": jax.ShapeDtypeStruct((L, batch, Fl, Kh, hd), dtype)},
+            "self_kv": {"k": jax.ShapeDtypeStruct((L, batch, max_seq, Kh, hd),
+                                                  dtype),
+                        "v": jax.ShapeDtypeStruct((L, batch, max_seq, Kh, hd),
+                                                  dtype)}}
+
+
+def decode_step(cfg: ModelConfig, tokens, state: dict[str, Any],
+                pos: jax.Array, positions=None):
+    """tokens (B, 1); state from init_decode_state/state_specs."""
+    B, S = tokens.shape
+    x = T.embed_tokens(cfg, tokens)
+    pe = jnp.take(nn.get_parameter_or_create(
+        "dec_pos/W", (cfg.max_position, cfg.d_model), I.normal(0.01)),
+        jnp.arange(S, dtype=jnp.int32) + pos, axis=0)
+    x = x + pe.astype(x.dtype)[None]
+    dummy = jnp.zeros((B, S), jnp.int32)
+    cos, sin = T.rope_tables(cfg, dummy)
+
+    def block(h, idx, layer_state):
+        self_kv, cross = layer_state
+        h, new_self, _ = _decoder_block(
+            cfg, h, None, cos, sin,
+            self_cache=(self_kv["k"], self_kv["v"]), cache_pos=pos,
+            cross_kv=(cross["k"], cross["v"]))
+        return h, {"k": new_self[0], "v": new_self[1]}
+
+    x, new_self = nn.layer_stack_with_output(
+        "dec_layers", cfg.n_layers, block, x,
+        xs=(state["self_kv"], state["cross"]), unroll=cfg.scan_unroll)
+    x = T.norm(cfg, x, "ln_final")
+    return T.lm_head(cfg, x), {"cross": state["cross"], "self_kv": new_self}

@@ -1,0 +1,4 @@
+from repro.monitor.monitor import (Monitor, MonitorSeries,
+                                   MonitorTimeElapsed, MonitorCSV)
+
+__all__ = ["Monitor", "MonitorSeries", "MonitorTimeElapsed", "MonitorCSV"]

@@ -1,0 +1,101 @@
+
+"""Monitors — nnabla's ``nnabla.monitor`` (and the NNP ``Monitor`` message).
+
+Training-status tracking the way the paper's ecosystem does it: per-series
+scalar logs with interval-averaged flushes, wall-time monitors, and CSV
+persistence that Neural Network Console-style tooling (our ``nnp_inspect``
+sibling) can read back.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import pathlib
+import time
+from typing import Any
+
+
+class Monitor:
+    """A directory of monitored series (one file per series)."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = pathlib.Path(path)
+        self.path.mkdir(parents=True, exist_ok=True)
+
+
+class MonitorSeries:
+    """Interval-averaged scalar series, printed and persisted.
+
+    nnabla parity: ``MonitorSeries("loss", monitor, interval=10).add(i, v)``.
+    """
+
+    def __init__(self, name: str, monitor: Monitor | None = None,
+                 interval: int = 10, verbose: bool = True):
+        self.name = name
+        self.interval = max(1, interval)
+        self.verbose = verbose
+        self._buf: list[float] = []
+        self._file = None
+        if monitor is not None:
+            self._file = open(monitor.path / f"{name.replace(' ', '_')}.txt",
+                              "a", buffering=1)
+
+    def add(self, index: int, value: Any) -> None:
+        self._buf.append(float(value))
+        if (index + 1) % self.interval == 0:
+            mean = sum(self._buf) / len(self._buf)
+            self._buf.clear()
+            line = f"{index} {mean:.6f}"
+            if self.verbose:
+                print(f"[{self.name}] {line}", flush=True)
+            if self._file is not None:
+                self._file.write(line + "\n")
+
+    def close(self) -> None:
+        if self._file is not None:
+            self._file.close()
+
+
+class MonitorTimeElapsed:
+    """Wall-time per interval (nnabla parity)."""
+
+    def __init__(self, name: str, monitor: Monitor | None = None,
+                 interval: int = 10, verbose: bool = True):
+        self.series = MonitorSeries(name, monitor, interval=1,
+                                    verbose=verbose)
+        self.interval = max(1, interval)
+        self._t0 = time.time()
+
+    def add(self, index: int) -> None:
+        if (index + 1) % self.interval == 0:
+            now = time.time()
+            self.series.add(index, now - self._t0)
+            self._t0 = now
+
+
+class MonitorCSV:
+    """Multi-column CSV log (step + named metrics), flushed per row —
+    restart-safe, resumable by appending."""
+
+    def __init__(self, path: str | os.PathLike, fields: list[str]):
+        self.path = pathlib.Path(path)
+        self.fields = ["step"] + fields
+        new = not self.path.exists()
+        self._fh = open(self.path, "a", newline="", buffering=1)
+        self._w = csv.writer(self._fh)
+        if new:
+            self._w.writerow(self.fields)
+
+    def add(self, step: int, **metrics: Any) -> None:
+        self._w.writerow([step] + [float(metrics.get(f, float("nan")))
+                                   for f in self.fields[1:]])
+
+    @staticmethod
+    def read(path: str | os.PathLike) -> list[dict[str, float]]:
+        with open(path, newline="") as fh:
+            return [{k: float(v) for k, v in row.items()}
+                    for row in csv.DictReader(fh)]
+
+    def close(self) -> None:
+        self._fh.close()

@@ -1,0 +1,6 @@
+from repro.precision.loss_scale import (DynamicLossScaleState, LossScaler,
+                                        all_finite, dynamic_scaler,
+                                        static_scaler)
+
+__all__ = ["DynamicLossScaleState", "LossScaler", "all_finite",
+           "dynamic_scaler", "static_scaler"]

@@ -1,0 +1,99 @@
+"""Loss scaling for fp16 mixed-precision training (paper §3.3, Listing 6).
+
+The paper's dynamic scheme, verbatim semantics, as pure JAX state transitions
+(``lax.cond``, no host round-trip — the whole thing lives inside the compiled
+train step):
+
+* on inf/nan gradients: halve the scale, skip the update, reset the counter;
+* otherwise: apply the (unscaled) update; after ``interval`` consecutive good
+  steps, double the scale.
+
+bf16 (TPU default) shares fp32's exponent so ``static_scaler(1.0)`` is a
+no-op passthrough; the fp16 policy wires in :func:`dynamic_scaler`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class DynamicLossScaleState(NamedTuple):
+    scale: jax.Array          # f32 scalar
+    counter: jax.Array        # i32 consecutive good steps
+    total_skipped: jax.Array  # i32 diagnostics
+
+
+def all_finite(tree: Any) -> jax.Array:
+    """Scalar bool: every leaf of the gradient pytree is finite.
+
+    This is the paper's ``solver.check_inf_or_nan_grad()`` (negated).
+    """
+    leaves = [jnp.isfinite(x).all() for x in jax.tree.leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.stack(leaves).all()
+
+
+@dataclasses.dataclass(frozen=True)
+class LossScaler:
+    """Config + pure transitions. ``dynamic=False`` -> fixed scale."""
+
+    init_scale: float = 2.0 ** 13
+    factor: float = 2.0
+    interval: int = 2000
+    dynamic: bool = True
+    max_scale: float = 2.0 ** 24
+    min_scale: float = 1.0
+
+    def init_state(self) -> DynamicLossScaleState:
+        return DynamicLossScaleState(
+            scale=jnp.asarray(self.init_scale, jnp.float32),
+            counter=jnp.zeros((), jnp.int32),
+            total_skipped=jnp.zeros((), jnp.int32))
+
+    def scale_loss(self, loss: jax.Array,
+                   state: DynamicLossScaleState) -> jax.Array:
+        return loss * state.scale.astype(loss.dtype)
+
+    def unscale_grads(self, grads: Any, state: DynamicLossScaleState) -> Any:
+        inv = (1.0 / state.scale)
+        return jax.tree.map(
+            lambda g: (g.astype(jnp.float32) * inv).astype(g.dtype), grads)
+
+    def next_state(self, state: DynamicLossScaleState,
+                   grads_finite: jax.Array) -> DynamicLossScaleState:
+        if not self.dynamic:
+            return state
+
+        def good(s: DynamicLossScaleState) -> DynamicLossScaleState:
+            counter = s.counter + 1
+            grow = counter >= self.interval
+            scale = jnp.where(
+                grow, jnp.minimum(s.scale * self.factor, self.max_scale),
+                s.scale)
+            counter = jnp.where(grow, 0, counter)
+            return DynamicLossScaleState(scale, counter, s.total_skipped)
+
+        def bad(s: DynamicLossScaleState) -> DynamicLossScaleState:
+            return DynamicLossScaleState(
+                jnp.maximum(s.scale / self.factor, self.min_scale),
+                jnp.zeros((), jnp.int32),
+                s.total_skipped + 1)
+
+        return lax.cond(grads_finite, good, bad, state)
+
+
+def dynamic_scaler(init_scale: float = 2.0 ** 13, interval: int = 2000,
+                   factor: float = 2.0) -> LossScaler:
+    return LossScaler(init_scale=init_scale, interval=interval, factor=factor,
+                      dynamic=True)
+
+
+def static_scaler(scale: float = 1.0) -> LossScaler:
+    return LossScaler(init_scale=scale, dynamic=False)

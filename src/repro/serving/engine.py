@@ -1,0 +1,116 @@
+"""Serving runtime: batched decode with continuous batching (lite).
+
+A fixed-slot decode batch (compiled once); requests stream in and out of
+slots without recompilation:
+
+* each slot carries its own position (per-row KV-cache writes via the
+  vmap'd scatter in the attention decode path);
+* a freed slot (EOS / max_tokens) is refilled from the queue on the next
+  step — no draining barrier, the Orca/vLLM scheduling insight on top of a
+  fixed-shape TPU step;
+* prompts are absorbed via teacher-forced decode steps (a dedicated chunked
+  prefill step is the recorded follow-up optimization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as nn
+from repro.models.registry import ModelApi
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    # filled by the engine
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, api: ModelApi, params: dict[str, Any], *,
+                 max_batch: int = 4, max_seq: int = 256,
+                 cache_dtype=jnp.float32):
+        self.api = api
+        self.params = params
+        self.B = max_batch
+        self.max_seq = max_seq
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)          # next write index
+        self.pending_prompt: list[deque[int]] = [deque() for _ in range(max_batch)]
+        self.state = api.decode_state_init(max_batch, max_seq, cache_dtype)
+        self._step = jax.jit(self._decode_fn)
+        self.completed: list[Request] = []
+
+    # ------------------------------------------------------------------ #
+    def _decode_fn(self, params, tokens, state, pos):
+        logits, new_state = nn.apply(
+            lambda t, s, p: self.api.decode_step(t, s, p),
+            params, tokens, state, pos)
+        next_tok = jnp.argmax(logits[:, -1, :].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32), new_state
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.B):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[slot] = req
+                self.pos[slot] = 0
+                self.pending_prompt[slot] = deque(req.prompt)
+
+    def step(self) -> int:
+        """One synchronized decode step across all slots; returns #active."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        tokens = np.zeros((self.B, 1), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self.pending_prompt[slot]:
+                tokens[slot, 0] = self.pending_prompt[slot].popleft()
+            elif req.generated:
+                tokens[slot, 0] = req.generated[-1]
+            else:
+                tokens[slot, 0] = req.prompt[-1]
+        next_tok, self.state = self._step(
+            self.params, jnp.asarray(tokens), self.state,
+            jnp.asarray(self.pos))
+        next_tok = np.asarray(next_tok)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            if self.pending_prompt[slot]:
+                continue  # still absorbing prompt; ignore sampled token
+            req.generated.append(int(next_tok[slot]))
+            hit_eos = (req.eos_id is not None
+                       and req.generated[-1] == req.eos_id)
+            if (len(req.generated) >= req.max_new_tokens or hit_eos
+                    or self.pos[slot] >= self.max_seq - 1):
+                req.done = True
+                self.completed.append(req)
+                self.active[slot] = None   # slot refilled next step
+        return sum(1 for r in self.active if r is not None)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self.queue:
+                break
+        return self.completed

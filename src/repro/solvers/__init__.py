@@ -1,0 +1,6 @@
+from repro.solvers.base import Solver, clip_by_global_norm
+from repro.solvers.solvers import (SOLVERS, Adafactor, Adam, AdamW, Momentum,
+                                   Sgd, make_solver)
+
+__all__ = ["Solver", "clip_by_global_norm", "SOLVERS", "Adafactor", "Adam",
+           "AdamW", "Momentum", "Sgd", "make_solver"]

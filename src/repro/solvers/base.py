@@ -1,0 +1,174 @@
+"""Solvers (nnabla's name for optimizers) — dual-plane like everything else.
+
+Eager plane (paper Listing 3/6 parity)::
+
+    solver = S.Adam(alpha=1e-3)
+    solver.set_parameters(nn.get_parameters())
+    loss.backward(loss_scale)
+    solver.scale_grad(1.0 / loss_scale)
+    if solver.check_inf_or_nan_grad(): ...   # skip + rescale
+    solver.update()
+
+Functional plane (used by the distributed train step)::
+
+    state = solver.init_state(params)
+    params, state = solver.step(params, grads, state)
+
+Mixed precision: when parameters are stored in fp16/bf16, the solver keeps an
+fp32 **master copy** in its state and updates that, casting back to storage
+dtype — the paper's "weights are managed in both FP-16 and 32" (§3.3).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.parameter import Parameter
+
+Params = dict[str, Any]
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> tuple[Params, jax.Array]:
+    """Global-norm gradient clipping (fp32 accumulation)."""
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    factor = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype), grads), gnorm
+
+
+class Solver:
+    name = "solver"
+
+    def __init__(self, lr: float = 1e-3):
+        self.lr = lr
+        # eager plane
+        self._params: dict[str, Parameter] = {}
+        self._eager_state: dict[str, Any] = {}
+        self._eager_step = 0
+
+    # ------------------------------------------------------------------ #
+    # per-leaf math, implemented by subclasses (always fp32)
+    # ------------------------------------------------------------------ #
+    def _init_slots(self, p32: jax.Array) -> dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def _update(self, p32: jax.Array, g32: jax.Array,
+                slots: dict[str, jax.Array], step: jax.Array,
+                lr: jax.Array) -> tuple[jax.Array, dict[str, jax.Array]]:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------ #
+    # functional plane
+    # ------------------------------------------------------------------ #
+    def init_state(self, params: Params) -> dict[str, Any]:
+        def master(p):
+            return p.astype(jnp.float32) if p.dtype != jnp.float32 else None
+        masters = {k: master(v) for k, v in params.items()}
+        masters = {k: v for k, v in masters.items() if v is not None}
+        slots = {k: self._init_slots(v.astype(jnp.float32))
+                 for k, v in params.items()}
+        return {"step": jnp.zeros((), jnp.int32),
+                "master": masters, "slots": slots}
+
+    def init_state_shapes(self, params: Params) -> dict[str, Any]:
+        return jax.eval_shape(self.init_state, params)
+
+    def step(self, params: Params, grads: Params, state: dict[str, Any],
+             lr: float | jax.Array | None = None) -> tuple[Params, dict[str, Any]]:
+        lr = jnp.asarray(self.lr if lr is None else lr, jnp.float32)
+        step_no = state["step"] + 1
+        new_params: Params = {}
+        new_masters: Params = {}
+        new_slots: dict[str, Any] = {}
+        for k, p in params.items():
+            g32 = grads[k].astype(jnp.float32)
+            p32 = state["master"].get(k, p).astype(jnp.float32)
+            np32, nslots = self._update(p32, g32, state["slots"][k],
+                                        step_no, lr)
+            new_slots[k] = nslots
+            if p.dtype != jnp.float32:
+                new_masters[k] = np32
+                new_params[k] = np32.astype(p.dtype)
+            else:
+                new_params[k] = np32
+        return new_params, {"step": step_no, "master": new_masters,
+                            "slots": new_slots}
+
+    # ------------------------------------------------------------------ #
+    # eager plane (paper API)
+    # ------------------------------------------------------------------ #
+    def set_parameters(self, params: dict[str, Parameter],
+                       reset: bool = True) -> None:
+        if reset:
+            self._params.clear()
+            self._eager_state.clear()
+            self._eager_step = 0
+        for k, p in params.items():
+            if not p.need_grad:
+                continue
+            self._params[k] = p
+            self._eager_state[k] = {
+                "master": (p.data.astype(jnp.float32)
+                           if p.dtype != jnp.float32 else None),
+                "slots": self._init_slots(p.data.astype(jnp.float32)),
+            }
+
+    def set_learning_rate(self, lr: float) -> None:
+        self.lr = lr
+
+    def zero_grad(self) -> None:
+        for p in self._params.values():
+            p.grad = None
+
+    def scale_grad(self, factor: float) -> None:
+        """Paper Listing 6: ``solver.scale_grad(1. / loss_scale)``."""
+        for p in self._params.values():
+            if p.grad is not None:
+                p.grad = (p.grad.astype(jnp.float32) * factor).astype(p.grad.dtype)
+
+    def check_inf_or_nan_grad(self) -> bool:
+        for p in self._params.values():
+            if p.grad is not None and not bool(jnp.isfinite(p.grad).all()):
+                return True
+        return False
+
+    def clip_grad_by_norm(self, clip_norm: float) -> None:
+        grads = {k: p.grad for k, p in self._params.items()
+                 if p.grad is not None}
+        clipped, _ = clip_by_global_norm(grads, clip_norm)
+        for k, g in clipped.items():
+            self._params[k].grad = g
+
+    def weight_decay(self, decay_rate: float) -> None:
+        """nnabla semantics: fold L2 decay into the gradients."""
+        for p in self._params.values():
+            if p.grad is not None:
+                p.grad = p.grad + decay_rate * p.data.astype(p.grad.dtype)
+
+    def update(self) -> None:
+        self._eager_step += 1
+        step = jnp.asarray(self._eager_step, jnp.int32)
+        lr = jnp.asarray(self.lr, jnp.float32)
+        for k, p in self._params.items():
+            if p.grad is None:
+                continue
+            st = self._eager_state[k]
+            p32 = st["master"] if st["master"] is not None \
+                else p.data.astype(jnp.float32)
+            np32, nslots = self._update(p32, p.grad.astype(jnp.float32),
+                                        st["slots"], step, lr)
+            st["slots"] = nslots
+            if st["master"] is not None:
+                st["master"] = np32
+                p.data = np32.astype(p.dtype)
+            else:
+                p.data = np32
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"{type(self).__name__}(lr={self.lr})"

@@ -1,0 +1,54 @@
+
+"""Learning-rate schedules (pure functions of the step, jit-safe).
+
+Composable with any solver: ``solver.step(params, grads, state,
+lr=schedule(step))`` on the functional plane, or
+``solver.set_learning_rate(float(schedule(i)))`` on the eager plane.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.full((), lr, jnp.float32)
+    return f
+
+
+def cosine(peak_lr: float, total_steps: int, warmup_steps: int = 0,
+           final_fraction: float = 0.1):
+    """Linear warmup -> cosine decay to final_fraction * peak (LLM default)."""
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * s / max(1, warmup_steps)
+        prog = jnp.clip((s - warmup_steps)
+                        / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        floor = peak_lr * final_fraction
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos).astype(jnp.float32)
+    return f
+
+
+def inverse_sqrt(peak_lr: float, warmup_steps: int = 1000):
+    def f(step):
+        s = jnp.maximum(jnp.asarray(step, jnp.float32), 1.0)
+        warm = peak_lr * s / max(1, warmup_steps)
+        decay = peak_lr * jnp.sqrt(warmup_steps / s)
+        return jnp.where(s < warmup_steps, warm, decay).astype(jnp.float32)
+    return f
+
+
+def step_decay(lr: float, gamma: float = 0.1, every: int = 30):
+    """The paper's ImageNet-era staircase (x0.1 every 30 epochs)."""
+    def f(step):
+        k = jnp.floor(jnp.asarray(step, jnp.float32) / every)
+        return (lr * gamma ** k).astype(jnp.float32)
+    return f
+
+
+SCHEDULES = {"constant": constant, "cosine": cosine,
+             "inverse_sqrt": inverse_sqrt, "step_decay": step_decay}

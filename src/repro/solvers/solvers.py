@@ -1,0 +1,130 @@
+"""Concrete solvers: Sgd, Momentum, Adam, AdamW, Adafactor-lite.
+
+All math in fp32 on master weights (see base.py). Adafactor is the
+beyond-paper memory saver for billion-parameter optimizer state (factored
+second moment: O(n+m) instead of O(nm) per matrix).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.solvers.base import Solver
+
+
+class Sgd(Solver):
+    name = "sgd"
+
+    def _init_slots(self, p32):
+        return {}
+
+    def _update(self, p32, g32, slots, step, lr):
+        return p32 - lr * g32, slots
+
+
+class Momentum(Solver):
+    name = "momentum"
+
+    def __init__(self, lr: float = 1e-3, momentum: float = 0.9):
+        super().__init__(lr)
+        self.momentum = momentum
+
+    def _init_slots(self, p32):
+        return {"v": jnp.zeros_like(p32)}
+
+    def _update(self, p32, g32, slots, step, lr):
+        v = self.momentum * slots["v"] + g32
+        return p32 - lr * v, {"v": v}
+
+
+class Adam(Solver):
+    name = "adam"
+
+    def __init__(self, alpha: float = 1e-3, beta1: float = 0.9,
+                 beta2: float = 0.999, eps: float = 1e-8):
+        super().__init__(alpha)
+        self.beta1, self.beta2, self.eps = beta1, beta2, eps
+
+    def _init_slots(self, p32):
+        return {"m": jnp.zeros_like(p32), "v": jnp.zeros_like(p32)}
+
+    def _bias_corrected_lr(self, step, lr):
+        t = step.astype(jnp.float32)
+        return lr * jnp.sqrt(1.0 - self.beta2 ** t) / (1.0 - self.beta1 ** t)
+
+    def _update(self, p32, g32, slots, step, lr):
+        m = self.beta1 * slots["m"] + (1 - self.beta1) * g32
+        v = self.beta2 * slots["v"] + (1 - self.beta2) * jnp.square(g32)
+        alpha_t = self._bias_corrected_lr(step, lr)
+        new_p = p32 - alpha_t * m / (jnp.sqrt(v) + self.eps)
+        return new_p, {"m": m, "v": v}
+
+
+class AdamW(Adam):
+    name = "adamw"
+
+    def __init__(self, alpha: float = 1e-3, beta1: float = 0.9,
+                 beta2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.01):
+        super().__init__(alpha, beta1, beta2, eps)
+        self.wd = weight_decay
+
+    def _update(self, p32, g32, slots, step, lr):
+        new_p, nslots = super()._update(p32, g32, slots, step, lr)
+        return new_p - lr * self.wd * p32, nslots
+
+
+class Adafactor(Solver):
+    """Factored second moment (Shazeer & Stern 2018), beta1=0 variant.
+
+    Optimizer state for a (n, m) matrix is n+m floats instead of 2nm —
+    the difference between fitting and not fitting a 72B model's optimizer
+    on 256 chips without ZeRO over more axes.
+    """
+
+    name = "adafactor"
+
+    def __init__(self, lr: float = 1e-2, eps: float = 1e-30,
+                 clip_threshold: float = 1.0, decay_rate: float = 0.8):
+        super().__init__(lr)
+        self.eps = eps
+        self.clip_threshold = clip_threshold
+        self.decay_rate = decay_rate
+
+    def _init_slots(self, p32):
+        if p32.ndim >= 2:
+            return {"vr": jnp.zeros(p32.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p32.shape[:-2] + p32.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros_like(p32)}
+
+    def _update(self, p32, g32, slots, step, lr):
+        t = step.astype(jnp.float32)
+        beta2t = 1.0 - jnp.power(t, -self.decay_rate)
+        g2 = jnp.square(g32) + self.eps
+        if p32.ndim >= 2:
+            vr = beta2t * slots["vr"] + (1 - beta2t) * jnp.mean(g2, axis=-1)
+            vc = beta2t * slots["vc"] + (1 - beta2t) * jnp.mean(g2, axis=-2)
+            denom_r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+            u = g32 / (jnp.sqrt(denom_r)[..., None] * jnp.sqrt(vc)[..., None, :])
+            nslots = {"vr": vr, "vc": vc}
+        else:
+            v = beta2t * slots["v"] + (1 - beta2t) * g2
+            u = g32 / jnp.sqrt(v)
+            nslots = {"v": v}
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+        return p32 - lr * u, nslots
+
+
+SOLVERS = {cls.name: cls for cls in
+           (Sgd, Momentum, Adam, AdamW, Adafactor)}
+
+
+def make_solver(name: str, **kwargs) -> Solver:
+    try:
+        cls = SOLVERS[name]
+    except KeyError as e:
+        raise ValueError(f"unknown solver {name!r}; one of {sorted(SOLVERS)}") from e
+    return cls(**kwargs)

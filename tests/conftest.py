@@ -1,0 +1,41 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_in_subprocess(code: str, devices: int = 1, timeout: int = 300) -> str:
+    """Run python code in a fresh process with N host devices.
+
+    Multi-device tests must not pollute this process's jax device count
+    (smoke tests and benches must keep seeing 1 device).
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if devices > 1:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={devices}").strip()
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_in_subprocess
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registry():
+    """Each test sees an empty global parameter registry."""
+    import repro.core as nn
+    nn.clear_parameters()
+    yield
+    nn.clear_parameters()

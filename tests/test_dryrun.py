@@ -1,0 +1,34 @@
+"""Launch-path regression: one real dry-run cell compiles on the production
+mesh (subprocess — 512 forced host devices must not leak into this process)."""
+
+import json
+
+
+CODE = """
+import json
+from repro.launch.dryrun import run_cell
+import pathlib, tempfile
+with tempfile.TemporaryDirectory() as d:
+    rec = run_cell("llama3.2-1b", "decode_32k", False, pathlib.Path(d),
+                   kernels="xla_chunked", probes=False)
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["n_chips"] == 256
+    r = rec["roofline"]
+    assert r["t_memory_s"] > 0 and r["bottleneck"] in (
+        "compute", "memory", "collective")
+    print("DRYRUN-OK", json.dumps(rec["collectives"]["by_kind_count"]))
+"""
+
+
+def test_dryrun_cell_compiles(subproc):
+    # dryrun.py sets its own XLA_FLAGS at import; devices=1 here is fine
+    out = subproc(CODE, devices=1, timeout=560)
+    assert "DRYRUN-OK" in out
+
+
+def test_mesh_shapes():
+    from repro.launch import mesh as M
+    import inspect
+    src = inspect.getsource(M.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '("pod", "data", "model")' in src

@@ -1,0 +1,117 @@
+
+"""NNP compatibility layer (paper §3/§3.1): round-trips + queries."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as nn
+import repro.core.functions as F
+import repro.core.parametric as PF
+from repro.fileformat import (ModelFile, NnpExecutor, export_model, load_nnp,
+                              query_unsupported, save_nnp, trace_network)
+from repro.fileformat.defs import NetworkDef, FunctionDef, VariableDef
+from repro.fileformat.onnx_mini import (export_onnx, import_onnx,
+                                        unsupported_for_export,
+                                        unsupported_for_import)
+from repro.models.cnn import lenet
+
+
+def test_lenet_roundtrip_identical_outputs(tmp_path):
+    x = np.random.default_rng(0).standard_normal((2, 1, 28, 28)).astype(np.float32)
+    xv = nn.Variable(data=x)
+    y = lenet(xv)
+    y.forward()
+    ref_out = np.asarray(y.data)
+
+    path = str(tmp_path / "lenet.nnp")
+    export_model("lenet", lambda x: lenet(x), {"x": x}, path)
+    mf, params = load_nnp(path)
+    out = NnpExecutor(mf.network("lenet"), params)(x=x)[0]
+    np.testing.assert_array_equal(np.asarray(out), ref_out)  # bitwise
+
+
+def test_parameters_roundtrip_bitwise(tmp_path):
+    x = np.ones((1, 1, 28, 28), np.float32)
+    path = str(tmp_path / "m.nnp")
+    export_model("m", lambda x: lenet(x), {"x": x}, path)
+    before = {k: np.asarray(v.data) for k, v in nn.get_parameters().items()}
+    _, params = load_nnp(path)
+    for k, v in before.items():
+        np.testing.assert_array_equal(params[k], v)
+
+
+def test_query_unsupported():
+    net = NetworkDef(name="n", functions=[
+        FunctionDef(name="f0", type="matmul", inputs=[], outputs=[]),
+        FunctionDef(name="f1", type="alien_op", inputs=[], outputs=[]),
+    ])
+    assert query_unsupported(net) == ["alien_op"]
+    with pytest.raises(ValueError, match="alien_op"):
+        NnpExecutor(net, {})
+
+
+def test_executor_runs_fresh_process_semantics(tmp_path):
+    """Load + execute WITHOUT the defining python code (registry cleared)."""
+    x = np.random.default_rng(1).standard_normal((1, 6)).astype(np.float32)
+
+    def model(x):
+        return F.tanh(PF.affine(x, 3, name="fc"))
+
+    xv = nn.Variable(data=x)
+    y = model(xv); y.forward()
+    want = np.asarray(y.data)
+    path = str(tmp_path / "t.nnp")
+    export_model("t", model, {"x": x}, path)
+
+    nn.clear_parameters()                     # "fresh process"
+    mf, params = load_nnp(path)
+    got = NnpExecutor(mf.network("t"), params)(x=x)[0]
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-6)
+
+
+def test_onnx_export_import_roundtrip(tmp_path):
+    x = np.random.default_rng(2).standard_normal((2, 4)).astype(np.float32)
+
+    def model(x):
+        return F.relu(PF.affine(x, 3, name="fc"))
+
+    net, params = trace_network("mini", model, {"x": x})
+    assert unsupported_for_export(net) == []
+    onnx = export_onnx(net, params)
+    assert {n["op_type"] for n in onnx["graph"]["node"]} >= {"MatMul", "Relu"}
+    back = import_onnx(onnx)
+    assert [f.type for f in back.functions] == [f.type for f in net.functions]
+    assert unsupported_for_import(onnx["graph"]) == []
+
+
+def test_onnx_unsupported_strictness():
+    net = NetworkDef(name="x", functions=[
+        FunctionDef(name="f", type="apply_rope", inputs=[], outputs=[])])
+    assert unsupported_for_export(net) == ["apply_rope"]
+    with pytest.raises(ValueError):
+        export_onnx(net, {}, strict=True)
+
+
+def test_model_file_messages_roundtrip(tmp_path):
+    """The full §3.1 message set survives save/load."""
+    from repro.fileformat.defs import (DatasetDef, ExecutorDef, GlobalConfig,
+                                       MonitorDef, OptimizerDef,
+                                       TrainingConfig, to_dict)
+    mf = ModelFile(
+        global_config=GlobalConfig(default_context="tpu|bf16"),
+        training_config=TrainingConfig(max_epoch=90, iter_per_epoch=100),
+        datasets=[DatasetDef(name="synth", batch_size=32)],
+        optimizers=[OptimizerDef(name="opt", solver="adam",
+                                 hyper={"alpha": 1e-3})],
+        monitors=[MonitorDef(name="loss", variable="loss")],
+        executors=[ExecutorDef(name="run", network="net")])
+    path = str(tmp_path / "cfg.nnp")
+    save_nnp(path, mf, {})
+    mf2, _ = load_nnp(path)
+    assert mf2.global_config.default_context == "tpu|bf16"
+    assert mf2.training_config.max_epoch == 90
+    assert mf2.optimizers[0].hyper["alpha"] == 1e-3
+    assert mf2.executors[0].name == "run"

@@ -1,0 +1,93 @@
+
+"""Property tests for F ops (hypothesis) against numpy semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core.functions as F
+
+shapes = st.sampled_from([(2, 3), (4,), (2, 2, 2), (1, 5)])
+floats = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+@given(shapes, st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_softmax_properties(shape, seed):
+    x = np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+    y = np.asarray(F.softmax(jnp.asarray(x)))
+    np.testing.assert_allclose(y.sum(-1), 1.0, rtol=1e-5)
+    assert (y >= 0).all()
+    # shift invariance
+    y2 = np.asarray(F.softmax(jnp.asarray(x + 100.0)))
+    np.testing.assert_allclose(y, y2, atol=1e-5)
+
+
+@given(shapes, st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_layer_norm_stats(shape, seed):
+    x = np.random.default_rng(seed).normal(3, 7, size=shape).astype(np.float32)
+    g = jnp.ones(shape[-1]); b = jnp.zeros(shape[-1])
+    y = np.asarray(F.layer_normalization(jnp.asarray(x), g, b))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_softmax_cross_entropy_matches_manual(seed):
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(4, 9)).astype(np.float32)
+    labels = rng.integers(0, 9, size=(4,))
+    got = np.asarray(F.softmax_cross_entropy(jnp.asarray(logits),
+                                             jnp.asarray(labels)))
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = -np.log(p[np.arange(4), labels])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_rope_preserves_norm(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(1, 6, 2, 8)).astype(np.float32)
+    cos, sin = F.rope_frequencies(8, 6)
+    y = np.asarray(F.apply_rope(jnp.asarray(x), cos, sin))
+    np.testing.assert_allclose(np.linalg.norm(y, axis=-1),
+                               np.linalg.norm(x, axis=-1), rtol=1e-4)
+
+
+def test_sdpa_matches_explicit_softmax():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 5, 2, 4)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 5, 2, 4)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 5, 2, 4)), jnp.float32)
+    out = np.asarray(F.scaled_dot_product_attention(q, k, v, causal=False))
+    # manual
+    logits = np.einsum("bqhd,bkhd->bhqk", q, k) / 2.0
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bhqk,bkhd->bqhd", p, v)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
+
+
+def test_conv_matches_numpy_direct():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(1, 1, 5, 5)).astype(np.float32)
+    w = rng.normal(size=(1, 1, 3, 3)).astype(np.float32)
+    y = np.asarray(F.convolution(jnp.asarray(x), jnp.asarray(w)))
+    want = np.zeros((1, 1, 3, 3), np.float32)
+    for i in range(3):
+        for j in range(3):
+            want[0, 0, i, j] = (x[0, 0, i:i+3, j:j+3] * w[0, 0]).sum()
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-5)
+
+
+def test_pooling():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 1, 4, 4)
+    y = np.asarray(F.max_pooling(x, kernel=(2, 2)))
+    np.testing.assert_array_equal(y[0, 0], [[5, 7], [13, 15]])
+    y2 = np.asarray(F.average_pooling(x, kernel=(2, 2)))
+    np.testing.assert_allclose(y2[0, 0], [[2.5, 4.5], [10.5, 12.5]])

@@ -1,0 +1,72 @@
+
+"""Flash-attention Pallas kernel vs jnp oracle: shape/dtype sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention as fa
+from repro.kernels.flash_attention import ref
+
+
+def rand(shape, dtype, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), dtype)
+
+
+SWEEP = [
+    # (B, Sq, Sk, Hq, Hkv, D, causal, window, dtype)
+    (1, 128, 128, 4, 4, 64, True, None, jnp.float32),
+    (2, 256, 256, 4, 2, 64, True, None, jnp.float32),
+    (1, 128, 128, 8, 1, 128, True, None, jnp.float32),   # MQA
+    (1, 100, 160, 4, 4, 64, False, None, jnp.float32),   # ragged + pad
+    (1, 256, 256, 4, 2, 64, True, 64, jnp.float32),      # windowed
+    (2, 128, 128, 4, 2, 128, True, None, jnp.bfloat16),
+    (1, 64, 64, 2, 2, 32, True, None, jnp.float16),
+]
+
+
+@pytest.mark.parametrize("B,Sq,Sk,Hq,Hkv,D,causal,window,dtype", SWEEP)
+def test_flash_vs_oracle(B, Sq, Sk, Hq, Hkv, D, causal, window, dtype):
+    q = rand((B, Sq, Hq, D), dtype, 1)
+    k = rand((B, Sk, Hkv, D), dtype, 2)
+    v = rand((B, Sk, Hkv, D), dtype, 3)
+    got = fa.flash_attention(q, k, v, causal=causal, window=window,
+                             block_q=64, block_k=64, interpret=True)
+    want = ref.mha_reference(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+DECODE_SWEEP = [
+    (1, 128, 4, 4, 64, jnp.float32),
+    (3, 512, 8, 2, 64, jnp.float32),
+    (2, 256, 8, 1, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,Smax,Hq,Hkv,D,dtype", DECODE_SWEEP)
+def test_flash_decode_vs_oracle(B, Smax, Hq, Hkv, D, dtype):
+    q = rand((B, 1, Hq, D), dtype, 4)
+    kc = rand((B, Smax, Hkv, D), dtype, 5)
+    vc = rand((B, Smax, Hkv, D), dtype, 6)
+    lengths = jnp.asarray(
+        np.random.default_rng(7).integers(1, Smax + 1, B), jnp.int32)
+    got = fa.flash_decode(q, kc, vc, lengths, block_k=128, interpret=True)
+    want = ref.decode_reference(q, kc, vc, lengths)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_block_size_invariance():
+    q = rand((1, 256, 4, 64), jnp.float32, 8)
+    k = rand((1, 256, 2, 64), jnp.float32, 9)
+    v = rand((1, 256, 2, 64), jnp.float32, 10)
+    outs = [np.asarray(fa.flash_attention(q, k, v, causal=True, block_q=bq,
+                                          block_k=bk, interpret=True))
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-5, rtol=1e-5)

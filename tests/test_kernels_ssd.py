@@ -1,0 +1,82 @@
+
+"""SSD Pallas kernel + chunked oracle vs naive recurrence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ssd import ref, ssd_kernel
+
+
+def make(B, S, H, P, G, N, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(B, S, H, P)), dtype),
+            jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32),
+            jnp.asarray(-rng.uniform(0.5, 2.0, H), jnp.float32),
+            jnp.asarray(rng.normal(size=(B, S, G, N)), dtype),
+            jnp.asarray(rng.normal(size=(B, S, G, N)), dtype),
+            jnp.asarray(rng.normal(size=H), jnp.float32))
+
+
+SWEEP = [
+    (1, 32, 2, 16, 1, 16, 8, jnp.float32),
+    (2, 64, 4, 32, 2, 16, 16, jnp.float32),
+    (1, 128, 4, 64, 1, 32, 32, jnp.float32),
+    (2, 64, 4, 32, 2, 16, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk,dtype", SWEEP)
+def test_kernel_vs_naive(B, S, H, P, G, N, chunk, dtype):
+    x, dt, A, Bm, Cm, D = make(B, S, H, P, G, N, dtype)
+    got, hk = ssd_kernel.ssd(x, dt, A, Bm, Cm, D, chunk=chunk,
+                             return_state=True, interpret=True)
+    want, hr = ref.ssd_naive(x, dt, A, Bm, Cm, D, return_state=True)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr),
+                               atol=tol, rtol=tol)
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from([8, 16, 32]),
+       st.sampled_from([1, 2]))
+@settings(max_examples=10, deadline=None)
+def test_chunked_oracle_vs_naive_property(seed, chunk, G):
+    B, S, H, P, N = 1, 64, 2, 8, 8
+    x, dt, A, Bm, Cm, D = make(B, S, H, P, G, N, seed=seed)
+    y1 = ref.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+    y2 = ref.ssd_naive(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_decode_chain_matches_scan():
+    B, S, H, P, G, N = 2, 16, 2, 8, 1, 8
+    x, dt, A, Bm, Cm, D = make(B, S, H, P, G, N, seed=5)
+    y_ref = ref.ssd_naive(x, dt, A, Bm, Cm, D)
+    h = jnp.zeros((B, H, P, N))
+    outs = []
+    for t in range(S):
+        y_t, h = ref.ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t],
+                                     Cm[:, t], D)
+        outs.append(y_t)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(y_ref), atol=1e-4, rtol=1e-3)
+
+
+def test_state_continuation():
+    """Split-sequence chunked runs chain exactly via h0."""
+    B, S, H, P, G, N = 1, 64, 2, 8, 1, 8
+    x, dt, A, Bm, Cm, D = make(B, S, H, P, G, N, seed=9)
+    full = ref.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=8)
+    y1, h1 = ref.ssd_chunked(x[:, :32], dt[:, :32], A, Bm[:, :32],
+                             Cm[:, :32], D, chunk=8, return_state=True)
+    y2 = ref.ssd_chunked(x[:, 32:], dt[:, 32:], A, Bm[:, 32:], Cm[:, 32:],
+                         D, chunk=8, h0=h1)
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(y1), np.asarray(y2)], 1),
+        np.asarray(full), atol=1e-4, rtol=1e-3)

@@ -1,0 +1,59 @@
+
+"""Dynamic loss scaling (paper §3.3 Listing 6 semantics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.precision.loss_scale import (all_finite, dynamic_scaler,
+                                        static_scaler)
+
+
+def test_halves_on_nonfinite_and_skips():
+    sc = dynamic_scaler(init_scale=1024.0, interval=4)
+    st = sc.init_state()
+    st2 = sc.next_state(st, jnp.asarray(False))
+    assert float(st2.scale) == 512.0
+    assert int(st2.counter) == 0
+    assert int(st2.total_skipped) == 1
+
+
+def test_doubles_after_interval_good_steps():
+    sc = dynamic_scaler(init_scale=1024.0, interval=3)
+    st = sc.init_state()
+    for _ in range(3):
+        st = sc.next_state(st, jnp.asarray(True))
+    assert float(st.scale) == 2048.0
+    assert int(st.counter) == 0
+
+
+def test_scale_and_unscale_roundtrip():
+    sc = dynamic_scaler(init_scale=8.0)
+    st = sc.init_state()
+    loss = jnp.asarray(2.0)
+    assert float(sc.scale_loss(loss, st)) == 16.0
+    grads = {"w": jnp.asarray([8.0, 16.0])}
+    un = sc.unscale_grads(grads, st)
+    np.testing.assert_allclose(np.asarray(un["w"]), [1.0, 2.0])
+
+
+def test_all_finite():
+    assert bool(all_finite({"a": jnp.ones(3)}))
+    assert not bool(all_finite({"a": jnp.asarray([1.0, np.inf])}))
+    assert not bool(all_finite({"a": jnp.asarray([np.nan])}))
+    assert bool(all_finite({"i": jnp.arange(3)}))  # ints ignored
+
+
+def test_static_scaler_noop_transitions():
+    sc = static_scaler(1.0)
+    st = sc.init_state()
+    st2 = sc.next_state(st, jnp.asarray(False))
+    assert float(st2.scale) == 1.0
+
+
+def test_bounds():
+    sc = dynamic_scaler(init_scale=2.0)
+    st = sc.init_state()
+    for _ in range(5):
+        st = sc.next_state(st, jnp.asarray(False))
+    assert float(st.scale) >= 1.0  # min_scale floor

@@ -1,0 +1,144 @@
+
+"""Per-arch smoke tests: reduced config, one forward + one train step on CPU,
+assert output shapes + no NaNs. Full configs are exercised by the dry-run."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as nn
+from repro.configs import ARCHS
+from repro.models.registry import get_model
+from repro.distributed.train_step import init_train_state, make_train_step
+from repro.precision.loss_scale import static_scaler
+from repro.solvers import Adam
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _inputs(cfg, b=2, s=32):
+    if cfg.ssm_state:
+        s = max(s, cfg.ssm_chunk * 2)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (b, s)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(1, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    if cfg.mrope:
+        pos = np.broadcast_to(np.arange(s, dtype=np.int32)[None, :, None],
+                              (b, s, 3))
+        batch["positions"] = jnp.asarray(np.ascontiguousarray(pos))
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_finite(arch):
+    cfg = ARCHS[arch].smoke()
+    api = get_model(cfg)
+    batch = _inputs(cfg)
+    fwd_kwargs = {k: v for k, v in batch.items() if k != "labels"}
+    params = nn.init(lambda **kw: api.forward(**kw), jax.random.key(0),
+                     **fwd_kwargs)
+    logits, aux = nn.apply(lambda **kw: api.forward(**kw), params,
+                           **fwd_kwargs)
+    b, s = batch["tokens"].shape
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/Inf in logits"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_one_train_step(arch):
+    cfg = dataclasses.replace(ARCHS[arch].smoke(), remat="none")
+    api = get_model(cfg)
+    batch = _inputs(cfg)
+
+    def loss_fn(p, b):
+        return nn.apply(lambda **kw: api.loss_fn(**kw), p, **b)
+
+    fwd_kwargs = {k: v for k, v in batch.items() if k != "labels"}
+    params = nn.init(lambda **kw: api.forward(**kw), jax.random.key(0),
+                     **fwd_kwargs)
+    solver = Adam(alpha=1e-3)
+    scaler = static_scaler(1.0)
+    state = init_train_state(params, solver, scaler)
+    step = make_train_step(loss_fn, solver, scaler)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(metrics["skipped"]) == 0
+    changed = any(
+        not np.array_equal(np.asarray(new_state.params[k]),
+                           np.asarray(params[k])) for k in params)
+    assert changed, f"{arch}: train step changed no parameters"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-370m",
+                                  "zamba2-1.2b", "whisper-medium"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode == full forward (cache correctness), per family."""
+    cfg = dataclasses.replace(ARCHS[arch].smoke(), remat="none")
+    api = get_model(cfg)
+    S = 8 if not cfg.ssm_state else cfg.ssm_chunk
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (1, S)), jnp.int32)
+    kwargs = {}
+    if cfg.family == "audio":
+        kwargs["frames"] = jnp.asarray(
+            rng.standard_normal((1, cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32)
+    params = nn.init(lambda t, **kw: api.forward(t, **kw), jax.random.key(0),
+                     toks, **kwargs)
+    full, _ = nn.apply(lambda t, **kw: api.forward(t, **kw), params, toks,
+                       **kwargs)
+
+    if cfg.family == "audio":
+        from repro.models import whisper
+        state = nn.apply(
+            lambda f: whisper.init_decode_state(cfg, f, S + 4, jnp.float32),
+            params, kwargs["frames"])
+    else:
+        state = api.decode_state_init(1, S + 4, jnp.float32)
+    outs = []
+    for i in range(S):
+        lg, state = nn.apply(
+            lambda t, s, p: api.decode_step(t, s, p), params,
+            toks[:, i:i + 1], state, jnp.asarray(i, jnp.int32))
+        outs.append(lg[:, 0])
+    stepped = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stepped),
+                               atol=5e-3, rtol=1e-2)
+
+
+def test_moe_capacity_drops_tokens_but_stays_finite():
+    cfg = dataclasses.replace(ARCHS["granite-moe-1b-a400m"].smoke(),
+                              capacity_factor=0.5, remat="none")
+    api = get_model(cfg)
+    batch = _inputs(cfg)
+    fwd_kwargs = {k: v for k, v in batch.items() if k != "labels"}
+    params = nn.init(lambda **kw: api.forward(**kw), jax.random.key(0),
+                     **fwd_kwargs)
+    logits, aux = nn.apply(lambda **kw: api.forward(**kw), params,
+                           **fwd_kwargs)
+    assert bool(jnp.isfinite(logits).all())
+    assert float(aux) > 0.0
+
+
+def test_param_counts_match_nameplate():
+    expected = {
+        "phi3.5-moe-42b-a6.6b": (41.9e9, 0.03),
+        "deepseek-coder-33b": (33.3e9, 0.03),
+        "llama3.2-1b": (1.24e9, 0.05),
+        "mistral-nemo-12b": (12.2e9, 0.05),
+        "qwen2-vl-72b": (72.7e9, 0.03),
+        "mamba2-370m": (0.37e9, 0.10),
+        "whisper-medium": (0.81e9, 0.10),
+    }
+    for arch, (want, tol) in expected.items():
+        got = ARCHS[arch].param_count()
+        assert abs(got - want) / want < tol, f"{arch}: {got:.3e} vs {want:.3e}"

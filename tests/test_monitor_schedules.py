@@ -1,0 +1,59 @@
+"""Monitors (nnabla.monitor parity) and LR schedules."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.monitor import Monitor, MonitorCSV, MonitorSeries
+from repro.solvers.schedules import cosine, inverse_sqrt, step_decay
+
+
+def test_series_interval_average(tmp_path, capsys):
+    mon = Monitor(tmp_path)
+    s = MonitorSeries("loss", mon, interval=5)
+    for i in range(10):
+        s.add(i, float(i))
+    s.close()
+    lines = (tmp_path / "loss.txt").read_text().strip().splitlines()
+    assert len(lines) == 2
+    idx, mean = lines[0].split()
+    assert idx == "4" and abs(float(mean) - 2.0) < 1e-9   # mean(0..4)
+
+
+def test_csv_roundtrip_and_append(tmp_path):
+    p = tmp_path / "m.csv"
+    m = MonitorCSV(p, ["loss", "lr"])
+    m.add(0, loss=1.5, lr=0.1)
+    m.add(1, loss=1.2, lr=0.1)
+    m.close()
+    m2 = MonitorCSV(p, ["loss", "lr"])  # append after "restart"
+    m2.add(2, loss=1.0, lr=0.05)
+    m2.close()
+    rows = MonitorCSV.read(p)
+    assert len(rows) == 3 and rows[2]["loss"] == 1.0
+
+
+def test_cosine_schedule_shape():
+    f = cosine(1.0, total_steps=100, warmup_steps=10, final_fraction=0.1)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(10)) - 1.0) < 1e-6
+    assert abs(float(f(100)) - 0.1) < 1e-6
+    # monotone decay after warmup
+    vals = [float(f(i)) for i in range(10, 100, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_inverse_sqrt_and_step_decay():
+    g = inverse_sqrt(1.0, warmup_steps=100)
+    assert abs(float(g(100)) - 1.0) < 1e-6
+    assert abs(float(g(400)) - 0.5) < 1e-6
+    h = step_decay(1.0, gamma=0.1, every=30)
+    assert abs(float(h(29)) - 1.0) < 1e-9
+    assert abs(float(h(30)) - 0.1) < 1e-7
+    assert abs(float(h(60)) - 0.01) < 1e-7
+
+
+def test_schedule_jit_safe():
+    import jax
+    f = cosine(3e-4, 1000, 50)
+    out = jax.jit(f)(jnp.asarray(500))
+    assert np.isfinite(float(out))

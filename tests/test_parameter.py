@@ -1,0 +1,75 @@
+
+"""Scoped registry semantics (paper §2.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as nn
+import repro.core.parametric as PF
+
+
+def test_scope_paths_and_reuse():
+    x = nn.Variable(data=np.ones((2, 4), np.float32))
+    with nn.parameter_scope("block1"):
+        PF.affine(x, 3)
+        with nn.parameter_scope("inner"):
+            PF.affine(x, 3)
+    keys = set(nn.get_parameters())
+    assert "block1/affine/W" in keys
+    assert "block1/inner/affine/W" in keys
+    # same scope+name -> same parameter object (reuse, not duplicate)
+    with nn.parameter_scope("block1"):
+        before = nn.get_parameter("affine/W")
+        PF.affine(x, 3)
+        assert nn.get_parameter("affine/W") is before
+
+
+def test_scoped_get_parameters_filters():
+    x = nn.Variable(data=np.ones((1, 2), np.float32))
+    with nn.parameter_scope("a"):
+        PF.affine(x, 1)
+    with nn.parameter_scope("b"):
+        PF.affine(x, 1)
+    with nn.parameter_scope("a"):
+        assert all(k.startswith("a/") for k in nn.get_parameters())
+
+
+def test_shape_conflict_raises():
+    x = nn.Variable(data=np.ones((2, 4), np.float32))
+    PF.affine(x, 3, name="c")
+    x2 = nn.Variable(data=np.ones((2, 5), np.float32))
+    with pytest.raises(ValueError):
+        PF.affine(x2, 3, name="c")
+
+
+def test_functional_read_missing_param_raises():
+    def model(t):
+        return PF.dense(t, 4, name="fc")
+    params = nn.init(model, jax.random.key(0), jnp.ones((1, 3)))
+    bad = {k + "_typo": v for k, v in params.items()}
+    with pytest.raises(KeyError):
+        nn.apply(model, bad, jnp.ones((1, 3)))
+
+
+def test_deterministic_init_per_path():
+    def model(t):
+        return PF.dense(t, 4, name="fc")
+    p1 = nn.init(model, jax.random.key(0), jnp.ones((1, 3)))
+    p2 = nn.init(model, jax.random.key(0), jnp.ones((1, 3)))
+    np.testing.assert_array_equal(np.asarray(p1["fc/kernel"]),
+                                  np.asarray(p2["fc/kernel"]))
+
+
+def test_need_grad_false_excluded():
+    nn.set_parameter("stats/mean", jnp.zeros(3), need_grad=False)
+    nn.set_parameter("w", jnp.zeros(3), need_grad=True)
+    assert "stats/mean" not in nn.get_parameters(grad_only=True)
+    assert "stats/mean" in nn.get_parameters(grad_only=False)
+
+
+def test_parameter_count():
+    nn.set_parameter("w", jnp.zeros((3, 4)))
+    nn.set_parameter("b", jnp.zeros((4,)))
+    assert nn.parameter_count() == 16

@@ -1,0 +1,59 @@
+
+"""dtype policies (paper §3.3 type_config) drive storage/compute dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as nn
+import repro.core.parametric as PF
+
+
+def _param_and_out(type_config):
+    nn.clear_parameters()
+    ctx = nn.get_extension_context("cpu", type_config=type_config)
+    with nn.context_scope(ctx):
+        def model(x):
+            return PF.dense(x, 4, name="fc")
+        params = nn.init(model, jax.random.key(0),
+                         jnp.ones((2, 3), ctx.policy.compute_dtype))
+        out = nn.apply(model, params,
+                       jnp.ones((2, 3), ctx.policy.compute_dtype))
+    return params["fc/kernel"].dtype, out.dtype
+
+
+def test_float_policy():
+    p, o = _param_and_out("float")
+    assert p == jnp.float32 and o == jnp.float32
+
+
+def test_half_policy_fp16_storage():
+    p, o = _param_and_out("half")
+    assert p == jnp.float16 and o == jnp.float16
+
+
+def test_bf16_policy_fp32_storage_bf16_compute():
+    p, o = _param_and_out("bf16")
+    assert p == jnp.float32   # master-style storage
+    assert o == jnp.bfloat16  # compute dtype
+
+
+def test_needs_loss_scaling():
+    assert nn.get_extension_context("cpu", type_config="half") \
+        .policy.needs_loss_scaling
+    assert not nn.get_extension_context("cpu", type_config="bf16") \
+        .policy.needs_loss_scaling
+
+
+def test_norms_stay_fp32_under_half():
+    nn.clear_parameters()
+    ctx = nn.get_extension_context("cpu", type_config="half")
+    with nn.context_scope(ctx):
+        def model(x):
+            return PF.layer_normalization(x, name="ln")
+        params = nn.init(model, jax.random.key(0),
+                         jnp.ones((2, 8), jnp.float16))
+        assert params["ln/gamma"].dtype == jnp.float32  # paper: BN in fp32
+        out = nn.apply(model, params, jnp.ones((2, 8), jnp.float16))
+        assert out.dtype == jnp.float16
+        assert bool(jnp.isfinite(out).all())

@@ -1,0 +1,45 @@
+
+"""Straggler monitor + elastic mesh policy."""
+
+import pytest
+
+from repro.distributed.resilience import ElasticPolicy, StragglerMonitor
+
+
+def test_steady_state_no_flags():
+    m = StragglerMonitor(warmup=4)
+    assert not any(m.observe(1.0 + 0.01 * (i % 3)).is_straggler
+                   for i in range(50))
+
+
+def test_sustained_slowdown_flagged():
+    m = StragglerMonitor(warmup=4, patience=3, sigma=4.0)
+    for _ in range(20):
+        m.observe(1.0)
+    flags = [m.observe(3.0).is_straggler for _ in range(5)]
+    assert any(flags)
+
+
+def test_single_spike_not_flagged():
+    m = StragglerMonitor(warmup=4, patience=3)
+    for _ in range(20):
+        m.observe(1.0)
+    assert not m.observe(5.0).is_straggler  # needs patience in a row
+    assert not m.observe(1.0).is_straggler
+
+
+def test_elastic_policy_contracts():
+    pol = ElasticPolicy(model_axis=16)
+    full = pol.choose(256)
+    assert full.shape == (16, 16)
+    after_loss = pol.choose(240)      # lost a host worth of chips
+    assert after_loss.chips <= 240
+    assert after_loss.shape == (8, 16)
+    tiny = pol.choose(8)
+    assert tiny.chips == 8
+
+
+def test_elastic_policy_raises_when_infeasible():
+    pol = ElasticPolicy(model_axis=16, min_data=2)
+    with pytest.raises(RuntimeError):
+        pol.choose(16)

@@ -1,0 +1,66 @@
+
+"""Roofline HLO parsing + term arithmetic (pure unit tests)."""
+
+from repro.launch.roofline import (CollectiveStats, parse_collectives,
+                                   roofline_terms, PEAK_FLOPS, HBM_BW,
+                                   LINK_BW)
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[16,512]{1,0} all-gather(bf16[1,512]{1,0} %p0), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %p1), replica_groups=[1,256]<=[256], to_apply=%sum
+  %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %p2), replica_groups=[16,16]<=[256], dimensions={0}
+  %a2a = bf16[8,128]{1,0} all-to-all(bf16[8,128]{1,0} %p3), replica_groups={{0,1,2,3}}
+  %cp = f32[256]{0} collective-permute(f32[256]{0} %p4), source_target_pairs={{0,1}}
+  %done = f32[8] all-reduce-done(f32[8] %x)
+}
+"""
+
+
+def test_parse_kinds_and_bytes():
+    st = parse_collectives(HLO)
+    assert st.by_kind_count["all-gather"] == 1
+    assert st.by_kind_count["all-reduce"] == 1   # -done line skipped
+    assert st.by_kind_count["reduce-scatter"] == 1
+    assert st.by_kind_count["all-to-all"] == 1
+    assert st.by_kind_count["collective-permute"] == 1
+    assert st.by_kind_bytes["all-gather"] == 1 * 512 * 2      # operand
+    assert st.by_kind_bytes["all-reduce"] == 1024 * 4
+    assert st.by_kind_bytes["all-to-all"] == 8 * 128 * 2
+    assert st.operand_bytes == sum(st.by_kind_bytes.values())
+
+
+def test_wire_model_factors():
+    st = parse_collectives(HLO)
+    ops = {o["kind"]: o for o in st.ops}
+    # AG: result*(g-1)/g with g=16
+    assert abs(ops["all-gather"]["wire_bytes"]
+               - 16 * 512 * 2 * 15 / 16) < 1
+    # AR: 2*operand*(g-1)/g with g=256
+    assert abs(ops["all-reduce"]["wire_bytes"]
+               - 2 * 1024 * 4 * 255 / 256) < 1
+    # explicit replica_groups {{0,1,2,3}} -> g=4
+    assert ops["all-to-all"]["group"] == 4
+
+
+def test_terms_and_bottleneck():
+    st = CollectiveStats({}, {}, operand_bytes=int(LINK_BW), wire_bytes=0.0,
+                         ops=[])
+    terms = roofline_terms({"flops": PEAK_FLOPS * 0.5,
+                            "bytes accessed": HBM_BW * 0.25}, st, 256)
+    assert abs(terms["t_compute_s"] - 0.5) < 1e-9
+    assert abs(terms["t_memory_s"] - 0.25) < 1e-9
+    assert abs(terms["t_collective_s"] - 1.0) < 1e-9
+    assert terms["bottleneck"] == "collective"
+    assert abs(terms["roofline_fraction"] - 0.5) < 1e-9
+
+
+def test_memory_adjustment_applies():
+    st = CollectiveStats({}, {}, 0, 0.0, [])
+    adj = {"attn_intermediate_bytes": HBM_BW * 1.0,
+           "attn_kernel_bytes": HBM_BW * 0.1,
+           "ssd_intermediate_bytes": 0.0, "ssd_kernel_bytes": 0.0}
+    terms = roofline_terms({"flops": 0.0, "bytes accessed": HBM_BW * 2.0},
+                           st, 256, mem_adjust=adj)
+    assert abs(terms["t_memory_raw_s"] - 2.0) < 1e-9
+    assert abs(terms["t_memory_s"] - 1.1) < 1e-9
