@@ -1,5 +1,6 @@
 
-"""Serving engine throughput: continuous batching vs sequential requests."""
+"""Serving engine throughput: continuous batching vs sequential requests,
+and chunked prefill vs token-by-token prompt absorption."""
 
 import jax
 import jax.numpy as jnp
@@ -17,21 +18,51 @@ CFG = ModelConfig(name="t", family="dense", n_layers=4, d_model=128,
                   head_dim=32, remat="none")
 
 
-def run(max_batch: int, n_requests: int = 8, new_tokens: int = 16) -> float:
+def make_engine(max_batch: int, max_seq: int, chunk: int) -> ServingEngine:
     nn.clear_parameters()
     api = get_model(CFG)
     params = nn.init(lambda t: T.forward(CFG, t), jax.random.key(0),
                      jnp.zeros((1, 8), jnp.int32))
-    eng = ServingEngine(api, params, max_batch=max_batch, max_seq=64)
+    return ServingEngine(api, params, max_batch=max_batch, max_seq=max_seq,
+                         chunk=chunk)
+
+
+def run(max_batch: int, n_requests: int = 8, new_tokens: int = 16,
+        prompt_len: int = 3, chunk: int = 16, max_seq: int = 64) -> float:
+    eng = make_engine(max_batch, max_seq, chunk)
     for i in range(n_requests):
-        eng.submit(Request(uid=i, prompt=[1 + i, 2, 3],
-                           max_new_tokens=new_tokens))
-    eng.step()  # warm the compiled step
+        prompt = [1 + (i + j) % (CFG.vocab_size - 1)
+                  for j in range(prompt_len)]
+        eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=new_tokens))
+    eng.step()  # warm the (B, chunk) prefill shape
+    eng.step()  # warm the (B, 1) decode shape
+    pre = sum(len(r.generated) for r in eng.completed) \
+        + sum(len(r.generated) for r in eng.active if r is not None)
     t0 = time.perf_counter()
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
-    toks = sum(len(r.generated) for r in done)
+    toks = sum(len(r.generated) for r in done) - pre  # steady-state only
     return toks / dt
+
+
+def run_prefill(chunk: int, prompt_len: int = 64, n_requests: int = 4,
+                new_tokens: int = 4) -> tuple[float, float]:
+    """Returns (wall seconds to drain, mean TTFT) — prompt-dominated load."""
+    eng = make_engine(4, 128, chunk)
+    # max_new 2 forces one decode step after absorption, so BOTH compiled
+    # step shapes (B, chunk) and (B, 1) are warm before timing
+    warm = Request(uid=-1, prompt=[1] * prompt_len, max_new_tokens=2)
+    eng.submit(warm)
+    eng.run_until_drained()
+    eng.completed.clear()
+    for i in range(n_requests):
+        prompt = [1 + (i + j) % (CFG.vocab_size - 1)
+                  for j in range(prompt_len)]
+        eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=new_tokens))
+    t0 = time.perf_counter()
+    eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    return dt, eng.metrics_summary().get("mean_ttft_s", 0.0)
 
 
 def main() -> None:
@@ -40,6 +71,15 @@ def main() -> None:
     emit("serving/sequential_tok_per_s", 1e6 / max(seq, 1e-9), f"{seq:.1f} tok/s")
     emit("serving/continuous_batch4_tok_per_s", 1e6 / max(cb, 1e-9),
          f"{cb:.1f} tok/s, x{cb / seq:.2f}")
+
+    # chunked prefill vs token-by-token absorption, 64-token prompts
+    t_tok, ttft_tok = run_prefill(chunk=1)
+    t_chk, ttft_chk = run_prefill(chunk=16)
+    emit("serving/prefill_tokbytok_s", t_tok * 1e6,
+         f"{t_tok:.2f}s drain, TTFT {ttft_tok * 1e3:.0f}ms")
+    emit("serving/prefill_chunk16_s", t_chk * 1e6,
+         f"{t_chk:.2f}s drain, TTFT {ttft_chk * 1e3:.0f}ms, "
+         f"x{t_tok / max(t_chk, 1e-9):.2f} faster")
 
 
 if __name__ == "__main__":

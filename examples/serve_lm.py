@@ -1,6 +1,9 @@
 
 """Batched serving with continuous batching: requests stream through a
-fixed-slot compiled decode step; slots refill without recompilation.
+fixed-slot compiled step; slots refill without recompilation. Prompts are
+absorbed through chunked prefill (several tokens per fused step) and each
+request carries its own sampling settings (temperature / top-k / top-p /
+seed; temperature 0 = greedy).
 
 Run: PYTHONPATH=src python examples/serve_lm.py
 """
@@ -23,11 +26,14 @@ def main():
     print(f"serving {cfg.name}: {cfg.n_layers}L d={cfg.d_model}")
     params = nn.init(lambda t: T.forward(cfg, t), jax.random.key(0),
                      jnp.zeros((1, 8), jnp.int32))
-    engine = ServingEngine(api, params, max_batch=4, max_seq=128)
+    engine = ServingEngine(api, params, max_batch=4, max_seq=128, chunk=8)
 
     prompts = [[1, 5, 9], [2, 6], [3, 7, 11, 13], [4, 8], [5, 9], [6, 10]]
     for i, p in enumerate(prompts):
-        engine.submit(Request(uid=i, prompt=p, max_new_tokens=12))
+        # even uids decode greedily, odd uids sample at temperature 0.8
+        engine.submit(Request(uid=i, prompt=p, max_new_tokens=12,
+                              temperature=0.0 if i % 2 == 0 else 0.8,
+                              top_k=40, top_p=0.95, seed=i))
 
     t0 = time.time()
     done = engine.run_until_drained()
@@ -37,6 +43,9 @@ def main():
         print(f"  req {r.uid}: prompt {r.prompt} -> {r.generated}")
     print(f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.0f} tok/s with continuous batching)")
+    m = engine.metrics_summary()
+    print(f"mean TTFT {m['mean_ttft_s'] * 1e3:.0f}ms, "
+          f"mean decode {m['mean_decode_tok_per_s']:.0f} tok/s")
 
 
 if __name__ == "__main__":

@@ -190,6 +190,33 @@ def mha_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(B, Sq, Hq, D).astype(q.dtype)
 
 
+def prefill_reference(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                      pos: jax.Array, *, scale: float | None = None
+                      ) -> jax.Array:
+    """Chunked-prefill attention: a (B, C, Hq, D) query chunk against a
+    (B, Smax, Hkv, D) cache whose rows were just written at per-row offsets
+    ``pos`` (B,).
+
+    Chunk-causal: query i of row b attends to cache entries j <= pos[b] + i.
+    Cache entries beyond the chunk (stale slots from an earlier occupant of
+    the row) are never visible because pos[b] + C - 1 bounds the window.
+    """
+    B, C, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    rep = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qh = q.reshape(B, C, Hkv, rep, D)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qh, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = pos[:, None] + jnp.arange(C)[None, :]               # (B, C)
+    valid = jnp.arange(Smax)[None, None, :] <= qpos[..., None]  # (B, C, Smax)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, Hq, D).astype(q.dtype)
+
+
 def decode_reference(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      lengths: jax.Array, *, scale: float | None = None
                      ) -> jax.Array:

@@ -49,10 +49,23 @@ def attention_decode(q, k_cache, v_cache, lengths, *, scale=None) -> jax.Array:
                            interpret=(mode == "pallas_interpret"))
 
 
+def attention_prefill(q, k_cache, v_cache, pos, *, scale=None) -> jax.Array:
+    """Chunk-causal attention for chunked prefill: q (B, C, Hq, D) against a
+    (B, Smax, Hkv, D) cache; query i of row b sees cache[: pos[b] + i + 1].
+
+    All modes currently lower to the XLA reference — the chunk is short and
+    the cache read is bandwidth-bound, so a dedicated Pallas kernel is a
+    later optimization that slots in behind this dispatch point.
+    """
+    return fa_ref.prefill_reference(q, k_cache, v_cache, pos, scale=scale)
+
+
 def ssd(x, dt, A, Bm, Cm, D=None, *, chunk: int = 64, h0=None,
         return_state: bool = False, unroll: int | bool = 1):
     mode = _ctx.get_default_context().kernels
-    if mode in ("xla", "xla_chunked"):
+    # The Pallas kernel always starts from h=0; stateful continuation
+    # (chunked prefill) goes through the chunked-jnp path in every mode.
+    if mode in ("xla", "xla_chunked") or h0 is not None:
         return ssd_ref.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk, h0=h0,
                                    return_state=return_state, unroll=unroll)
     from repro.kernels.ssd import ssd_kernel

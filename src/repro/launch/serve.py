@@ -1,7 +1,19 @@
-"""Serving driver: continuous-batching decode for any assigned architecture.
+"""Serving driver: continuous batching + chunked prefill for any LM arch.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --requests 8 --max-new 16
+      --requests 8 --max-new 16 --prompt-len 64 --chunk 16 \
+      --temperature 0.8 --top-k 40 --top-p 0.95
+
+Flags:
+  --chunk N        prompt tokens absorbed per slot per prefill step (one
+                   fused call writes the KV cache / SSM state for the whole
+                   chunk); 1 falls back to token-by-token absorption
+  --temperature T  sampling temperature for all requests; 0 = greedy argmax
+  --top-k K        keep only the K highest-probability tokens (<= 0 = off)
+  --top-p P        nucleus sampling: keep the smallest token set with
+                   cumulative probability >= P (>= 1 = off)
+
+Per-request metrics (TTFT, queue wait, decode tok/s) print at the end.
 """
 
 from __future__ import annotations
@@ -19,6 +31,14 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=0,
+                    help="fixed prompt length; 0 = random short prompts")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk size (1 = token-by-token)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -46,21 +66,31 @@ def main(argv=None) -> int:
                      jnp.zeros((1, S0), jnp.int32))
 
     engine = ServingEngine(api, params, max_batch=args.max_batch,
-                           max_seq=args.max_seq)
+                           max_seq=args.max_seq, chunk=args.chunk)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
-        plen = int(rng.integers(2, 6))
+        plen = args.prompt_len or int(rng.integers(2, 6))
         prompt = rng.integers(1, cfg.vocab_size, plen).tolist()
         engine.submit(Request(uid=i, prompt=prompt,
-                              max_new_tokens=args.max_new))
+                              max_new_tokens=args.max_new,
+                              temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed + i))
     t0 = time.time()
     done = engine.run_until_drained()
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in done)
     for r in sorted(done, key=lambda r: r.uid)[:4]:
-        print(f"  req {r.uid}: {r.prompt} -> {r.generated[:8]}...")
+        print(f"  req {r.uid}: {r.prompt[:6]}{'...' if len(r.prompt) > 6 else ''}"
+              f" -> {r.generated[:8]}...")
     print(f"{len(done)} requests, {toks} tokens, {dt:.2f}s "
           f"-> {toks / dt:.1f} tok/s", flush=True)
+    m = engine.metrics_summary()
+    if m:
+        print(f"mean TTFT {m['mean_ttft_s'] * 1e3:.1f}ms | "
+              f"mean queue wait {m['mean_queue_wait_s'] * 1e3:.1f}ms | "
+              f"mean decode {m['mean_decode_tok_per_s']:.1f} tok/s",
+              flush=True)
     return 0
 
 

@@ -126,19 +126,9 @@ def state_specs(cfg: ModelConfig, batch: int, max_seq: int,
                    "v": jax.ShapeDtypeStruct(kv_shape, dtype)}}
 
 
-def decode_step(cfg: ModelConfig, tokens, state: dict[str, Any],
-                pos: jax.Array, positions=None):
-    B, S = tokens.shape
-    if positions is None:
-        positions = T.default_positions(cfg, B, S, offset=pos)
-    x = T.embed_tokens(cfg, tokens)
-    cos, sin = T.rope_tables(cfg, positions)
-
-    shared = nn.capture(
-        "shared_attn", lambda: _shared_block(cfg, x, cos, sin))
-
+def _site_map(cfg: ModelConfig) -> jax.Array:
+    """Layer idx -> attention-site index (or -1 for mamba-only layers)."""
     every = max(1, cfg.attn_every)
-    # map layer idx -> attention-site index (or -1)
     site_of_layer = []
     s = 0
     for i in range(cfg.n_layers):
@@ -147,12 +137,22 @@ def decode_step(cfg: ModelConfig, tokens, state: dict[str, Any],
             s += 1
         else:
             site_of_layer.append(-1)
-    site_map = jnp.asarray(site_of_layer, jnp.int32)
+    return jnp.asarray(site_of_layer, jnp.int32)
+
+
+def _scan_decode_layers(cfg: ModelConfig, x, state: dict[str, Any],
+                        cos, sin, pos, ssm_block):
+    """Shared decode/prefill layer scan: per layer a mamba update via
+    ``ssm_block(h_normed, layer_state) -> (out, new_state)`` plus the
+    shared attention block (against its per-site KV cache) at attention
+    sites. Returns (hidden, new_state_dict)."""
+    shared = nn.capture(
+        "shared_attn", lambda: _shared_block(cfg, x, cos, sin))
+    site_map = _site_map(cfg)
 
     def block(carry, idx, ssm_layer_state):
         h, kv = carry
-        out, new_ssm = M.mamba2_block_step(cfg, T.norm(cfg, h, "ln"),
-                                           ssm_layer_state)
+        out, new_ssm = ssm_block(T.norm(cfg, h, "ln"), ssm_layer_state)
         h = h + out
         site = site_map[idx]
 
@@ -178,5 +178,39 @@ def decode_step(cfg: ModelConfig, tokens, state: dict[str, Any],
     (x, kv), new_ssm = nn.layer_stack_with_output(
         "layers", cfg.n_layers, block, (x, state["kv"]), xs=state["ssm"],
         unroll=cfg.scan_unroll)
+    return x, {"ssm": new_ssm, "kv": kv}
+
+
+def decode_step(cfg: ModelConfig, tokens, state: dict[str, Any],
+                pos: jax.Array, positions=None):
+    B, S = tokens.shape
+    if positions is None:
+        positions = T.default_positions(cfg, B, S, offset=pos)
+    x = T.embed_tokens(cfg, tokens)
+    cos, sin = T.rope_tables(cfg, positions)
+    x, new_state = _scan_decode_layers(
+        cfg, x, state, cos, sin, pos,
+        lambda h, s: M.mamba2_block_step(cfg, h, s))
     x = T.norm(cfg, x, "ln_final")
-    return T.lm_head(cfg, x), {"ssm": new_ssm, "kv": kv}
+    return T.lm_head(cfg, x), new_state
+
+
+def prefill(cfg: ModelConfig, tokens, state: dict[str, Any],
+            pos: jax.Array, length: jax.Array, positions=None):
+    """Chunked prefill: absorb a (B, C) prompt chunk into the SSM state and
+    the per-site KV caches in one fused call. ``pos`` (B,) is each row's KV
+    write offset; ``length`` (B,) counts valid tokens per right-padded row.
+    Returns logits (B, 1, V) at each row's last valid position + new state."""
+    B, C = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    if positions is None:
+        positions = T.default_positions(cfg, B, C, offset=pos)
+    x = T.embed_tokens(cfg, tokens)
+    cos, sin = T.rope_tables(cfg, positions)
+    x, new_state = _scan_decode_layers(
+        cfg, x, state, cos, sin, pos,
+        lambda h, s: M.mamba2_block_prefill(cfg, h, s, length))
+    x = T.gather_last_valid(x, length)
+    x = T.norm(cfg, x, "ln_final")
+    return T.lm_head(cfg, x), new_state

@@ -106,6 +106,23 @@ def _split_proj(cfg, d, zxbcdt):
     return z, xBC, dt
 
 
+def _in_proj_step(cfg: ModelConfig, p: dict[str, Any], x):
+    """Decode/prefill in-projection: x (B, S, d) -> (z, xBC, dt, conv_w),
+    unifying the split and fused parameter layouts."""
+    if p["split"]:
+        z = jnp.einsum("bsd,dk->bsk", x, p["w_z"])
+        xBC = jnp.concatenate(
+            [jnp.einsum("bsd,dk->bsk", x, p["w_x"]),
+             jnp.einsum("bsd,dk->bsk", x, p["w_bc"])], axis=-1)
+        dt = jnp.einsum("bsd,dk->bsk", x, p["w_dt"])
+        conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=0)
+    else:
+        zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+        z, xBC, dt = _split_proj(cfg, x.shape[-1], zxbcdt)
+        conv_w = p["conv_w"]
+    return z, xBC, dt, conv_w
+
+
 def _gated_norm(y, z, gamma, eps=1e-6):
     yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
     ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
@@ -192,18 +209,7 @@ def mamba2_block_step(cfg: ModelConfig, x, state: dict[str, Any],
     assert S == 1
     d_inner, H, P, G, N, conv_ch = _dims(cfg, d)
     p = _block_params(cfg, d, name)
-
-    if p["split"]:
-        z = jnp.einsum("bsd,dk->bsk", x, p["w_z"])
-        xBC = jnp.concatenate(
-            [jnp.einsum("bsd,dk->bsk", x, p["w_x"]),
-             jnp.einsum("bsd,dk->bsk", x, p["w_bc"])], axis=-1)
-        dt = jnp.einsum("bsd,dk->bsk", x, p["w_dt"])
-        conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=0)
-    else:
-        zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
-        z, xBC, dt = _split_proj(cfg, d, zxbcdt)
-        conv_w = p["conv_w"]
+    z, xBC, dt, conv_w = _in_proj_step(cfg, p, x)
 
     window = jnp.concatenate([state["conv"], xBC.astype(state["conv"].dtype)],
                              axis=1)                      # (B, conv, ch)
@@ -221,6 +227,61 @@ def mamba2_block_step(cfg: ModelConfig, x, state: dict[str, Any],
 
     y_t, h_new = K.ssd_decode_step(state["h"], x_t, dt_t, A, B_t, C_t, p["D"])
     y = y_t.reshape(B, 1, d_inner)
+    y = _gated_norm(y, z, p["gamma"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    return out, {"h": h_new, "conv": new_conv}
+
+
+def mamba2_block_prefill(cfg: ModelConfig, x, state: dict[str, Any],
+                         length: jax.Array, *, name: str = "mamba"):
+    """Chunked-prefill step: absorb a (B, C, d) chunk carrying SSM state.
+
+    ``state`` as in :func:`mamba2_block_step`; ``length`` (B,) counts the
+    valid tokens per row (rows right-padded to C). The conv runs over the
+    carried ring buffer concatenated with the chunk, and the SSD continues
+    from ``state["h"]``. Pads are neutralized by forcing dt -> 0 (decay 1,
+    zero input: an identity state transition) and the new conv window is
+    sliced per row to end at the last valid token.
+
+    Returns (out (B, C, d) — pad positions garbage — and the new state).
+    """
+    B, C, d = x.shape
+    d_inner, H, P, G, N, conv_ch = _dims(cfg, d)
+    p = _block_params(cfg, d, name)
+    z, xBC, dt, conv_w = _in_proj_step(cfg, p, x)
+
+    # causal conv over [carried window | chunk] — same math as the decode
+    # step's per-token window, C tokens at a time
+    window = jnp.concatenate(
+        [state["conv"], xBC.astype(state["conv"].dtype)], axis=1)
+    wt = jnp.swapaxes(window, 1, 2).astype(jnp.float32)   # (B, ch, k-1+C)
+    w = conv_w[:, 0, :].astype(jnp.float32)               # (ch, k)
+    conv = jnp.zeros((B, conv_ch, C), jnp.float32)
+    for j in range(cfg.ssm_conv):
+        conv = conv + wt[:, :, j:j + C] * w[:, j][None, :, None]
+    conv = conv + p["conv_b"].astype(jnp.float32)[None, :, None]
+    xBC_o = jnp.swapaxes(jax.nn.silu(conv), 1, 2).astype(x.dtype)  # (B,C,ch)
+
+    # next chunk's window: the k-1 entries ending at each row's last valid
+    # token (pads live past index length + k - 2, so they never enter)
+    new_conv = jax.vmap(
+        lambda row, l: lax.dynamic_slice(
+            row, (l, 0), (cfg.ssm_conv - 1, conv_ch)))(
+        window, jnp.asarray(length, jnp.int32))
+
+    x_ssm = xBC_o[..., :d_inner].reshape(B, C, H, P)
+    Bm = xBC_o[..., d_inner:d_inner + G * N].reshape(B, C, G, N)
+    Cm = xBC_o[..., d_inner + G * N:].reshape(B, C, G, N)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    valid = jnp.arange(C)[None, :] < jnp.asarray(length, jnp.int32)[:, None]
+    dtf = dtf * valid[..., None].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+
+    ck = cfg.ssm_chunk if C % cfg.ssm_chunk == 0 else C
+    y, h_new = K.ssd(x_ssm, dtf, A, Bm, Cm, p["D"], chunk=min(ck, C),
+                     h0=state["h"], return_state=True,
+                     unroll=cfg.scan_unroll is True)
+    y = y.reshape(B, C, d_inner)
     y = _gated_norm(y, z, p["gamma"])
     out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
     return out, {"h": h_new, "conv": new_conv}
@@ -293,5 +354,27 @@ def decode_step(cfg: ModelConfig, tokens, state: dict[str, Any],
 
     x, new_state = nn.layer_stack_with_output(
         "layers", cfg.n_layers, block, x, xs=state, unroll=cfg.scan_unroll)
+    x = T.norm(cfg, x, "ln_final")
+    return T.lm_head(cfg, x), new_state
+
+
+def prefill(cfg: ModelConfig, tokens, state: dict[str, Any],
+            pos: jax.Array, length: jax.Array, positions=None):
+    """Chunked prefill: absorb a (B, C) prompt chunk into the SSM state in
+    one fused call. ``pos`` is unused (the state is position-free); ``length``
+    (B,) counts valid tokens per right-padded row. Returns logits (B, 1, V)
+    at each row's last valid position plus the updated state."""
+    del pos, positions
+    length = jnp.asarray(length, jnp.int32)
+    x = T.embed_tokens(cfg, tokens)
+
+    def block(h, idx, layer_state):
+        out, new_state = mamba2_block_prefill(
+            cfg, T.norm(cfg, h, "ln"), layer_state, length)
+        return h + out, new_state
+
+    x, new_state = nn.layer_stack_with_output(
+        "layers", cfg.n_layers, block, x, xs=state, unroll=cfg.scan_unroll)
+    x = T.gather_last_valid(x, length)
     x = T.norm(cfg, x, "ln_final")
     return T.lm_head(cfg, x), new_state

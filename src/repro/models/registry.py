@@ -2,7 +2,15 @@
 
 ``ModelApi`` is what the launcher, dry-run, serving and tests program
 against: ``loss_fn(tokens, labels, **extras)``, ``forward``, ``decode_step``,
-plus shape-struct providers for inputs and decode state.
+``prefill`` (chunked prompt absorption for serving), plus shape-struct
+providers for inputs and decode state.
+
+Decode-state convention: every state leaf carries the layer (or attention
+site) axis first and the batch axis second — the serving engine relies on
+axis 1 being batch when it zeroes a slot's recurrent state on reuse. KV
+cache leaves must be keyed ``"k"``/``"v"``: the engine skips them when
+resetting (they are positionally overwritten and length-masked), so any
+other key is treated as recurrent state and zeroed.
 """
 
 from __future__ import annotations
@@ -26,6 +34,8 @@ class ModelApi:
     decode_step: Callable | None # (tokens, state, pos, **extras) -> (logits, state)
     decode_state_specs: Callable | None  # (batch, max_seq) -> pytree of SDS
     decode_state_init: Callable | None
+    # (tokens (B,C), state, pos (B,), length (B,)) -> (logits (B,1,V), state)
+    prefill: Callable | None = None
 
     def input_specs(self, shape: ShapeConfig,
                     cache_dtype=jnp.bfloat16) -> dict[str, Any]:
@@ -67,6 +77,8 @@ def _lm_api(cfg: ModelConfig) -> ModelApi:
             transformer.kv_cache_specs(cfg, b, s, dt),
         decode_state_init=lambda b, s, dt=jnp.bfloat16:
             transformer.init_kv_cache(cfg, b, s, dt),
+        prefill=lambda tokens, state, pos, length, **kw:
+            transformer.prefill(cfg, tokens, state, pos, length, **kw),
     )
 
 
@@ -83,6 +95,8 @@ def _ssm_api(cfg: ModelConfig) -> ModelApi:
             mamba.state_specs(cfg, b, dt),
         decode_state_init=lambda b, s, dt=jnp.bfloat16:
             mamba.init_state(cfg, b, dt),
+        prefill=lambda tokens, state, pos, length, **kw:
+            mamba.prefill(cfg, tokens, state, pos, length, **kw),
     )
 
 
@@ -98,6 +112,8 @@ def _hybrid_api(cfg: ModelConfig) -> ModelApi:
             hybrid.state_specs(cfg, b, s, dt),
         decode_state_init=lambda b, s, dt=jnp.bfloat16:
             hybrid.init_state(cfg, b, s, dt),
+        prefill=lambda tokens, state, pos, length, **kw:
+            hybrid.prefill(cfg, tokens, state, pos, length, **kw),
     )
 
 

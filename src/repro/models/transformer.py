@@ -189,16 +189,21 @@ def attention(cfg: ModelConfig, x, cos, sin, *, name: str = "attn",
                 lambda c, n, p: lax.dynamic_update_slice(c, n, (p, 0, 0)))
             k_cache = upd(k_cache, k.astype(k_cache.dtype), pos_arr)
             v_cache = upd(v_cache, v.astype(v_cache.dtype), pos_arr)
-            lengths = pos_arr + S
+            row_pos = pos_arr
         else:
             k_cache = lax.dynamic_update_slice(
                 k_cache, k.astype(k_cache.dtype), (0, cache_pos, 0, 0))
             v_cache = lax.dynamic_update_slice(
                 v_cache, v.astype(v_cache.dtype), (0, cache_pos, 0, 0))
-            lengths = jnp.full((B,), cache_pos + S, jnp.int32)
+            row_pos = jnp.full((B,), pos_arr, jnp.int32)
         k_cache = constrain(k_cache, "batch", "kv_seq", "kv_heads", "head_dim")
         v_cache = constrain(v_cache, "batch", "kv_seq", "kv_heads", "head_dim")
-        y = K.attention_decode(q, k_cache, v_cache, lengths)
+        if S > 1:
+            # chunked prefill: queries must stay causal *within* the chunk
+            # (query i sees cache[: pos + i + 1]), not all see pos + S.
+            y = K.attention_prefill(q, k_cache, v_cache, row_pos)
+        else:
+            y = K.attention_decode(q, k_cache, v_cache, row_pos + 1)
         new_cache = (k_cache, v_cache)
     else:
         y = K.attention(q, k, v, causal=causal and cross_kv is None,
@@ -235,18 +240,26 @@ def moe_capacity(cfg: ModelConfig, group_size: int) -> int:
     return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
 
 
-def moe_block(cfg: ModelConfig, x, *, name: str = "moe"):
+def moe_block(cfg: ModelConfig, x, *, name: str = "moe", token_mask=None):
     """Top-k token-choice MoE with fixed expert capacity (token dropping).
 
     Dispatch/combine are one-hot einsums — fixed shapes, TPU-friendly; the
     experts dim is sharded over 'model' (expert parallelism) so the dispatched
     activations move through an all-to-all.
+    ``token_mask`` (B, S) bool: False tokens (chunked-prefill pads) are
+    dropped from routing entirely so they cannot consume expert capacity.
     Returns (y, aux_loss).
     """
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
     T = B * S
     Gs = min(cfg.moe_group_size, T)
+    if T % Gs and token_mask is not None:
+        # ragged token count: one dispatch group. Serving-only (chunks are
+        # small); training keeps the loud assert below — silently setting
+        # Gs = T there would scale capacity with T and blow up the
+        # dispatch tensors instead of flagging a bad config.
+        Gs = T
     nG = T // Gs
     assert nG * Gs == T, (T, Gs)
     C = moe_capacity(cfg, Gs)
@@ -266,6 +279,10 @@ def moe_block(cfg: ModelConfig, x, *, name: str = "moe"):
     # position of each (token, choice) in its expert's queue
     oh_flat = jax.nn.one_hot(expert_idx.reshape(nG, Gs * k), E,
                              dtype=jnp.int32)                  # (nG,Gs*k,E)
+    if token_mask is not None:
+        # zeroed one-hots make pads rank -1 in every queue -> never kept
+        tm = jnp.repeat(token_mask.reshape(nG, Gs), k, axis=1)
+        oh_flat = oh_flat * tm[..., None].astype(jnp.int32)
     pos_flat = jnp.cumsum(oh_flat, axis=1) * oh_flat - 1
     pos_tok = pos_flat.max(-1).reshape(nG, Gs, k)              # (nG,Gs,k)
     keep = (pos_tok >= 0) & (pos_tok < C)
@@ -315,7 +332,7 @@ def moe_block(cfg: ModelConfig, x, *, name: str = "moe"):
 # --------------------------------------------------------------------------- #
 
 def decoder_block(cfg: ModelConfig, x, cos, sin, *, cache=None,
-                  cache_pos=None, use_rope: bool = True):
+                  cache_pos=None, use_rope: bool = True, token_mask=None):
     """Pre-norm block. Returns (x, aux, new_cache)."""
     h = norm(cfg, x, "ln_attn")
     a, new_cache = attention(cfg, h, cos, sin, cache=cache,
@@ -323,7 +340,7 @@ def decoder_block(cfg: ModelConfig, x, cos, sin, *, cache=None,
     x = x + a
     h = norm(cfg, x, "ln_mlp")
     if cfg.family == "moe":
-        m, aux = moe_block(cfg, h)
+        m, aux = moe_block(cfg, h, token_mask=token_mask)
     else:
         m, aux = mlp(cfg, h), jnp.zeros((), jnp.float32)
     return x + m, aux, new_cache
@@ -471,5 +488,48 @@ def decode_step(cfg: ModelConfig, tokens, cache: dict[str, Any],
     x, new_cache = nn.layer_stack_with_output(
         "layers", cfg.n_layers, block, x,
         xs={"k": cache["k"], "v": cache["v"]}, unroll=cfg.scan_unroll)
+    x = norm(cfg, x, "ln_final")
+    return lm_head(cfg, x), new_cache
+
+
+def gather_last_valid(x: jax.Array, length: jax.Array) -> jax.Array:
+    """(B, C, d) -> (B, 1, d), picking position length[b]-1 per row."""
+    idx = jnp.maximum(jnp.asarray(length, jnp.int32) - 1, 0)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)
+
+
+def prefill(cfg: ModelConfig, tokens, cache: dict[str, Any],
+            pos: jax.Array, length: jax.Array, positions=None):
+    """Chunked prefill: absorb a (B, C) prompt chunk into the KV cache.
+
+    ``pos`` (B,) is each row's cache write offset; ``length`` (B,) the number
+    of valid tokens in the chunk (rows are right-padded to C). One fused call
+    writes K/V for the whole chunk and returns logits at each row's last
+    valid position, shape (B, 1, V), plus the updated cache — replacing C
+    teacher-forced decode steps. Pad positions produce garbage logits that
+    the gather skips, their cache entries are overwritten by the next chunk
+    before any query can attend to them, and they are masked out of MoE
+    routing so they cannot steal expert capacity from valid tokens.
+    """
+    B, C = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    if positions is None:
+        positions = default_positions(cfg, B, C, offset=pos)
+    x = embed_tokens(cfg, tokens)
+    cos, sin = rope_tables(cfg, positions)
+    valid = jnp.arange(C)[None, :] < length[:, None]
+
+    def block(h, idx, layer_cache):
+        h, _, new_cache = decoder_block(cfg, h, cos, sin,
+                                        cache=(layer_cache["k"],
+                                               layer_cache["v"]),
+                                        cache_pos=pos, token_mask=valid)
+        return h, {"k": new_cache[0], "v": new_cache[1]}
+
+    x, new_cache = nn.layer_stack_with_output(
+        "layers", cfg.n_layers, block, x,
+        xs={"k": cache["k"], "v": cache["v"]}, unroll=cfg.scan_unroll)
+    x = gather_last_valid(x, length)
     x = norm(cfg, x, "ln_final")
     return lm_head(cfg, x), new_cache

@@ -1,22 +1,40 @@
-"""Serving runtime: batched decode with continuous batching (lite).
+"""Serving runtime: continuous batching with chunked prefill and sampling.
 
-A fixed-slot decode batch (compiled once); requests stream in and out of
-slots without recompilation:
+A fixed-slot batch (compiled once per step shape); requests stream in and
+out of slots without recompilation:
 
-* each slot carries its own position (per-row KV-cache writes via the
-  vmap'd scatter in the attention decode path);
-* a freed slot (EOS / max_tokens) is refilled from the queue on the next
-  step — no draining barrier, the Orca/vLLM scheduling insight on top of a
-  fixed-shape TPU step;
-* prompts are absorbed via teacher-forced decode steps (a dedicated chunked
-  prefill step is the recorded follow-up optimization).
+* each slot carries its own position (per-row KV-cache / SSM-state writes
+  via the vmap'd scatters in the model prefill/decode paths);
+* a freed slot (EOS / max_tokens / cache full) is refilled from the queue on
+  the next step — no draining barrier, the Orca/vLLM scheduling insight on
+  top of a fixed-shape TPU step — and the new occupant's state rows are
+  zeroed so a previous request's SSM state cannot leak;
+* prompts are absorbed through the model's ``prefill`` entry: up to
+  ``chunk`` tokens per slot per step in ONE fused jitted call that writes
+  the KV cache / SSM state for the whole chunk and returns last-position
+  logits, instead of ``chunk`` teacher-forced decode steps;
+* scheduling is mixed: while any slot still holds >1 pending prompt tokens
+  the engine runs the (B, chunk) step — decoding slots ride along with
+  length 1 — and drops back to the cheap (B, 1) step (decode IS prefill
+  with C = 1) once all prompts are absorbed. Two compiled shapes, each
+  with a greedy and a sampled variant (``do_sample`` is a static jit arg,
+  so an all-greedy batch skips the sort/sampling pipeline entirely): at
+  most four compilations per engine.
+
+Sampling replaces the old greedy-only argmax: per-request temperature,
+top-k, top-p and PRNG seed (see :mod:`repro.serving.sampling`), fused into
+the jitted step. ``temperature=0`` (default) is greedy argmax.
+
+Per-request metrics are recorded on ``Request.metrics``: queue wait,
+time-to-first-token, decode tokens/s, prefill/decode step counts.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +42,30 @@ import numpy as np
 
 import repro.core as nn
 from repro.models.registry import ModelApi
+from repro.serving import sampling
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    submit_t: float = 0.0       # time.monotonic at submit()
+    admit_t: float = 0.0        # first scheduled into a slot
+    first_token_t: float = 0.0  # first sampled token appended
+    done_t: float = 0.0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admit_t - self.submit_t
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from submit."""
+        return self.first_token_t - self.submit_t
+
+    def decode_tok_per_s(self, n_generated: int) -> float:
+        dt = self.done_t - self.first_token_t
+        return (n_generated - 1) / dt if dt > 0 and n_generated > 1 else 0.0
 
 
 @dataclasses.dataclass
@@ -32,80 +74,157 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: int | None = None
+    # sampling knobs: temperature 0 = greedy; top_k <= 0 / top_p >= 1 disable
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int | None = None     # None -> uid; PRNG is per (seed, token index)
     # filled by the engine
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    metrics: RequestMetrics = dataclasses.field(default_factory=RequestMetrics)
 
 
 class ServingEngine:
     def __init__(self, api: ModelApi, params: dict[str, Any], *,
-                 max_batch: int = 4, max_seq: int = 256,
+                 max_batch: int = 4, max_seq: int = 256, chunk: int = 16,
                  cache_dtype=jnp.float32):
         self.api = api
         self.params = params
         self.B = max_batch
         self.max_seq = max_seq
+        # APIs without a prefill entry fall back to one-token absorption
+        # (a C=1 prefill is exactly one decode step)
+        self.chunk = max(1, int(chunk)) if api.prefill is not None else 1
+        self._prefill_fn = api.prefill if api.prefill is not None else (
+            lambda t, s, p, l: api.decode_step(t, s, p))
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int32)          # next write index
         self.pending_prompt: list[deque[int]] = [deque() for _ in range(max_batch)]
-        self.state = api.decode_state_init(max_batch, max_seq, cache_dtype)
-        self._step = jax.jit(self._decode_fn)
+        # chunk-1 headroom: a C-wide cache write starting at pos <= max_seq-1
+        # must never clamp (pad columns past a row's valid length would
+        # otherwise shift onto live entries)
+        self.state = api.decode_state_init(
+            max_batch, max_seq + self.chunk, cache_dtype)
+        self._step = jax.jit(self._step_fn, static_argnames=("do_sample",))
         self.completed: list[Request] = []
 
     # ------------------------------------------------------------------ #
-    def _decode_fn(self, params, tokens, state, pos):
+    def _step_fn(self, params, tokens, state, pos, length,
+                 temps, top_k, top_p, seeds, counts, *, do_sample):
         logits, new_state = nn.apply(
-            lambda t, s, p: self.api.decode_step(t, s, p),
-            params, tokens, state, pos)
-        next_tok = jnp.argmax(logits[:, -1, :].astype(jnp.float32), axis=-1)
-        return next_tok.astype(jnp.int32), new_state
+            lambda t, s, p, l: self._prefill_fn(t, s, p, l),
+            params, tokens, state, pos, length)
+        last = logits[:, -1, :].astype(jnp.float32)
+        if do_sample:
+            next_tok = sampling.sample(last, temps, top_k, top_p,
+                                       seeds, counts)
+        else:
+            # all-greedy batch (the default): skip the (B, V) sort pipeline
+            next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return next_tok, new_state
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
+        req.metrics.submit_t = time.monotonic()
         self.queue.append(req)
 
-    def _admit(self) -> None:
+    def _admit(self, now: float) -> None:
+        fresh = []
         for slot in range(self.B):
             if self.active[slot] is None and self.queue:
                 req = self.queue.popleft()
                 self.active[slot] = req
                 self.pos[slot] = 0
-                self.pending_prompt[slot] = deque(req.prompt)
+                # truncate: at most max_seq-1 prompt tokens fit the cache
+                # while leaving room for one generated token
+                self.pending_prompt[slot] = deque(
+                    req.prompt[: self.max_seq - 1])
+                req.metrics.admit_t = now
+                fresh.append(slot)
+        if fresh:
+            idx = jnp.asarray(fresh, jnp.int32)
+            # Zero the admitted rows of every *recurrent* state leaf so a
+            # freed slot's SSM state can't leak forward (batch is axis 1,
+            # see registry docstring). KV-cache leaves — keyed "k"/"v" —
+            # are skipped: a fresh occupant starts at pos=0 and attention
+            # only ever sees entries it has written, so zeroing them would
+            # just copy the whole cache per admission.
+            def reset(path, a):
+                last = path[-1]
+                if (isinstance(last, jax.tree_util.DictKey)
+                        and last.key in ("k", "v")):
+                    return a
+                return a.at[:, idx].set(0)
+            self.state = jax.tree_util.tree_map_with_path(reset, self.state)
 
     def step(self) -> int:
-        """One synchronized decode step across all slots; returns #active."""
-        self._admit()
-        if not any(r is not None for r in self.active):
+        """One synchronized mixed prefill/decode step; returns #active."""
+        self._admit(time.monotonic())
+        active_slots = [s for s, r in enumerate(self.active) if r is not None]
+        if not active_slots:
             return 0
-        tokens = np.zeros((self.B, 1), np.int32)
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            if self.pending_prompt[slot]:
-                tokens[slot, 0] = self.pending_prompt[slot].popleft()
-            elif req.generated:
-                tokens[slot, 0] = req.generated[-1]
+        prefilling = any(len(self.pending_prompt[s]) > 1
+                         for s in active_slots)
+        C = self.chunk if prefilling else 1
+        B = self.B
+        tokens = np.zeros((B, C), np.int32)
+        length = np.ones(B, np.int32)
+        temps = np.zeros(B, np.float32)
+        top_k = np.zeros(B, np.int32)
+        top_p = np.ones(B, np.float32)
+        seeds = np.zeros(B, np.int32)
+        counts = np.zeros(B, np.int32)
+        emits = [False] * B
+        for s in active_slots:
+            req = self.active[s]
+            pend = self.pending_prompt[s]
+            if pend:
+                k = min(C, len(pend))
+                for i in range(k):
+                    tokens[s, i] = pend.popleft()
+                length[s] = k
+                emits[s] = not pend   # prompt fully absorbed: sample now
+                req.metrics.prefill_steps += 1
             else:
-                tokens[slot, 0] = req.prompt[-1]
+                tokens[s, 0] = (req.generated[-1] if req.generated
+                                else (req.prompt[-1] if req.prompt else 0))
+                emits[s] = True
+                req.metrics.decode_steps += 1
+            temps[s] = req.temperature
+            top_k[s] = req.top_k
+            top_p[s] = req.top_p
+            # mask to 31 bits: callers often derive 64-bit seeds (hashes)
+            seeds[s] = (req.seed if req.seed is not None
+                        else req.uid) & 0x7FFFFFFF
+            counts[s] = len(req.generated)
+        do_sample = any(temps[s] > 0.0 for s in active_slots)
         next_tok, self.state = self._step(
             self.params, jnp.asarray(tokens), self.state,
-            jnp.asarray(self.pos))
+            jnp.asarray(self.pos), jnp.asarray(length), jnp.asarray(temps),
+            jnp.asarray(top_k), jnp.asarray(top_p), jnp.asarray(seeds),
+            jnp.asarray(counts), do_sample=do_sample)
         next_tok = np.asarray(next_tok)
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            self.pos[slot] += 1
-            if self.pending_prompt[slot]:
-                continue  # still absorbing prompt; ignore sampled token
-            req.generated.append(int(next_tok[slot]))
+        now = time.monotonic()
+        for s in active_slots:
+            req = self.active[s]
+            self.pos[s] += int(length[s])
+            if not emits[s]:
+                continue  # still absorbing prompt
+            req.generated.append(int(next_tok[s]))
+            if req.metrics.first_token_t == 0.0:
+                req.metrics.first_token_t = now
             hit_eos = (req.eos_id is not None
                        and req.generated[-1] == req.eos_id)
             if (len(req.generated) >= req.max_new_tokens or hit_eos
-                    or self.pos[slot] >= self.max_seq - 1):
+                    or self.pos[s] >= self.max_seq - 1):
                 req.done = True
+                req.metrics.done_t = now
                 self.completed.append(req)
-                self.active[slot] = None   # slot refilled next step
+                self.active[s] = None   # slot refilled next step
+                self.pos[s] = 0
+                self.pending_prompt[s] = deque()
         return sum(1 for r in self.active if r is not None)
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
@@ -114,3 +233,20 @@ class ServingEngine:
             if n == 0 and not self.queue:
                 break
         return self.completed
+
+    # ------------------------------------------------------------------ #
+    def metrics_summary(self) -> dict[str, float]:
+        """Aggregate per-request metrics over completed requests."""
+        done = self.completed
+        if not done:
+            return {}
+        ttfts = [r.metrics.ttft for r in done]
+        waits = [r.metrics.queue_wait for r in done]
+        tps = [r.metrics.decode_tok_per_s(len(r.generated)) for r in done
+               if len(r.generated) > 1]
+        return {
+            "requests": float(len(done)),
+            "mean_ttft_s": sum(ttfts) / len(ttfts),
+            "mean_queue_wait_s": sum(waits) / len(waits),
+            "mean_decode_tok_per_s": sum(tps) / len(tps) if tps else 0.0,
+        }

@@ -1,0 +1,57 @@
+"""Per-request token sampling for the serving engine.
+
+One fused (B, V) -> (B,) op: temperature scaling, top-k and top-p (nucleus)
+filtering, and a categorical draw — all per row, so one batched call serves
+requests with heterogeneous sampling settings. Runs inside the engine's
+jitted step.
+
+Determinism: the key for row b is ``fold_in(key(seed[b]), count[b])`` where
+``count`` is the request's generated-token index. A request therefore samples
+the same token stream regardless of which slot it lands in, how deep the
+queue was, or what chunk size absorbed its prompt.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, temperature: jax.Array, top_k: jax.Array,
+           top_p: jax.Array, seed: jax.Array, count: jax.Array) -> jax.Array:
+    """Sample one token per row.
+
+    logits (B, V); temperature (B,) — ``0`` selects greedy argmax;
+    top_k (B,) int32 — ``<= 0`` disables; top_p (B,) — ``<= 0`` or ``>= 1``
+    disables; seed / count (B,) int32 per-request PRNG coordinates.
+    Returns (B,) int32 token ids.
+    """
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+
+    # one descending sort serves both filters; everything below is O(V)
+    k = jnp.where(top_k <= 0, V, jnp.minimum(top_k, V))   # <= 0 disables
+    desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(desc, (k - 1)[:, None], axis=1)
+    desc = jnp.where(jnp.arange(V)[None, :] < k[:, None], desc, -jnp.inf)
+
+    # top-p over the top-k survivors: keep the smallest prefix of
+    # descending probs whose mass reaches p (crossing token included);
+    # the lowest kept *logit* is the threshold, so boundary ties share it
+    p = jnp.where((top_p <= 0.0) | (top_p >= 1.0), 1.0, top_p)
+    p_desc = jax.nn.softmax(desc, axis=-1)
+    csum = jnp.cumsum(p_desc, axis=-1)
+    n_keep = jnp.maximum(jnp.sum((csum - p_desc) < p[:, None], axis=-1), 1)
+    thr = jnp.take_along_axis(desc, (n_keep - 1)[:, None], axis=1)
+    scaled = jnp.where((scaled >= kth) & (scaled >= thr), scaled, -jnp.inf)
+
+    def draw(s, c, row):
+        key = jax.random.fold_in(jax.random.key(s), c)
+        return jax.random.categorical(key, row)
+
+    sampled = jax.vmap(draw)(seed.astype(jnp.uint32),
+                             count.astype(jnp.uint32), scaled)
+    return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)
