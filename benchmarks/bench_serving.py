@@ -1,30 +1,52 @@
 
 """Serving engine throughput: continuous batching vs sequential requests,
-and chunked prefill vs token-by-token prompt absorption."""
+chunked prefill vs token-by-token absorption, and the PR-2 paged-cache
+workloads — shared-prefix TTFT (prefix cache on/off vs the PR-1 dense
+baseline) and cache-memory footprint at equal capacity.
+
+Run with ``--json out.json`` to dump the results as a machine-readable
+artifact (CI uploads it per push); ``--smoke`` trims request counts for
+the CI bench-smoke job.
+"""
+
+import argparse
+import time
 
 import jax
 import jax.numpy as jnp
-import time
 
 import repro.core as nn
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.models.registry import get_model
 from repro.serving.engine import Request, ServingEngine
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 
 CFG = ModelConfig(name="t", family="dense", n_layers=4, d_model=128,
                   n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=512,
                   head_dim=32, remat="none")
 
+_PARAMS = None
 
-def make_engine(max_batch: int, max_seq: int, chunk: int) -> ServingEngine:
-    nn.clear_parameters()
-    api = get_model(CFG)
-    params = nn.init(lambda t: T.forward(CFG, t), jax.random.key(0),
-                     jnp.zeros((1, 8), jnp.int32))
-    return ServingEngine(api, params, max_batch=max_batch, max_seq=max_seq,
-                         chunk=chunk)
+
+def get_params():
+    global _PARAMS
+    if _PARAMS is None:
+        nn.clear_parameters()
+        _PARAMS = nn.init(lambda t: T.forward(CFG, t), jax.random.key(0),
+                          jnp.zeros((1, 8), jnp.int32))
+    return _PARAMS
+
+
+def make_engine(max_batch: int, max_seq: int, chunk: int,
+                **kw) -> ServingEngine:
+    return ServingEngine(get_model(CFG), get_params(), max_batch=max_batch,
+                         max_seq=max_seq, chunk=chunk, **kw)
+
+
+def state_mbytes(state) -> float:
+    return sum(a.size * a.dtype.itemsize
+               for a in jax.tree.leaves(state)) / 2**20
 
 
 def run(max_batch: int, n_requests: int = 8, new_tokens: int = 16,
@@ -48,7 +70,7 @@ def run(max_batch: int, n_requests: int = 8, new_tokens: int = 16,
 def run_prefill(chunk: int, prompt_len: int = 64, n_requests: int = 4,
                 new_tokens: int = 4) -> tuple[float, float]:
     """Returns (wall seconds to drain, mean TTFT) — prompt-dominated load."""
-    eng = make_engine(4, 128, chunk)
+    eng = make_engine(4, 128, chunk, prefix_cache=False)
     # max_new 2 forces one decode step after absorption, so BOTH compiled
     # step shapes (B, chunk) and (B, 1) are warm before timing
     warm = Request(uid=-1, prompt=[1] * prompt_len, max_new_tokens=2)
@@ -65,22 +87,87 @@ def run_prefill(chunk: int, prompt_len: int = 64, n_requests: int = 4,
     return dt, eng.metrics_summary().get("mean_ttft_s", 0.0)
 
 
-def main() -> None:
-    seq = run(max_batch=1)
-    cb = run(max_batch=4)
+def shared_prefix_prompts(n_requests: int, prefix_len: int = 64,
+                          tail_len: int = 8) -> list[list[int]]:
+    """The ISSUE workload: n requests sharing a ``prefix_len``-token system
+    prompt, each with a short unique tail."""
+    prefix = [1 + j % (CFG.vocab_size - 1) for j in range(prefix_len)]
+    return [prefix + [11 + (13 * i + j) % 97 for j in range(tail_len)]
+            for i in range(n_requests)]
+
+
+def run_shared_prefix(n_requests: int = 8, prefix_len: int = 64,
+                      new_tokens: int = 8, *, paged: bool,
+                      prefix_cache: bool) -> tuple[float, float]:
+    """Returns (mean TTFT over the workload, mean prefix-hit tokens)."""
+    eng = make_engine(4, 128, 16, paged=paged, prefix_cache=prefix_cache)
+    prompts = shared_prefix_prompts(n_requests, prefix_len)
+    # warm both compiled shapes AND (when enabled) the prefix map, exactly
+    # as a serving system would carry a hot system-prompt cache
+    eng.submit(Request(uid=-1, prompt=prompts[0], max_new_tokens=2))
+    eng.run_until_drained()
+    eng.completed.clear()
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=new_tokens))
+    eng.run_until_drained()
+    m = eng.metrics_summary()
+    return m["mean_ttft_s"], m.get("mean_prefix_hit_tokens", 0.0)
+
+
+def main(argv=()) -> None:
+    # default () so run.py's programmatic call ignores ITS own sys.argv
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="", help="write results JSON here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes: fewer requests, same code paths")
+    args = ap.parse_args(list(argv))
+    n_req = 4 if args.smoke else 8
+    new_tok = 8 if args.smoke else 16
+
+    seq = run(max_batch=1, n_requests=n_req, new_tokens=new_tok)
+    cb = run(max_batch=4, n_requests=n_req, new_tokens=new_tok)
     emit("serving/sequential_tok_per_s", 1e6 / max(seq, 1e-9), f"{seq:.1f} tok/s")
     emit("serving/continuous_batch4_tok_per_s", 1e6 / max(cb, 1e-9),
          f"{cb:.1f} tok/s, x{cb / seq:.2f}")
 
     # chunked prefill vs token-by-token absorption, 64-token prompts
-    t_tok, ttft_tok = run_prefill(chunk=1)
-    t_chk, ttft_chk = run_prefill(chunk=16)
+    t_tok, ttft_tok = run_prefill(chunk=1, n_requests=n_req // 2)
+    t_chk, ttft_chk = run_prefill(chunk=16, n_requests=n_req // 2)
     emit("serving/prefill_tokbytok_s", t_tok * 1e6,
          f"{t_tok:.2f}s drain, TTFT {ttft_tok * 1e3:.0f}ms")
     emit("serving/prefill_chunk16_s", t_chk * 1e6,
          f"{t_chk:.2f}s drain, TTFT {ttft_chk * 1e3:.0f}ms, "
          f"x{t_tok / max(t_chk, 1e-9):.2f} faster")
 
+    # shared-prefix workload: n requests, 64-token common prefix.
+    # dense = the PR-1 baseline layout; paged+prefix skips the prefix
+    ttft_dense, _ = run_shared_prefix(n_req, paged=False, prefix_cache=False)
+    ttft_paged, _ = run_shared_prefix(n_req, paged=True, prefix_cache=False)
+    ttft_hit, hit_tok = run_shared_prefix(n_req, paged=True,
+                                          prefix_cache=True)
+    emit("serving/shared_prefix_ttft_dense_s", ttft_dense * 1e6,
+         f"TTFT {ttft_dense * 1e3:.0f}ms (PR-1 dense baseline)")
+    emit("serving/shared_prefix_ttft_paged_s", ttft_paged * 1e6,
+         f"TTFT {ttft_paged * 1e3:.0f}ms (paged, no prefix cache)")
+    emit("serving/shared_prefix_ttft_prefix_hit_s", ttft_hit * 1e6,
+         f"TTFT {ttft_hit * 1e3:.0f}ms, {hit_tok:.0f} tok/req reused, "
+         f"x{ttft_dense / max(ttft_hit, 1e-9):.2f} vs dense")
+
+    # capacity: cache bytes needed to hold max_batch in-flight requests of
+    # ~24 live tokens each — dense pays max_seq per slot, paged pays blocks
+    api = get_model(CFG)
+    dense_mb = state_mbytes(api.decode_state_init(4, 128 + 16, jnp.float32))
+    blocks = 4 * 2 + 1  # 4 slots x ceil(24/16) blocks + garbage block
+    paged_mb = state_mbytes(api.paged_state_init(4, blocks, 16, jnp.float32))
+    emit("serving/cache_mem_dense_mb", dense_mb * 1e6, f"{dense_mb:.2f} MiB")
+    emit("serving/cache_mem_paged_mb", paged_mb * 1e6,
+         f"{paged_mb:.2f} MiB for the same live tokens, "
+         f"x{dense_mb / max(paged_mb, 1e-9):.1f} smaller")
+
+    if args.json:
+        write_json(args.json)
+
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(sys.argv[1:])

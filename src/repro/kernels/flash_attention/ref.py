@@ -217,6 +217,44 @@ def prefill_reference(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(B, C, Hq, D).astype(q.dtype)
 
 
+def gather_pages(pool: jax.Array, pages: jax.Array) -> jax.Array:
+    """Materialize per-row dense caches from a block pool.
+
+    ``pool`` (num_blocks, block_size, Hkv, D); ``pages`` (B, max_blocks)
+    int32 block ids (0 = the garbage block — rows past a request's length,
+    masked out downstream). Returns (B, max_blocks * block_size, Hkv, D),
+    the exact dense cache the row would have held, so the dense references
+    below apply unchanged and paged-vs-dense logits agree bitwise.
+    """
+    nb, bs, Hkv, D = pool.shape
+    B, MB = pages.shape
+    g = jnp.take(pool, pages, axis=0)            # (B, MB, bs, Hkv, D)
+    return g.reshape(B, MB * bs, Hkv, D)
+
+
+def paged_prefill_reference(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, pages: jax.Array,
+                            pos: jax.Array, *, scale: float | None = None
+                            ) -> jax.Array:
+    """Chunk-causal prefill attention through a page table: gather each
+    row's blocks into its dense-equivalent cache, then delegate to
+    :func:`prefill_reference` (the oracle for paged-vs-dense equivalence).
+    A Pallas kernel that gathers block-by-block in VMEM slots in behind
+    :func:`repro.kernels.ops.attention_prefill_paged` later."""
+    return prefill_reference(q, gather_pages(k_pool, pages),
+                             gather_pages(v_pool, pages), pos, scale=scale)
+
+
+def paged_decode_reference(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, pages: jax.Array,
+                           lengths: jax.Array, *, scale: float | None = None
+                           ) -> jax.Array:
+    """Single-token decode attention through a page table (see
+    :func:`paged_prefill_reference`)."""
+    return decode_reference(q, gather_pages(k_pool, pages),
+                            gather_pages(v_pool, pages), lengths, scale=scale)
+
+
 def decode_reference(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      lengths: jax.Array, *, scale: float | None = None
                      ) -> jax.Array:

@@ -60,6 +60,53 @@ def attention_prefill(q, k_cache, v_cache, pos, *, scale=None) -> jax.Array:
     return fa_ref.prefill_reference(q, k_cache, v_cache, pos, scale=scale)
 
 
+def attention_decode_paged(q, k_pool, v_pool, pages, lengths, *,
+                           scale=None) -> jax.Array:
+    """Single-token decode against a block-paged cache: q (B, 1, Hq, D),
+    pools (num_blocks, block_size, Hkv, D), ``pages`` (B, max_blocks) int32
+    block ids per row, ``lengths`` (B,) valid token counts.
+
+    All modes lower to the gather-then-dense XLA reference for now — the
+    gather is one HBM-bandwidth pass, identical traffic to the dense decode
+    read it replaces. A Pallas kernel that walks the page table in VMEM
+    (one async copy per block, no materialized dense view) slots in behind
+    this dispatch point.
+    """
+    return fa_ref.paged_decode_reference(q, k_pool, v_pool, pages, lengths,
+                                         scale=scale)
+
+
+def attention_prefill_paged(q, k_pool, v_pool, pages, pos, *,
+                            scale=None) -> jax.Array:
+    """Chunk-causal prefill against a block-paged cache: q (B, C, Hq, D)
+    with query i of row b seeing positions ``<= pos[b] + i`` gathered
+    through the row's page table (see :func:`attention_decode_paged` for
+    the layout and the Pallas upgrade path).
+    """
+    return fa_ref.paged_prefill_reference(q, k_pool, v_pool, pages, pos,
+                                          scale=scale)
+
+
+def paged_cache_write(pool, new, pages, pos):
+    """Scatter a (B, C, Hkv, D) K/V chunk into a (NB, bs, Hkv, D) pool.
+
+    Token i of row b lands at flat slot ``pages[b, p // bs] * bs + p % bs``
+    with ``p = pos[b] + i``. Rows whose page-table entry is 0 (idle slots,
+    pad columns past a row's allocation) scatter into the garbage block,
+    which no valid mask ever reads — so the write needs no predication.
+    """
+    nb, bs = pool.shape[0], pool.shape[1]
+    B, C = new.shape[0], new.shape[1]
+    p = pos[:, None] + jax.numpy.arange(C, dtype=pos.dtype)[None, :]
+    blk = jax.numpy.take_along_axis(
+        pages, jax.numpy.clip(p // bs, 0, pages.shape[1] - 1), axis=1)
+    flat = (blk * bs + p % bs).reshape(-1)
+    pool_flat = pool.reshape((nb * bs,) + pool.shape[2:])
+    pool_flat = pool_flat.at[flat].set(
+        new.astype(pool.dtype).reshape((B * C,) + new.shape[2:]))
+    return pool_flat.reshape(pool.shape)
+
+
 def ssd(x, dt, A, Bm, Cm, D=None, *, chunk: int = 64, h0=None,
         return_state: bool = False, unroll: int | bool = 1):
     mode = _ctx.get_default_context().kernels

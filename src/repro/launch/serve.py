@@ -12,8 +12,15 @@ Flags:
   --top-k K        keep only the K highest-probability tokens (<= 0 = off)
   --top-p P        nucleus sampling: keep the smallest token set with
                    cumulative probability >= P (>= 1 = off)
+  --block-size N   paged-KV block size in tokens (families that support it;
+                   pure-SSM state stays dense)
+  --num-blocks N   KV pool size in blocks (0 = every slot can reach
+                   max-seq); admission is gated on free blocks
+  --no-paged       force the PR-1 dense per-slot cache layout
+  --no-prefix-cache  disable cross-request prompt-prefix block reuse
 
-Per-request metrics (TTFT, queue wait, decode tok/s) print at the end.
+Per-request metrics (TTFT, queue wait, decode tok/s, prefix-hit tokens)
+print at the end.
 """
 
 from __future__ import annotations
@@ -40,6 +47,12 @@ def main(argv=None) -> int:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="KV pool blocks; 0 = worst-case sized")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="use the dense per-slot cache layout")
+    ap.add_argument("--no-prefix-cache", action="store_true")
     args = ap.parse_args(argv)
 
     import jax
@@ -66,7 +79,15 @@ def main(argv=None) -> int:
                      jnp.zeros((1, S0), jnp.int32))
 
     engine = ServingEngine(api, params, max_batch=args.max_batch,
-                           max_seq=args.max_seq, chunk=args.chunk)
+                           max_seq=args.max_seq, chunk=args.chunk,
+                           paged=(None if not args.no_paged else False),
+                           block_size=args.block_size,
+                           num_blocks=args.num_blocks or None,
+                           prefix_cache=not args.no_prefix_cache)
+    if engine.paged:
+        print(f"paged KV: {engine.num_blocks} blocks x "
+              f"{engine.block_size} tok"
+              f"{', prefix cache on' if engine.prefix else ''}", flush=True)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = args.prompt_len or int(rng.integers(2, 6))
@@ -87,10 +108,13 @@ def main(argv=None) -> int:
           f"-> {toks / dt:.1f} tok/s", flush=True)
     m = engine.metrics_summary()
     if m:
-        print(f"mean TTFT {m['mean_ttft_s'] * 1e3:.1f}ms | "
-              f"mean queue wait {m['mean_queue_wait_s'] * 1e3:.1f}ms | "
-              f"mean decode {m['mean_decode_tok_per_s']:.1f} tok/s",
-              flush=True)
+        line = (f"mean TTFT {m['mean_ttft_s'] * 1e3:.1f}ms | "
+                f"mean queue wait {m['mean_queue_wait_s'] * 1e3:.1f}ms | "
+                f"mean decode {m['mean_decode_tok_per_s']:.1f} tok/s")
+        if "mean_prefix_hit_tokens" in m:
+            line += (f" | prefix hits "
+                     f"{m['mean_prefix_hit_tokens']:.1f} tok/req")
+        print(line, flush=True)
     return 0
 
 

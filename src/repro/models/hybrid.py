@@ -23,11 +23,11 @@ from repro.models import transformer as T
 
 
 def _shared_block(cfg: ModelConfig, x, cos, sin, *, cache=None,
-                  cache_pos=None):
+                  cache_pos=None, pages=None):
     """Pre-norm attention + MLP with the cfg's attention geometry."""
     h = T.norm(cfg, x, "ln_attn")
     a, new_cache = T.attention(cfg, h, cos, sin, cache=cache,
-                               cache_pos=cache_pos)
+                               cache_pos=cache_pos, pages=pages)
     x = x + a
     h = T.norm(cfg, x, "ln_mlp")
     x = x + T.mlp(cfg, h)
@@ -126,6 +126,31 @@ def state_specs(cfg: ModelConfig, batch: int, max_seq: int,
                    "v": jax.ShapeDtypeStruct(kv_shape, dtype)}}
 
 
+def init_paged_state(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, dtype=jnp.bfloat16) -> dict[str, Any]:
+    """Hybrid paged state: the per-site KV caches become block pools
+    addressed through per-slot page tables (no batch axis), while the
+    recurrent mamba state — SSD ``h`` and the conv ring window — stays a
+    dense per-slot layout (it is O(1) in sequence, there is nothing to
+    page; it rides alongside the paged KV in the same state dict)."""
+    hd = cfg.resolved_head_dim
+    sites = n_attn_sites(cfg)
+    kv_shape = (sites, num_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"ssm": M.init_state(cfg, batch, dtype),
+            "kv": {"k": jnp.zeros(kv_shape, dtype),
+                   "v": jnp.zeros(kv_shape, dtype)}}
+
+
+def paged_state_specs(cfg: ModelConfig, batch: int, num_blocks: int,
+                      block_size: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    sites = n_attn_sites(cfg)
+    kv_shape = (sites, num_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"ssm": M.state_specs(cfg, batch, dtype),
+            "kv": {"k": jax.ShapeDtypeStruct(kv_shape, dtype),
+                   "v": jax.ShapeDtypeStruct(kv_shape, dtype)}}
+
+
 def _site_map(cfg: ModelConfig) -> jax.Array:
     """Layer idx -> attention-site index (or -1 for mamba-only layers)."""
     every = max(1, cfg.attn_every)
@@ -141,11 +166,12 @@ def _site_map(cfg: ModelConfig) -> jax.Array:
 
 
 def _scan_decode_layers(cfg: ModelConfig, x, state: dict[str, Any],
-                        cos, sin, pos, ssm_block):
+                        cos, sin, pos, ssm_block, pages=None):
     """Shared decode/prefill layer scan: per layer a mamba update via
     ``ssm_block(h_normed, layer_state) -> (out, new_state)`` plus the
-    shared attention block (against its per-site KV cache) at attention
-    sites. Returns (hidden, new_state_dict)."""
+    shared attention block (against its per-site KV cache — dense, or
+    block-paged when ``pages`` is given) at attention sites. Returns
+    (hidden, new_state_dict)."""
     shared = nn.capture(
         "shared_attn", lambda: _shared_block(cfg, x, cos, sin))
     site_map = _site_map(cfg)
@@ -164,7 +190,7 @@ def _scan_decode_layers(cfg: ModelConfig, x, state: dict[str, Any],
                                               keepdims=False)
             h2, new_cache = nn.apply_shared(
                 shared, _shared_block, cfg, h_, cos, sin,
-                cache=(k_site, v_site), cache_pos=pos)
+                cache=(k_site, v_site), cache_pos=pos, pages=pages)
             kk = lax.dynamic_update_index_in_dim(kv_["k"], new_cache[0],
                                                  site, 0)
             vv = lax.dynamic_update_index_in_dim(kv_["v"], new_cache[1],
@@ -211,6 +237,30 @@ def prefill(cfg: ModelConfig, tokens, state: dict[str, Any],
     x, new_state = _scan_decode_layers(
         cfg, x, state, cos, sin, pos,
         lambda h, s: M.mamba2_block_prefill(cfg, h, s, length))
+    x = T.gather_last_valid(x, length)
+    x = T.norm(cfg, x, "ln_final")
+    return T.lm_head(cfg, x), new_state
+
+
+def prefill_paged(cfg: ModelConfig, tokens, state: dict[str, Any],
+                  pages: jax.Array, pos: jax.Array, length: jax.Array,
+                  positions=None):
+    """Chunked prefill with block-paged per-site KV caches (see
+    :func:`prefill`). The SSM state continues densely per slot — only the
+    attention sites read/write through ``pages`` (B, max_blocks). A C = 1
+    call is a paged decode step; prefix reuse is NOT sound for this family
+    (skipping tokens would skip their SSM state updates), which the
+    registry's cache spec records."""
+    B, C = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    if positions is None:
+        positions = T.default_positions(cfg, B, C, offset=pos)
+    x = T.embed_tokens(cfg, tokens)
+    cos, sin = T.rope_tables(cfg, positions)
+    x, new_state = _scan_decode_layers(
+        cfg, x, state, cos, sin, pos,
+        lambda h, s: M.mamba2_block_prefill(cfg, h, s, length), pages=pages)
     x = T.gather_last_valid(x, length)
     x = T.norm(cfg, x, "ln_final")
     return T.lm_head(cfg, x), new_state

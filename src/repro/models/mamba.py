@@ -8,6 +8,14 @@ through :mod:`repro.kernels.ops` (Pallas kernel on TPU, chunked-jnp on XLA).
 Decode carries O(1) state per layer: the SSD state (B, H, P, N) fp32 and the
 conv ring buffer (B, conv-1, conv_ch) — no KV cache, which is why this family
 runs the long_500k cell.
+
+Paged serving (PR 2): this family deliberately has NO paged variant — both
+state leaves are O(1) in sequence, so there is nothing to page, and prompt-
+prefix reuse is unsound (skipped tokens would skip their state updates; the
+cache does not capture them the way a KV cache does). The registry records
+this as ``CacheSpec(kind="recurrent")`` and the engine keeps the dense
+per-slot layout. In the hybrid family the same recurrent leaves ride dense
+alongside the paged per-site KV pools (see ``hybrid.init_paged_state``).
 """
 
 from __future__ import annotations

@@ -27,6 +27,25 @@ from repro.models import hybrid, mamba, transformer, whisper
 
 
 @dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """What a family's decode state is made of, and what the serving engine
+    may therefore do with it.
+
+    ``kind``: "kv" (pure attention cache), "recurrent" (O(1) SSM state),
+    "hybrid" (recurrent state + per-site KV), "cross" (encoder cross-KV).
+    ``paged``: the KV portion can live in a block pool addressed through
+    per-slot page tables (``prefill_paged`` / ``paged_state_init`` set).
+    ``prefix_reuse``: skipping prefill over a cache-hit prefix is *sound* —
+    true only when the cache captures the full effect of the skipped tokens
+    (pure KV). Recurrent/hybrid families must re-run every prompt token
+    through the SSM even when their KV blocks could be shared.
+    """
+    kind: str
+    paged: bool = False
+    prefix_reuse: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelApi:
     cfg: ModelConfig
     forward: Callable            # (tokens, **extras) -> (logits, aux)
@@ -36,6 +55,13 @@ class ModelApi:
     decode_state_init: Callable | None
     # (tokens (B,C), state, pos (B,), length (B,)) -> (logits (B,1,V), state)
     prefill: Callable | None = None
+    cache_spec: CacheSpec = CacheSpec(kind="kv")
+    # (tokens (B,C), state, pages (B,MB), pos (B,), length (B,))
+    #   -> (logits (B,1,V), state); C=1 doubles as the paged decode step
+    prefill_paged: Callable | None = None
+    # (batch, num_blocks, block_size, dtype) -> paged state pytree
+    paged_state_init: Callable | None = None
+    paged_state_specs: Callable | None = None
 
     def input_specs(self, shape: ShapeConfig,
                     cache_dtype=jnp.bfloat16) -> dict[str, Any]:
@@ -79,6 +105,14 @@ def _lm_api(cfg: ModelConfig) -> ModelApi:
             transformer.init_kv_cache(cfg, b, s, dt),
         prefill=lambda tokens, state, pos, length, **kw:
             transformer.prefill(cfg, tokens, state, pos, length, **kw),
+        cache_spec=CacheSpec(kind="kv", paged=True, prefix_reuse=True),
+        prefill_paged=lambda tokens, state, pages, pos, length, **kw:
+            transformer.prefill_paged(cfg, tokens, state, pages, pos,
+                                      length, **kw),
+        paged_state_init=lambda b, nb, bs, dt=jnp.bfloat16:
+            transformer.init_paged_kv_cache(cfg, nb, bs, dt),
+        paged_state_specs=lambda b, nb, bs, dt=jnp.bfloat16:
+            transformer.paged_kv_cache_specs(cfg, nb, bs, dt),
     )
 
 
@@ -97,6 +131,8 @@ def _ssm_api(cfg: ModelConfig) -> ModelApi:
             mamba.init_state(cfg, b, dt),
         prefill=lambda tokens, state, pos, length, **kw:
             mamba.prefill(cfg, tokens, state, pos, length, **kw),
+        # O(1) recurrent state: nothing to page, nothing to prefix-share
+        cache_spec=CacheSpec(kind="recurrent"),
     )
 
 
@@ -114,6 +150,16 @@ def _hybrid_api(cfg: ModelConfig) -> ModelApi:
             hybrid.init_state(cfg, b, s, dt),
         prefill=lambda tokens, state, pos, length, **kw:
             hybrid.prefill(cfg, tokens, state, pos, length, **kw),
+        # paged KV at attention sites; prefix reuse is unsound (the SSM
+        # state must still absorb every prompt token)
+        cache_spec=CacheSpec(kind="hybrid", paged=True, prefix_reuse=False),
+        prefill_paged=lambda tokens, state, pages, pos, length, **kw:
+            hybrid.prefill_paged(cfg, tokens, state, pages, pos, length,
+                                 **kw),
+        paged_state_init=lambda b, nb, bs, dt=jnp.bfloat16:
+            hybrid.init_paged_state(cfg, b, nb, bs, dt),
+        paged_state_specs=lambda b, nb, bs, dt=jnp.bfloat16:
+            hybrid.paged_state_specs(cfg, b, nb, bs, dt),
     )
 
 
@@ -129,6 +175,7 @@ def _audio_api(cfg: ModelConfig) -> ModelApi:
         decode_state_specs=lambda b, s, dt=jnp.bfloat16:
             whisper.state_specs(cfg, b, s, dt),
         decode_state_init=None,  # requires frames; use whisper.init_decode_state
+        cache_spec=CacheSpec(kind="cross"),
     )
 
 

@@ -95,12 +95,17 @@ def attention(cfg: ModelConfig, x, cos, sin, *, name: str = "attn",
               causal: bool = True, window: int | None = None,
               cache: tuple[jax.Array, jax.Array] | None = None,
               cache_pos: jax.Array | None = None,
+              pages: jax.Array | None = None,
               cross_kv: tuple[jax.Array, jax.Array] | None = None,
               use_rope: bool = True):
     """GQA attention. Returns (out, new_cache | None).
 
     ``cache``: (k, v) of shape (B, Smax, Hkv, hd) — decode path writes the new
     K/V at ``cache_pos`` and attends against the whole cache.
+    ``pages``: (B, max_blocks) int32 page tables switching ``cache`` to the
+    block-paged layout — (k, v) become (num_blocks, block_size, Hkv, hd)
+    pools shared by all rows; writes scatter through the page table and
+    reads gather through it (``K.attention_*_paged``).
     ``cross_kv``: precomputed encoder K/V (whisper cross-attention).
     """
     B, S, d = x.shape
@@ -180,7 +185,22 @@ def attention(cfg: ModelConfig, x, cos, sin, *, name: str = "attn",
             return constrain(out, "batch", "seq", "embed"), None
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and pages is not None:
+        # block-paged cache: scatter the chunk's K/V through the page table,
+        # then attend through the gathered per-row view. ``cache_pos`` must
+        # be per-row (B,) — the paged engine always schedules per-row.
+        k_pool, v_pool = cache
+        pos_arr = jnp.asarray(cache_pos, jnp.int32)
+        assert pos_arr.ndim == 1, "paged attention needs per-row positions"
+        k_pool = K.paged_cache_write(k_pool, k, pages, pos_arr)
+        v_pool = K.paged_cache_write(v_pool, v, pages, pos_arr)
+        if S > 1:
+            y = K.attention_prefill_paged(q, k_pool, v_pool, pages, pos_arr)
+        else:
+            y = K.attention_decode_paged(q, k_pool, v_pool, pages,
+                                         pos_arr + 1)
+        new_cache = (k_pool, v_pool)
+    elif cache is not None:
         k_cache, v_cache = cache
         assert cache_pos is not None
         pos_arr = jnp.asarray(cache_pos, jnp.int32)
@@ -332,11 +352,13 @@ def moe_block(cfg: ModelConfig, x, *, name: str = "moe", token_mask=None):
 # --------------------------------------------------------------------------- #
 
 def decoder_block(cfg: ModelConfig, x, cos, sin, *, cache=None,
-                  cache_pos=None, use_rope: bool = True, token_mask=None):
+                  cache_pos=None, pages=None, use_rope: bool = True,
+                  token_mask=None):
     """Pre-norm block. Returns (x, aux, new_cache)."""
     h = norm(cfg, x, "ln_attn")
     a, new_cache = attention(cfg, h, cos, sin, cache=cache,
-                             cache_pos=cache_pos, use_rope=use_rope)
+                             cache_pos=cache_pos, pages=pages,
+                             use_rope=use_rope)
     x = x + a
     h = norm(cfg, x, "ln_mlp")
     if cfg.family == "moe":
@@ -467,6 +489,24 @@ def kv_cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
 
+def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                        dtype=jnp.bfloat16) -> dict[str, Any]:
+    """Block-paged KV pool: no batch axis — rows address blocks through
+    per-slot page tables, so memory scales with allocated blocks, not
+    ``batch * max_seq``. Block 0 is the engine's garbage block."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_kv_cache_specs(cfg: ModelConfig, num_blocks: int, block_size: int,
+                         dtype=jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
 def decode_step(cfg: ModelConfig, tokens, cache: dict[str, Any],
                 pos: jax.Array, positions=None):
     """One decode step. tokens (B, 1); cache as from init_kv_cache;
@@ -525,6 +565,39 @@ def prefill(cfg: ModelConfig, tokens, cache: dict[str, Any],
                                         cache=(layer_cache["k"],
                                                layer_cache["v"]),
                                         cache_pos=pos, token_mask=valid)
+        return h, {"k": new_cache[0], "v": new_cache[1]}
+
+    x, new_cache = nn.layer_stack_with_output(
+        "layers", cfg.n_layers, block, x,
+        xs={"k": cache["k"], "v": cache["v"]}, unroll=cfg.scan_unroll)
+    x = gather_last_valid(x, length)
+    x = norm(cfg, x, "ln_final")
+    return lm_head(cfg, x), new_cache
+
+
+def prefill_paged(cfg: ModelConfig, tokens, cache: dict[str, Any],
+                  pages: jax.Array, pos: jax.Array, length: jax.Array,
+                  positions=None):
+    """Chunked prefill against the block-paged cache (see :func:`prefill`
+    for chunk semantics). ``cache`` from :func:`init_paged_kv_cache`;
+    ``pages`` (B, max_blocks) int32 per-row page tables. A C = 1 call is a
+    paged decode step — the engine uses this one entry for both shapes.
+    """
+    B, C = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    if positions is None:
+        positions = default_positions(cfg, B, C, offset=pos)
+    x = embed_tokens(cfg, tokens)
+    cos, sin = rope_tables(cfg, positions)
+    valid = jnp.arange(C)[None, :] < length[:, None]
+
+    def block(h, idx, layer_cache):
+        h, _, new_cache = decoder_block(cfg, h, cos, sin,
+                                        cache=(layer_cache["k"],
+                                               layer_cache["v"]),
+                                        cache_pos=pos, pages=pages,
+                                        token_mask=valid)
         return h, {"k": new_cache[0], "v": new_cache[1]}
 
     x, new_cache = nn.layer_stack_with_output(

@@ -1,37 +1,55 @@
-"""Serving runtime: continuous batching with chunked prefill and sampling.
+"""Serving runtime: continuous batching over a block-paged KV cache with
+prefix reuse, chunked prefill and sampling.
 
 A fixed-slot batch (compiled once per step shape); requests stream in and
-out of slots without recompilation:
+out of slots without recompilation. Since PR 2 the KV cache is **paged**:
 
-* each slot carries its own position (per-row KV-cache / SSM-state writes
-  via the vmap'd scatters in the model prefill/decode paths);
-* a freed slot (EOS / max_tokens / cache full) is refilled from the queue on
-  the next step — no draining barrier, the Orca/vLLM scheduling insight on
-  top of a fixed-shape TPU step — and the new occupant's state rows are
-  zeroed so a previous request's SSM state cannot leak;
-* prompts are absorbed through the model's ``prefill`` entry: up to
-  ``chunk`` tokens per slot per step in ONE fused jitted call that writes
-  the KV cache / SSM state for the whole chunk and returns last-position
-  logits, instead of ``chunk`` teacher-forced decode steps;
-* scheduling is mixed: while any slot still holds >1 pending prompt tokens
-  the engine runs the (B, chunk) step — decoding slots ride along with
-  length 1 — and drops back to the cheap (B, 1) step (decode IS prefill
-  with C = 1) once all prompts are absorbed. Two compiled shapes, each
-  with a greedy and a sampled variant (``do_sample`` is a static jit arg,
-  so an all-greedy batch skips the sort/sampling pipeline entirely): at
-  most four compilations per engine.
+* instead of one dense ``(max_seq,)`` K/V region per slot, every attention
+  layer/site owns a global pool of ``num_blocks`` fixed-size blocks
+  (``block_size`` tokens, default 16) shared by all slots. Each slot holds
+  a ``(max_blocks,)`` page table of block ids; the jitted step scatters new
+  K/V through the table (:func:`repro.kernels.ops.paged_cache_write`) and
+  attends through it (``attention_prefill_paged`` / ``attention_decode_paged``).
+  Block 0 is a garbage block absorbing pad-column and idle-row writes, so
+  the scatter needs no masking and nothing ever reads it.
+* a slot therefore consumes blocks proportional to its request's **actual**
+  length (prompt + max_new), not ``max_seq`` — and admission is gated on
+  free blocks in the pool, not on worst-case slot capacity. Blocks return
+  to the free list the moment a request completes.
+* a **prefix cache** (vLLM-style, :mod:`repro.serving.paged`) keys each
+  full prompt block by a chained 128-bit prefix digest; ``_admit`` reuses
+  cache-hit leading blocks by refcount (shared blocks are read-only —
+  writes always start at or past the first private block, so copy-on-write
+  degenerates to recomputing the partial tail block) and skips prefill
+  over the hit tokens. Per-request skip counts land in ``metrics.prefix_hit_tokens``.
+  Reuse is enabled only when the family's :class:`~repro.models.registry.
+  CacheSpec` marks it sound (pure-KV families; recurrent/hybrid state must
+  absorb every prompt token, so mamba/zamba run paged-KV without skipping).
+* recurrent state (SSM ``h``, conv windows) stays dense per slot — it is
+  O(1) in sequence — and is zeroed on slot reuse as before; families with
+  no paged support at all (pure SSM, audio) fall back to the dense layout.
 
-Sampling replaces the old greedy-only argmax: per-request temperature,
-top-k, top-p and PRNG seed (see :mod:`repro.serving.sampling`), fused into
-the jitted step. ``temperature=0`` (default) is greedy argmax.
+Scheduling is unchanged from PR 1: prompts are absorbed ``chunk`` tokens
+per slot per step through one fused ``prefill`` call (decode IS prefill
+with C = 1), mixed (B, chunk)/(B, 1) steps, freed slots refilled FIFO with
+no draining barrier. Two compiled shapes × greedy/sampled variants: at
+most four compilations per engine.
 
-Per-request metrics are recorded on ``Request.metrics``: queue wait,
-time-to-first-token, decode tokens/s, prefill/decode step counts.
+Sampling: per-request temperature, top-k, top-p and PRNG seed (see
+:mod:`repro.serving.sampling`), fused into the jitted step;
+``temperature=0`` (default) is greedy argmax.
+
+Per-request metrics on ``Request.metrics``: queue wait, time-to-first-
+token, decode tokens/s, prefill/decode step counts, prefix-hit tokens.
+Accessors are NaN-safe — reading ``ttft`` before the first token lands or
+``decode_tok_per_s`` of a single-token generation returns ``nan``, never a
+garbage epoch delta or a fake 0.0.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Any
@@ -43,6 +61,8 @@ import numpy as np
 import repro.core as nn
 from repro.models.registry import ModelApi
 from repro.serving import sampling
+from repro.serving.paged import (BlockAllocator, PrefixCache,
+                                 blocks_for_tokens, prefix_keys)
 
 
 @dataclasses.dataclass
@@ -53,19 +73,32 @@ class RequestMetrics:
     done_t: float = 0.0
     prefill_steps: int = 0
     decode_steps: int = 0
+    prefix_hit_tokens: int = 0  # prompt tokens skipped via the prefix cache
 
     @property
     def queue_wait(self) -> float:
+        """Submit -> admission; NaN until the request is admitted."""
+        if self.admit_t == 0.0 or self.submit_t == 0.0:
+            return float("nan")
         return self.admit_t - self.submit_t
 
     @property
     def ttft(self) -> float:
-        """Time to first token, from submit."""
+        """Time to first token, from submit; NaN until that token lands."""
+        if self.first_token_t == 0.0 or self.submit_t == 0.0:
+            return float("nan")
         return self.first_token_t - self.submit_t
 
     def decode_tok_per_s(self, n_generated: int) -> float:
+        """Steady-state decode rate; NaN when undefined (single-token
+        generations have no decode interval, unfinished requests no span).
+        """
+        if n_generated <= 1:
+            return float("nan")
         dt = self.done_t - self.first_token_t
-        return (n_generated - 1) / dt if dt > 0 and n_generated > 1 else 0.0
+        if not dt > 0.0:
+            return float("nan")
+        return (n_generated - 1) / dt
 
 
 @dataclasses.dataclass
@@ -88,7 +121,9 @@ class Request:
 class ServingEngine:
     def __init__(self, api: ModelApi, params: dict[str, Any], *,
                  max_batch: int = 4, max_seq: int = 256, chunk: int = 16,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, paged: bool | None = None,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 prefix_cache: bool = True):
         self.api = api
         self.params = params
         self.B = max_batch
@@ -102,55 +137,176 @@ class ServingEngine:
         self.active: list[Request | None] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int32)          # next write index
         self.pending_prompt: list[deque[int]] = [deque() for _ in range(max_batch)]
-        # chunk-1 headroom: a C-wide cache write starting at pos <= max_seq-1
-        # must never clamp (pad columns past a row's valid length would
-        # otherwise shift onto live entries)
-        self.state = api.decode_state_init(
-            max_batch, max_seq + self.chunk, cache_dtype)
-        self._step = jax.jit(self._step_fn, static_argnames=("do_sample",))
         self.completed: list[Request] = []
 
+        can_page = api.prefill_paged is not None and api.cache_spec.paged
+        self.paged = can_page if paged is None else (paged and can_page)
+        if self.paged:
+            self.block_size = int(block_size)
+            # tables must cover every write of a padded chunk starting at
+            # pos <= max_seq - 1 (pads past that spill into garbage blk 0)
+            self.max_blocks = math.ceil((max_seq + self.chunk)
+                                        / self.block_size)
+            # default pool: every slot can hold a max-length request, + the
+            # garbage block; size it down to oversubscribe slots on memory
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else max_batch * self.max_blocks + 1)
+            self.state = api.paged_state_init(
+                max_batch, self.num_blocks, self.block_size, cache_dtype)
+            self.alloc = BlockAllocator(self.num_blocks, self.block_size)
+            self.prefix = (PrefixCache(self.alloc)
+                           if prefix_cache and api.cache_spec.prefix_reuse
+                           else None)
+            self.pages = np.zeros((max_batch, self.max_blocks), np.int32)
+            self._prompt_keys: dict[int, list[bytes]] = {}  # id(req) -> keys
+            self._slot_blocks: list[list[int]] = [[] for _ in range(max_batch)]
+            self._slot_keys: list[list[bytes]] = [[] for _ in range(max_batch)]
+            self._slot_hits = np.zeros(max_batch, np.int32)
+            self._slot_plen = np.zeros(max_batch, np.int32)
+            self._step = jax.jit(self._step_paged_fn,
+                                 static_argnames=("do_sample",))
+        else:
+            # dense fallback: one (max_seq + chunk)-deep region per slot.
+            # chunk-1 headroom: a C-wide cache write starting at pos <=
+            # max_seq-1 must never clamp (pad columns past a row's valid
+            # length would otherwise shift onto live entries)
+            self.prefix = None
+            self.state = api.decode_state_init(
+                max_batch, max_seq + self.chunk, cache_dtype)
+            self._step = jax.jit(self._step_fn,
+                                 static_argnames=("do_sample",))
+
     # ------------------------------------------------------------------ #
+    def _sample_or_greedy(self, logits, temps, top_k, top_p, seeds, counts,
+                          do_sample):
+        last = logits[:, -1, :].astype(jnp.float32)
+        if do_sample:
+            return sampling.sample(last, temps, top_k, top_p, seeds, counts)
+        # all-greedy batch (the default): skip the (B, V) sort pipeline
+        return jnp.argmax(last, axis=-1).astype(jnp.int32)
+
     def _step_fn(self, params, tokens, state, pos, length,
                  temps, top_k, top_p, seeds, counts, *, do_sample):
         logits, new_state = nn.apply(
             lambda t, s, p, l: self._prefill_fn(t, s, p, l),
             params, tokens, state, pos, length)
-        last = logits[:, -1, :].astype(jnp.float32)
-        if do_sample:
-            next_tok = sampling.sample(last, temps, top_k, top_p,
-                                       seeds, counts)
-        else:
-            # all-greedy batch (the default): skip the (B, V) sort pipeline
-            next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        next_tok = self._sample_or_greedy(logits, temps, top_k, top_p,
+                                          seeds, counts, do_sample)
+        return next_tok, new_state
+
+    def _step_paged_fn(self, params, tokens, state, pages, pos, length,
+                       temps, top_k, top_p, seeds, counts, *, do_sample):
+        logits, new_state = nn.apply(
+            lambda t, s, g, p, l: self.api.prefill_paged(t, s, g, p, l),
+            params, tokens, state, pages, pos, length)
+        next_tok = self._sample_or_greedy(logits, temps, top_k, top_p,
+                                          seeds, counts, do_sample)
         return next_tok, new_state
 
     # ------------------------------------------------------------------ #
+    def _request_blocks(self, req: Request) -> int:
+        """Total block footprint of a request: what it will actually write
+        (truncated prompt + generation), NOT max_seq — the paged capacity
+        win. Prefix hits reduce *fresh* allocation, never this total (hit
+        blocks occupy the pool and stay pinned for the whole request)."""
+        plen = min(len(req.prompt), self.max_seq - 1)
+        return min(blocks_for_tokens(plen + req.max_new_tokens,
+                                     self.block_size), self.max_blocks)
+
     def submit(self, req: Request) -> None:
+        if self.paged:
+            need = self._request_blocks(req)
+            if need > self.num_blocks - 1:
+                # can never fit even an empty pool: reject up front (a
+                # mid-scheduling failure would wedge the FIFO queue)
+                raise ValueError(
+                    f"request {req.uid} needs {need} blocks; pool has "
+                    f"{self.num_blocks - 1} usable — raise num_blocks or "
+                    f"lower max_seq/max_new_tokens")
+            if self.prefix is not None:
+                # memoize: admission may retry every step while the pool
+                # is short; the O(plen) key build must not repeat
+                self._prompt_keys[id(req)] = prefix_keys(
+                    req.prompt[: self.max_seq - 1], self.block_size)
         req.metrics.submit_t = time.monotonic()
         self.queue.append(req)
+
+    def _admit_one_paged(self, slot: int, req: Request) -> bool:
+        """Try to place ``req`` in ``slot``: prefix peek, then block-based
+        admission control. Returns False when the pool is short (the
+        request stays queued — FIFO, no skip-ahead); a failed attempt
+        mutates nothing, so per-step retries are free of refcount churn
+        and prefix-stat/LRU skew."""
+        prompt = req.prompt[: self.max_seq - 1]
+        plen = len(prompt)
+        keys = (self._prompt_keys.get(id(req), [])
+                if self.prefix is not None else [])
+        hits = self.prefix.peek(keys) if self.prefix is not None else []
+        peeked = len(hits)     # pre-pop count: stats/LRU credit ALL hits
+        # never skip the whole prompt: >= 1 token must still run through
+        # prefill so the step has logits to sample the first token from
+        while hits and len(hits) * self.block_size >= plen:
+            hits.pop()
+        need = self._request_blocks(req)
+        fresh = need - len(hits)
+        if self.prefix is not None:
+            # incref hits before any eviction so it can't reclaim them
+            self.prefix.acquire(hits)
+        short = fresh - self.alloc.free_blocks
+        if short > 0:
+            # evict only when it actually covers the shortfall — otherwise
+            # admission is doomed until an active request completes, and
+            # flushing hot prefixes would buy nothing
+            if self.prefix is None or self.prefix.evictable() < short:
+                if self.prefix is not None:
+                    self.prefix.release(hits)
+                return False
+            self.prefix.evict(short)
+        blocks = hits + self.alloc.alloc(fresh)
+        if self.prefix is not None:
+            # peeked, not len(hits): a full-prompt repeat still touched its
+            # deepest block — keep its LRU recency hot and count the hit
+            self.prefix.commit(keys, peeked)
+            self._prompt_keys.pop(id(req), None)
+        self.active[slot] = req
+        self._slot_blocks[slot] = blocks
+        self._slot_keys[slot] = keys
+        self._slot_hits[slot] = len(hits)
+        self._slot_plen[slot] = plen
+        self.pages[slot, :] = 0
+        self.pages[slot, :len(blocks)] = blocks
+        skip = len(hits) * self.block_size
+        self.pos[slot] = skip
+        self.pending_prompt[slot] = deque(prompt[skip:])
+        req.metrics.prefix_hit_tokens = skip
+        return True
 
     def _admit(self, now: float) -> None:
         fresh = []
         for slot in range(self.B):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.popleft()
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            if self.paged:
+                if not self._admit_one_paged(slot, req):
+                    break   # pool short: keep FIFO order, wait for frees
+            else:
                 self.active[slot] = req
                 self.pos[slot] = 0
                 # truncate: at most max_seq-1 prompt tokens fit the cache
                 # while leaving room for one generated token
                 self.pending_prompt[slot] = deque(
                     req.prompt[: self.max_seq - 1])
-                req.metrics.admit_t = now
-                fresh.append(slot)
+            self.queue.popleft()
+            req.metrics.admit_t = now
+            fresh.append(slot)
         if fresh:
             idx = jnp.asarray(fresh, jnp.int32)
             # Zero the admitted rows of every *recurrent* state leaf so a
             # freed slot's SSM state can't leak forward (batch is axis 1,
             # see registry docstring). KV-cache leaves — keyed "k"/"v" —
-            # are skipped: a fresh occupant starts at pos=0 and attention
-            # only ever sees entries it has written, so zeroing them would
-            # just copy the whole cache per admission.
+            # are skipped: paged pools have no batch axis at all, and a
+            # dense cache is positionally overwritten and length-masked.
             def reset(path, a):
                 last = path[-1]
                 if (isinstance(last, jax.tree_util.DictKey)
@@ -158,6 +314,29 @@ class ServingEngine:
                     return a
                 return a.at[:, idx].set(0)
             self.state = jax.tree_util.tree_map_with_path(reset, self.state)
+
+    def _register_prompt_blocks(self, slot: int) -> None:
+        """Prompt fully absorbed: publish its full, exclusively-written
+        blocks to the prefix map so later requests can share them."""
+        if self.prefix is None:
+            return
+        plen = int(self._slot_plen[slot])
+        keys = self._slot_keys[slot]
+        blocks = self._slot_blocks[slot]
+        for j in range(int(self._slot_hits[slot]),
+                       plen // self.block_size):
+            self.prefix.register(keys[j], blocks[j])
+
+    def _free_slot(self, slot: int) -> None:
+        self.active[slot] = None   # slot refilled next step
+        self.pos[slot] = 0
+        self.pending_prompt[slot] = deque()
+        if self.paged:
+            for bid in self._slot_blocks[slot]:
+                self.alloc.decref(bid)
+            self._slot_blocks[slot] = []
+            self._slot_keys[slot] = []
+            self.pages[slot, :] = 0
 
     def step(self) -> int:
         """One synchronized mixed prefill/decode step; returns #active."""
@@ -177,6 +356,7 @@ class ServingEngine:
         seeds = np.zeros(B, np.int32)
         counts = np.zeros(B, np.int32)
         emits = [False] * B
+        prompt_done = []
         for s in active_slots:
             req = self.active[s]
             pend = self.pending_prompt[s]
@@ -186,6 +366,8 @@ class ServingEngine:
                     tokens[s, i] = pend.popleft()
                 length[s] = k
                 emits[s] = not pend   # prompt fully absorbed: sample now
+                if not pend:
+                    prompt_done.append(s)
                 req.metrics.prefill_steps += 1
             else:
                 tokens[s, 0] = (req.generated[-1] if req.generated
@@ -200,13 +382,18 @@ class ServingEngine:
                         else req.uid) & 0x7FFFFFFF
             counts[s] = len(req.generated)
         do_sample = any(temps[s] > 0.0 for s in active_slots)
+        args = (self.params, jnp.asarray(tokens), self.state)
+        if self.paged:
+            args += (jnp.asarray(self.pages),)
         next_tok, self.state = self._step(
-            self.params, jnp.asarray(tokens), self.state,
-            jnp.asarray(self.pos), jnp.asarray(length), jnp.asarray(temps),
-            jnp.asarray(top_k), jnp.asarray(top_p), jnp.asarray(seeds),
-            jnp.asarray(counts), do_sample=do_sample)
+            *args, jnp.asarray(self.pos), jnp.asarray(length),
+            jnp.asarray(temps), jnp.asarray(top_k), jnp.asarray(top_p),
+            jnp.asarray(seeds), jnp.asarray(counts), do_sample=do_sample)
         next_tok = np.asarray(next_tok)
         now = time.monotonic()
+        if self.paged:
+            for s in prompt_done:
+                self._register_prompt_blocks(s)
         for s in active_slots:
             req = self.active[s]
             self.pos[s] += int(length[s])
@@ -222,9 +409,7 @@ class ServingEngine:
                 req.done = True
                 req.metrics.done_t = now
                 self.completed.append(req)
-                self.active[s] = None   # slot refilled next step
-                self.pos[s] = 0
-                self.pending_prompt[s] = deque()
+                self._free_slot(s)
         return sum(1 for r in self.active if r is not None)
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
@@ -236,17 +421,27 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ #
     def metrics_summary(self) -> dict[str, float]:
-        """Aggregate per-request metrics over completed requests."""
+        """Aggregate per-request metrics over completed requests (NaN
+        entries — e.g. decode rate of single-token generations — are
+        excluded from the means, never averaged in)."""
         done = self.completed
         if not done:
             return {}
-        ttfts = [r.metrics.ttft for r in done]
-        waits = [r.metrics.queue_wait for r in done]
-        tps = [r.metrics.decode_tok_per_s(len(r.generated)) for r in done
-               if len(r.generated) > 1]
-        return {
+
+        def finite_mean(vals):
+            vals = [v for v in vals if not math.isnan(v)]
+            return sum(vals) / len(vals) if vals else float("nan")
+
+        out = {
             "requests": float(len(done)),
-            "mean_ttft_s": sum(ttfts) / len(ttfts),
-            "mean_queue_wait_s": sum(waits) / len(waits),
-            "mean_decode_tok_per_s": sum(tps) / len(tps) if tps else 0.0,
+            "mean_ttft_s": finite_mean(r.metrics.ttft for r in done),
+            "mean_queue_wait_s": finite_mean(
+                r.metrics.queue_wait for r in done),
+            "mean_decode_tok_per_s": finite_mean(
+                r.metrics.decode_tok_per_s(len(r.generated)) for r in done),
         }
+        if self.paged:
+            out["free_blocks"] = float(self.alloc.free_blocks)
+            out["mean_prefix_hit_tokens"] = (
+                sum(r.metrics.prefix_hit_tokens for r in done) / len(done))
+        return out

@@ -1,0 +1,220 @@
+"""Block-paged KV-cache bookkeeping: allocator, refcounts, prefix cache.
+
+Host-side (pure Python / numpy) twin of the device-side paged pools that
+:mod:`repro.kernels.ops` reads through page tables. The device never sees
+this module — the engine translates its decisions into ``(B, max_blocks)``
+int32 page tables passed to the jitted step.
+
+Layout invariants the engine relies on:
+
+* block ids run ``1 .. num_blocks-1``; **block 0 is the garbage block** —
+  never handed out, it absorbs writes from pad columns and idle batch rows
+  (their page-table entries stay 0) so the jitted scatter needs no masking.
+  Nothing ever reads block 0 through a valid length/position mask.
+* a block is writable only while exactly one page table references it
+  (refcount 1). Shared blocks (prefix hits, refcount > 1) are always *full*
+  prompt blocks and sit strictly below every writer's write offset, so the
+  copy-on-write case degenerates to "recompute the partial tail block"
+  — :class:`BlockAllocator.fork` exists for completeness and tests.
+* the prefix map holds one reference per registered block, keeping reusable
+  prompt blocks alive after their owner completes; eviction (LRU, only
+  entries nothing else references) turns them back into free blocks under
+  pool pressure.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Number of blocks covering ``n_tokens`` positions."""
+    return -(-max(0, n_tokens) // block_size)
+
+
+def prefix_keys(tokens: list[int], block_size: int) -> list[bytes]:
+    """Per-block prefix keys for every *full* block of ``tokens``.
+
+    ``key[i]`` is a chained 128-bit blake2b digest committing to every
+    token in blocks ``0..i`` — a hit on ``key[i]`` licenses reuse of block
+    ``i`` given blocks ``0..i-1`` already hit. The chain keeps the build
+    O(plen) total and each key O(1) resident (an exact-prefix-tuple key
+    would cost O(plen²/block_size) in map memory and per-peek hashing),
+    while 128 bits make a cross-prompt collision — serving another
+    prompt's KV blocks — cryptographically negligible, unlike Python's
+    64-bit ``hash()``. Keys are built once per request at submit and
+    memoized by the engine.
+    """
+    out: list[bytes] = []
+    d = b"repro-paged-prefix-v1"
+    for i in range(len(tokens) // block_size):
+        blk = tokens[i * block_size:(i + 1) * block_size]
+        h = hashlib.blake2b(d, digest_size=16)
+        h.update(",".join(map(str, blk)).encode())
+        d = h.digest()
+        out.append(d)
+    return out
+
+
+class BlockAllocator:
+    """Fixed pool of ``num_blocks`` blocks with a free list and refcounts.
+
+    ``alloc`` pops from the free list (refcount 1); ``incref`` shares a live
+    block; ``decref`` returns it to the free list when the count hits 0.
+    Double-free and touching a free block raise — the property tests in
+    ``tests/test_paged_cache.py`` drive these invariants.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
+        self._ref: dict[int, int] = {}   # live blocks only
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        return len(self._ref)
+
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        """Pop ``n`` blocks (each refcount 1). Raises if the pool is short."""
+        if n > len(self._free):
+            raise MemoryError(
+                f"requested {n} blocks, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._ref[b] = 1
+        return out
+
+    def incref(self, bid: int) -> None:
+        if bid not in self._ref:
+            raise ValueError(f"incref on non-live block {bid}")
+        self._ref[bid] += 1
+
+    def decref(self, bid: int) -> bool:
+        """Drop one reference; returns True when the block was freed."""
+        if bid not in self._ref:
+            raise ValueError(f"double free of block {bid}")
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            del self._ref[bid]
+            self._free.append(bid)
+            return True
+        return False
+
+    def fork(self, bid: int) -> int | None:
+        """Copy-on-write helper: given a shared block, allocate a private
+        one (caller copies device contents and decrefs the original).
+        Returns None when the block is already exclusive."""
+        if self.refcount(bid) <= 1:
+            return None
+        new = self.alloc(1)[0]
+        self.decref(bid)
+        return new
+
+    def check_conservation(self) -> bool:
+        """free + live == usable pool, with no id in both sets."""
+        ids = set(self._free) | set(self._ref)
+        return (len(self._free) + len(self._ref) == self.num_blocks - 1
+                and len(ids) == self.num_blocks - 1
+                and 0 not in ids
+                and all(c > 0 for c in self._ref.values()))
+
+
+class PrefixCache:
+    """LRU map ``prefix key -> block id`` over full prompt blocks.
+
+    Each entry holds one allocator reference, so registered blocks outlive
+    their first owner. Admission is two-phase so a *failed* attempt (pool
+    short) leaves no trace: ``peek`` finds the leading hit run without
+    touching refcounts, stats or LRU order; the caller then ``acquire``\\ s
+    the hits (incref — protects them from its own eviction pass) and, once
+    the admission is certain, ``commit``\\ s (stats + LRU recency). ``evict``
+    frees idle entries (refcount 1 — nothing but the map) in LRU order
+    when the pool runs dry.
+    """
+
+    def __init__(self, alloc: BlockAllocator):
+        self.alloc = alloc
+        self._map: OrderedDict[bytes, int] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def peek(self, keys: list[bytes]) -> list[int]:
+        """Block ids for the longest leading run of hits. Pure read: no
+        refcount, stat or LRU mutation — safe to call on every retry of a
+        blocked admission."""
+        out: list[int] = []
+        for k in keys:
+            bid = self._map.get(k)
+            if bid is None:
+                break
+            out.append(bid)
+        return out
+
+    def acquire(self, bids: list[int]) -> None:
+        """Incref peeked hit blocks (the caller now references them)."""
+        for b in bids:
+            self.alloc.incref(b)
+
+    def release(self, bids: list[int]) -> None:
+        """Undo ``acquire`` (admission fell through after all)."""
+        for b in bids:
+            self.alloc.decref(b)
+
+    def commit(self, keys: list[bytes], n_hits: int) -> None:
+        """Admission succeeded: record stats, refresh LRU recency."""
+        for k in keys[:n_hits]:
+            self._map.move_to_end(k)
+        self.hits += n_hits
+        if n_hits < len(keys):
+            self.misses += 1
+
+    def lookup(self, keys: list[bytes]) -> list[int]:
+        """One-shot peek + acquire + commit (hits come back incref'd)."""
+        bids = self.peek(keys)
+        self.acquire(bids)
+        self.commit(keys, len(bids))
+        return bids
+
+    def register(self, key: bytes, bid: int) -> None:
+        """Pin a freshly written full prompt block under its prefix key.
+        First writer wins: an existing entry is kept (it may be shared)."""
+        if key in self._map:
+            return
+        self.alloc.incref(bid)
+        self._map[key] = bid
+
+    def evictable(self) -> int:
+        """How many entries :meth:`evict` could free right now."""
+        return sum(1 for bid in self._map.values()
+                   if self.alloc.refcount(bid) == 1)
+
+    def evict(self, n_blocks: int) -> int:
+        """Free up to ``n_blocks`` idle entries (LRU first). Returns the
+        number actually freed; in-use entries are skipped, not stalled on."""
+        freed = 0
+        for h in list(self._map):
+            if freed >= n_blocks:
+                break
+            bid = self._map[h]
+            if self.alloc.refcount(bid) == 1:   # only the map holds it
+                del self._map[h]
+                self.alloc.decref(bid)
+                freed += 1
+        return freed

@@ -1,0 +1,118 @@
+"""Property tests for the paged-cache block allocator (hypothesis).
+
+Random interleavings of alloc / share / free / fork / evict against a
+model of who owns what, checking the invariants the serving engine's
+correctness rests on:
+
+* pool conservation: free + live == usable blocks, always;
+* no double-free: dropping a dead reference raises instead of corrupting
+  the free list;
+* exclusivity: a block referenced by two "page tables" is always
+  refcounted as shared — and fork() restores exclusivity before a write.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paged import BlockAllocator, PrefixCache, prefix_keys
+
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(0, 4)),
+        st.tuples(st.just("share"), st.integers(0, 200)),
+        st.tuples(st.just("free"), st.integers(0, 200)),
+        st.tuples(st.just("fork"), st.integers(0, 200)),
+    ),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=200, deadline=None)
+@given(num_blocks=st.integers(2, 24), ops=OPS)
+def test_allocator_invariants_under_random_ops(num_blocks, ops):
+    a = BlockAllocator(num_blocks, 4)
+    refs: list[int] = []               # our model: one entry per reference
+
+    for op, arg in ops:
+        if op == "alloc":
+            if a.can_alloc(arg):
+                got = a.alloc(arg)
+                assert len(set(got)) == arg and 0 not in got
+                assert not (set(got) & set(refs)), \
+                    "alloc handed out a block someone still references"
+                refs.extend(got)
+            else:
+                with pytest.raises(MemoryError):
+                    a.alloc(arg)
+        elif op == "share" and refs:
+            b = refs[arg % len(refs)]
+            a.incref(b)
+            refs.append(b)
+        elif op == "free" and refs:
+            b = refs.pop(arg % len(refs))
+            freed = a.decref(b)
+            assert freed == (b not in refs), \
+                "block freed while other references remain (or kept dead)"
+        elif op == "fork" and refs:
+            b = refs[arg % len(refs)]
+            if refs.count(b) > 1 and a.can_alloc(1):
+                nb = a.fork(b)
+                assert nb is not None and nb != b
+                refs.remove(b)
+                refs.append(nb)
+            elif refs.count(b) == 1:
+                assert a.fork(b) is None
+
+        # invariants after EVERY operation
+        assert a.check_conservation()
+        assert a.free_blocks == (num_blocks - 1) - len(set(refs))
+        for b in set(refs):
+            assert a.refcount(b) == refs.count(b), \
+                "refcount out of sync with outstanding references"
+        for b in set(refs):
+            if refs.count(b) >= 2:
+                assert a.refcount(b) >= 2, \
+                    "block in two page tables but not marked shared"
+
+    # drain: every reference released returns the pool to fully-free
+    while refs:
+        a.decref(refs.pop())
+    assert a.free_blocks == num_blocks - 1 and a.check_conservation()
+
+
+@settings(max_examples=100, deadline=None)
+@given(tokens=st.lists(st.integers(0, 50), min_size=0, max_size=40),
+       block_size=st.integers(1, 8))
+def test_prefix_keys_model(tokens, block_size):
+    ks = prefix_keys(tokens, block_size)
+    assert len(ks) == len(tokens) // block_size
+    # equal prefixes key equal; any earlier-block perturbation changes
+    # every later key (the digest chain commits to the whole prefix)
+    assert ks == prefix_keys(tokens[:len(ks) * block_size], block_size)
+    assert len(set(ks)) == len(ks)     # each key commits to its depth too
+    if ks:
+        other = list(tokens)
+        other[0] += 1
+        assert all(a != b for a, b in zip(prefix_keys(other, block_size),
+                                          ks))
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=st.integers(1, 5), evict=st.integers(0, 10))
+def test_prefix_cache_pins_exactly_once(n, evict):
+    a = BlockAllocator(2 * n + 2, 4)
+    pc = PrefixCache(a)
+    keys = prefix_keys(list(range(4 * n)), 4)
+    blocks = a.alloc(n)
+    for k, b in zip(keys, blocks):
+        pc.register(k, b)
+        pc.register(k, b)              # idempotent: still one map ref
+    for b in blocks:
+        a.decref(b)                    # owner gone; map keeps them live
+    assert a.live_blocks == n
+    freed = pc.evict(evict)
+    assert freed == min(evict, n)
+    assert a.free_blocks == (2 * n + 1) - (n - freed)
+    assert a.check_conservation()

@@ -1,0 +1,414 @@
+"""Block-paged KV cache: allocator invariants (deterministic), paged-vs-
+dense logits equivalence, engine behavior under paging + prefix reuse.
+
+Property-based allocator tests live in ``test_paged_allocator_props.py``
+(hypothesis, optional); this module runs everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as nn
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.paged import (BlockAllocator, PrefixCache,
+                                 blocks_for_tokens, prefix_keys)
+
+DENSE = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                    head_dim=16, remat="none")
+SSM = ModelConfig(name="ssm", family="ssm", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  head_dim=16, ssm_state=16, ssm_head_dim=32, ssm_chunk=4,
+                  remat="none")
+HYBRID = ModelConfig(name="hyb", family="hybrid", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                     head_dim=16, ssm_state=16, ssm_head_dim=32, ssm_chunk=4,
+                     attn_every=2, remat="none")
+
+_PARAMS_CACHE: dict[str, dict] = {}
+
+
+def init_params(cfg):
+    if cfg.name not in _PARAMS_CACHE:
+        api = get_model(cfg)
+        _PARAMS_CACHE[cfg.name] = nn.init(
+            lambda t: api.forward(t), jax.random.key(0),
+            jnp.zeros((1, 8), jnp.int32))
+    return _PARAMS_CACHE[cfg.name]
+
+
+# ---------------------------------------------------------------------- #
+# allocator + prefix map invariants (deterministic)
+# ---------------------------------------------------------------------- #
+
+def test_allocator_alloc_free_roundtrip():
+    a = BlockAllocator(8, 4)
+    assert a.free_blocks == 7          # block 0 reserved
+    got = a.alloc(3)
+    assert len(set(got)) == 3 and 0 not in got
+    assert a.free_blocks == 4 and all(a.refcount(b) == 1 for b in got)
+    for b in got:
+        assert a.decref(b)             # freed
+    assert a.free_blocks == 7 and a.check_conservation()
+
+
+def test_allocator_double_free_raises():
+    a = BlockAllocator(4, 4)
+    (b,) = a.alloc(1)
+    a.decref(b)
+    with pytest.raises(ValueError):
+        a.decref(b)
+    with pytest.raises(ValueError):
+        a.incref(b)                    # free blocks can't be shared either
+
+
+def test_allocator_overcommit_raises():
+    a = BlockAllocator(4, 4)
+    with pytest.raises(MemoryError):
+        a.alloc(4)                     # only 3 usable
+    assert a.check_conservation()
+
+
+def test_allocator_shared_block_survives_one_owner():
+    a = BlockAllocator(4, 4)
+    (b,) = a.alloc(1)
+    a.incref(b)                        # second page table references it
+    assert not a.decref(b)             # first owner leaves: still live
+    assert a.refcount(b) == 1
+    assert a.decref(b)                 # last owner frees it
+    assert a.check_conservation()
+
+
+def test_allocator_fork_copy_on_write():
+    a = BlockAllocator(8, 4)
+    (b,) = a.alloc(1)
+    assert a.fork(b) is None           # exclusive: write in place
+    a.incref(b)
+    nb = a.fork(b)                     # shared: get a private copy
+    assert nb is not None and nb != b
+    assert a.refcount(b) == 1 and a.refcount(nb) == 1
+    assert a.check_conservation()
+
+
+def test_prefix_cache_register_lookup_evict():
+    a = BlockAllocator(8, 4)
+    pc = PrefixCache(a)
+    toks = list(range(12))
+    keys = prefix_keys(toks, 4)
+    assert len(keys) == 3
+    blocks = a.alloc(3)
+    for k, b in zip(keys, blocks):
+        pc.register(k, b)
+    for b in blocks:                   # owner completes
+        a.decref(b)
+    assert a.live_blocks == 3          # map pins them
+    hits = pc.lookup(keys)
+    assert hits == blocks              # same prefix -> same blocks, shared
+    assert all(a.refcount(b) == 2 for b in blocks)
+    miss = pc.lookup(prefix_keys(list(range(99, 111)), 4))
+    assert miss == []
+    pc.release(hits)
+    assert pc.evict(10) == 3           # idle now: all evictable, LRU
+    assert a.free_blocks == 7 and a.check_conservation()
+
+
+def test_prefix_cache_never_evicts_in_use_blocks():
+    a = BlockAllocator(8, 4)
+    pc = PrefixCache(a)
+    keys = prefix_keys(list(range(8)), 4)
+    blocks = a.alloc(2)
+    for k, b in zip(keys, blocks):
+        pc.register(k, b)
+    hits = pc.lookup(keys)             # a second request shares them
+    assert pc.evictable() == 0
+    assert pc.evict(10) == 0           # nothing evictable while shared
+    pc.release(hits)
+    for b in blocks:
+        a.decref(b)
+    assert pc.evictable() == 2
+    assert pc.evict(10) == 2
+
+
+def test_prefix_cache_peek_mutates_nothing():
+    """Failed-admission retries peek every step: no refcounts, stats or
+    LRU order may move until the admission commits."""
+    a = BlockAllocator(8, 4)
+    pc = PrefixCache(a)
+    keys = prefix_keys(list(range(8)), 4)
+    blocks = a.alloc(2)
+    for k, b in zip(keys, blocks):
+        pc.register(k, b)
+    for _ in range(5):
+        assert pc.peek(keys) == blocks
+    assert pc.hits == 0 and pc.misses == 0
+    assert all(a.refcount(b) == 2 for b in blocks)  # owner + map only
+    pc.commit(keys, 2)
+    assert pc.hits == 2 and pc.misses == 0
+
+
+def test_prefix_key_sensitivity():
+    # same block content after a different prefix must key differently
+    # (the digest chain commits to the whole prefix, not just the block)
+    k1 = prefix_keys([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    k2 = prefix_keys([5, 6, 7, 8, 9, 9, 9, 9], 4)
+    assert k1[0] != k2[0] and k1[1] != k2[1]
+    # deterministic across calls (the map must survive re-keying)
+    assert k1 == prefix_keys([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    # token boundaries are unambiguous: [1, 23] vs [12, 3] differ
+    assert prefix_keys([1, 23], 2) != prefix_keys([12, 3], 2)
+    assert blocks_for_tokens(0, 4) == 0
+    assert blocks_for_tokens(9, 4) == 3
+
+
+# ---------------------------------------------------------------------- #
+# paged vs dense: exact logits equivalence at the model level
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("block_size", [4, 8, 16])
+@pytest.mark.parametrize("cfg", [DENSE, HYBRID],
+                         ids=[c.family for c in [DENSE, HYBRID]])
+def test_paged_matches_dense_logits(cfg, block_size):
+    """Identical (bitwise) logits from the dense cache and the block pool,
+    for every prefill chunk and decode step. chunk=5 with plen=13 makes
+    chunks span block boundaries mid-chunk at block_size 4 and 8, and the
+    ragged tail exercises pad-column writes into partial blocks."""
+    api = get_model(cfg)
+    params = init_params(cfg)
+    B, plen, chunk, ndec = 2, 13, 5, 3
+    S_dense = 32                       # == max_blocks * block_size below
+    MB = S_dense // block_size
+    rng = np.random.default_rng(7)
+    toks = rng.integers(1, cfg.vocab_size, (B, plen)).astype(np.int32)
+
+    def run_dense():
+        st = api.decode_state_init(B, S_dense, jnp.float32)
+        out = []
+        off, cur = 0, None
+        while off < plen:
+            k = min(chunk, plen - off)
+            buf = np.zeros((B, chunk), np.int32)
+            buf[:, :k] = toks[:, off:off + k]
+            lg, st = nn.apply(lambda t, s, p, l: api.prefill(t, s, p, l),
+                              params, jnp.asarray(buf), st,
+                              jnp.full((B,), off, jnp.int32),
+                              jnp.full((B,), k, jnp.int32))
+            off += k
+        out.append(np.asarray(lg, np.float32))
+        cur = np.argmax(out[-1][:, -1], -1).astype(np.int32)
+        for i in range(ndec):
+            lg, st = nn.apply(lambda t, s, p, l: api.prefill(t, s, p, l),
+                              params, jnp.asarray(cur[:, None]), st,
+                              jnp.full((B,), plen + i, jnp.int32),
+                              jnp.ones((B,), jnp.int32))
+            out.append(np.asarray(lg, np.float32))
+            cur = np.argmax(out[-1][:, -1], -1).astype(np.int32)
+        return out
+
+    def run_paged():
+        NB = B * MB + 1                # + garbage block 0
+        st = api.paged_state_init(B, NB, block_size, jnp.float32)
+        pages = jnp.asarray(
+            1 + np.arange(B * MB).reshape(B, MB).astype(np.int32))
+        out = []
+        off, cur = 0, None
+        while off < plen:
+            k = min(chunk, plen - off)
+            buf = np.zeros((B, chunk), np.int32)
+            buf[:, :k] = toks[:, off:off + k]
+            lg, st = nn.apply(
+                lambda t, s, g, p, l: api.prefill_paged(t, s, g, p, l),
+                params, jnp.asarray(buf), st, pages,
+                jnp.full((B,), off, jnp.int32),
+                jnp.full((B,), k, jnp.int32))
+            off += k
+        out.append(np.asarray(lg, np.float32))
+        cur = np.argmax(out[-1][:, -1], -1).astype(np.int32)
+        for i in range(ndec):
+            lg, st = nn.apply(
+                lambda t, s, g, p, l: api.prefill_paged(t, s, g, p, l),
+                params, jnp.asarray(cur[:, None]), st, pages,
+                jnp.full((B,), plen + i, jnp.int32),
+                jnp.ones((B,), jnp.int32))
+            out.append(np.asarray(lg, np.float32))
+            cur = np.argmax(out[-1][:, -1], -1).astype(np.int32)
+        return out
+
+    dense, paged = run_dense(), run_paged()
+    assert len(dense) == len(paged) == 1 + ndec
+    for i, (a, b) in enumerate(zip(dense, paged)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"step {i}: paged logits diverge from dense")
+
+
+@pytest.mark.parametrize("cfg", [DENSE, SSM, HYBRID],
+                         ids=[c.family for c in [DENSE, SSM, HYBRID]])
+def test_engine_paged_equals_dense(cfg):
+    """The engine emits identical greedy tokens with the paged cache and
+    with the PR-1 dense layout, across all three LM families (the pure-SSM
+    family has no KV cache — its paged engine IS the dense engine — which
+    this pins down as well)."""
+    api = get_model(cfg)
+    params = init_params(cfg)
+    outs = []
+    for paged in (True, False):
+        eng = ServingEngine(api, params, max_batch=2, max_seq=48, chunk=6,
+                            block_size=4, paged=paged)
+        assert eng.paged == (paged and api.cache_spec.paged)
+        for i in range(4):
+            eng.submit(Request(uid=i, prompt=[1 + i, 2, 3, 4, 5, 6, 7],
+                               max_new_tokens=6))
+        outs.append({r.uid: r.generated for r in eng.run_until_drained()})
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------- #
+# engine: block accounting, admission control, prefix reuse
+# ---------------------------------------------------------------------- #
+
+def make_engine(**kw):
+    api = get_model(DENSE)
+    return ServingEngine(api, init_params(DENSE), **kw)
+
+
+def test_engine_frees_blocks_on_completion():
+    eng = make_engine(max_batch=2, max_seq=64, chunk=4, block_size=4,
+                      prefix_cache=False)
+    total = eng.alloc.free_blocks
+    for i in range(5):
+        eng.submit(Request(uid=i, prompt=[1 + i, 2, 3, 4, 5],
+                           max_new_tokens=3))
+    eng.run_until_drained()
+    assert len(eng.completed) == 5
+    assert eng.alloc.free_blocks == total      # every block returned
+    assert eng.alloc.check_conservation()
+
+
+def test_engine_admission_blocks_on_pool_exhaustion():
+    """With a pool sized for ~one request, requests serialize through the
+    allocator but all complete, FIFO — admission is by free blocks, not
+    free slots."""
+    eng = make_engine(max_batch=3, max_seq=64, chunk=4, block_size=4,
+                      num_blocks=8, prefix_cache=False)
+    for i in range(5):
+        eng.submit(Request(uid=i, prompt=[1 + i] * 10, max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert {r.uid for r in done} == set(range(5))
+    admits = [r.metrics.admit_t for r in sorted(done, key=lambda r: r.uid)]
+    assert all(a <= b for a, b in zip(admits, admits[1:]))
+    assert eng.alloc.check_conservation()
+
+
+def test_engine_prefix_reuse_skips_prefill_and_matches():
+    eng = make_engine(max_batch=1, max_seq=64, chunk=8, block_size=8)
+    prompt = list(range(1, 41))                # 5 full blocks of 8
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    eng.run_until_drained()
+    first = eng.completed[0]
+    assert first.metrics.prefix_hit_tokens == 0
+
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=4))
+    eng.submit(Request(uid=2, prompt=[90] * 20, max_new_tokens=4))
+    done = {r.uid: r for r in eng.run_until_drained()}
+    # full-block hits only, and never the whole prompt (the last token must
+    # re-run through prefill to produce first-token logits): 40 tokens ->
+    # 4 of 5 blocks reused
+    assert done[1].metrics.prefix_hit_tokens == 32
+    assert done[1].generated == first.generated
+    assert done[2].metrics.prefix_hit_tokens == 0
+    # fewer prefill steps: 8 remaining tokens @ chunk 8 = 1 step vs 5
+    assert done[1].metrics.prefill_steps == 1
+    assert first.metrics.prefill_steps == 5
+    # stats credit ALL peeked hits (5), including the deepest block that
+    # the never-skip-whole-prompt rule re-prefills — it stayed LRU-hot
+    assert eng.prefix.hits == 5
+    summary = eng.metrics_summary()
+    assert summary["mean_prefix_hit_tokens"] > 0
+
+
+def test_engine_prefix_partial_block_not_shared():
+    """A prompt whose tail shares a *partial* block with a cached prefix
+    must recompute that tail (copy-on-write degenerates to recompute):
+    hits stop at the last full shared block."""
+    eng = make_engine(max_batch=1, max_seq=64, chunk=4, block_size=8)
+    base = list(range(1, 25))                  # 3 full blocks
+    eng.submit(Request(uid=0, prompt=base, max_new_tokens=2))
+    eng.run_until_drained()
+    # same 24-token prefix + a divergent tail inside block 3
+    eng.submit(Request(uid=1, prompt=base + [77, 78, 79],
+                       max_new_tokens=2))
+    done = {r.uid: r for r in eng.run_until_drained()}
+    assert done[1].metrics.prefix_hit_tokens == 24
+    # and a prompt diverging INSIDE a shared block hits nothing after it
+    eng.submit(Request(uid=2, prompt=base[:4] + [88] * 20,
+                       max_new_tokens=2))
+    done = {r.uid: r for r in eng.run_until_drained()}
+    assert done[2].metrics.prefix_hit_tokens == 0
+
+
+def test_engine_shared_blocks_freed_only_after_all_users():
+    """Two concurrent same-prompt requests share prompt blocks by
+    refcount; the blocks only return to the pool when the prefix map
+    entry is evicted after both complete."""
+    eng = make_engine(max_batch=2, max_seq=64, chunk=8, block_size=8)
+    prompt = list(range(1, 25))                # 3 full blocks
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=12))
+    for _ in range(3):                         # absorb all 3 chunks so the
+        eng.step()                             # prompt blocks get registered
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=2))
+    done = {r.uid: r for r in eng.run_until_drained()}
+    assert done[1].metrics.prefix_hit_tokens == 16
+    assert done[1].generated == done[0].generated[:2]
+    # all requests done: live blocks are exactly the prefix-pinned ones
+    assert eng.alloc.live_blocks == len(eng.prefix)
+    eng.prefix.evict(len(eng.prefix))
+    assert eng.alloc.live_blocks == 0 and eng.alloc.check_conservation()
+
+
+def test_engine_prefix_eviction_under_pressure():
+    """Prefix-pinned blocks are reclaimed (LRU) when admission runs dry,
+    so a full map can never wedge the engine."""
+    eng = make_engine(max_batch=1, max_seq=64, chunk=4, block_size=4,
+                      num_blocks=9)            # 8 usable
+    for i in range(4):
+        eng.submit(Request(uid=i, prompt=[10 * i + j for j in range(9)],
+                           max_new_tokens=3))  # 3 blocks each, 2 registered
+    done = eng.run_until_drained()
+    assert len(done) == 4                      # eviction kept admission alive
+    assert eng.alloc.check_conservation()
+
+
+def test_engine_oversized_request_rejected_at_submit():
+    """A request whose TOTAL footprint (prefix hits included — they stay
+    pinned for the whole request) exceeds the usable pool is rejected at
+    submit, not left to wedge the FIFO queue retrying an impossible
+    admission mid-scheduling."""
+    eng = make_engine(max_batch=1, max_seq=64, chunk=4, block_size=4,
+                      num_blocks=7)            # 6 usable
+    base = list(range(1, 9))                   # 2 full blocks
+    eng.submit(Request(uid=0, prompt=base, max_new_tokens=2))
+    eng.run_until_drained()                    # registers the 2 blocks
+    # same prefix + long tail: need 8 blocks total, even with 2 hits
+    with pytest.raises(ValueError, match="needs 8 blocks"):
+        eng.submit(Request(uid=1, prompt=base + list(range(20, 38)),
+                           max_new_tokens=4))
+    assert not eng.queue                       # never enqueued
+    assert eng.alloc.check_conservation()
+
+
+def test_engine_paged_memory_is_length_proportional():
+    """The paged engine's pool can be sized to actual traffic: requests of
+    ~16 tokens total run fine in a pool 4x smaller than max_batch*max_seq
+    would demand densely."""
+    dense_slots_tokens = 4 * 128
+    eng = make_engine(max_batch=4, max_seq=128, chunk=4, block_size=4,
+                      num_blocks=dense_slots_tokens // (4 * 4) + 1,
+                      prefix_cache=False)
+    for i in range(8):
+        eng.submit(Request(uid=i, prompt=[1 + i] * 8, max_new_tokens=8))
+    done = eng.run_until_drained()
+    assert len(done) == 8
+    assert all(len(r.generated) == 8 for r in done)

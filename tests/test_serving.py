@@ -1,6 +1,8 @@
 
 """Serving engine: continuous batching, chunked prefill, sampling."""
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,7 +13,7 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.models.registry import get_model
 from repro.serving import sampling
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, RequestMetrics, ServingEngine
 
 CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
@@ -234,6 +236,50 @@ def test_slot_reuse_resets_ssm_state():
     eng.submit(Request(uid=1, prompt=[5, 6, 7], max_new_tokens=4))
     got = {r.uid: r.generated for r in eng.run_until_drained()}
     assert got[1] == want
+
+
+def test_metrics_nan_safe_before_events():
+    """ttft read before the first token lands must be NaN, not a garbage
+    negative epoch delta; same for queue_wait before admission."""
+    m = RequestMetrics()
+    assert math.isnan(m.ttft) and math.isnan(m.queue_wait)
+    m.submit_t = 100.0                 # submitted, nothing else yet
+    assert math.isnan(m.ttft), "ttft leaked a -submit_t epoch delta"
+    assert math.isnan(m.queue_wait)
+    m.admit_t = 100.5
+    assert m.queue_wait == pytest.approx(0.5)
+    m.first_token_t = 101.0
+    assert m.ttft == pytest.approx(1.0)
+
+
+def test_metrics_decode_rate_single_token_is_nan():
+    """A single-token generation has no decode interval: the rate is NaN
+    (undefined), not a fake 0.0 that drags aggregate means down."""
+    m = RequestMetrics(submit_t=1.0, first_token_t=2.0, done_t=2.0)
+    assert math.isnan(m.decode_tok_per_s(1))
+    assert math.isnan(m.decode_tok_per_s(0))
+    m.done_t = 4.0
+    assert m.decode_tok_per_s(5) == pytest.approx(2.0)
+    # zero/negative span (clock resolution): still NaN, never inf
+    m.done_t = m.first_token_t
+    assert math.isnan(m.decode_tok_per_s(3))
+
+
+def test_metrics_summary_excludes_nan_entries():
+    """End-to-end: a single-token request must not zero out (old bug) or
+    NaN-poison the aggregate decode rate."""
+    eng = make_engine(max_batch=2, chunk=4)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=1))
+    eng.submit(Request(uid=1, prompt=[4, 5, 6], max_new_tokens=8))
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    single = next(r for r in done if r.uid == 0)
+    assert math.isnan(single.metrics.decode_tok_per_s(
+        len(single.generated)))
+    summary = eng.metrics_summary()
+    assert not math.isnan(summary["mean_decode_tok_per_s"])
+    assert summary["mean_decode_tok_per_s"] > 0
+    assert not math.isnan(summary["mean_ttft_s"])
 
 
 def test_metrics_recorded():
