@@ -1,18 +1,32 @@
+"""Kernel-layer microbenches: XLA naive vs blockwise-flash attention, the
+SSD scan, and the PR-3 paged-attention decode variants (CPU wall time; the
+TPU story is the roofline/§Perf tables).
 
-"""Kernel-layer microbenches: XLA naive vs blockwise-flash attention and the
-SSD scan (CPU wall time; the TPU story is the roofline/§Perf tables)."""
+The paged section compares three lowerings of the same decode step —
+dense cache, gather-then-dense paged reference, and the Pallas page-table
+walk (interpret mode on CPU) — and reports each variant's compiled temp
+allocation from ``memory_analysis()``. The kernel variant is *asserted*
+to stay under the dense-gather temp footprint: the whole point of walking
+the page table in VMEM is that the ``(B, max_blocks*block_size, Hkv, D)``
+gather copy never exists.
+
+Run with ``--json out.json`` for a machine-readable artifact (CI uploads
+it per push); ``--smoke`` trims sizes/iters for the CI bench-smoke job.
+"""
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.flash_attention import paged_attention as pa
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.ssd import ref as ssd_ref
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, write_json
 
 
-def main() -> None:
-    rng = np.random.default_rng(0)
+def bench_attention(rng) -> None:
     B, S, Hq, Hkv, D = 1, 1024, 8, 2, 64
     q = jnp.asarray(rng.standard_normal((B, S, Hq, D)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
@@ -26,6 +40,8 @@ def main() -> None:
     emit("kernels/attention_folded_blockwise_1k", us_c,
          f"x{us_n / us_c:.2f} vs naive")
 
+
+def bench_ssd(rng) -> None:
     B, S, H, P, G, N = 1, 512, 8, 64, 1, 64
     x = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
     dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
@@ -40,5 +56,95 @@ def main() -> None:
     emit("kernels/ssd_chunked_512", us_c, f"x{us_n / us_c:.2f} vs token scan")
 
 
+def temp_bytes(fn, *args) -> int:
+    """Compiled-HLO temp allocation (the materialized-gather detector).
+
+    Fails loudly when the backend can't report it — a silent 0 would make
+    the no-gather acceptance assert below pass vacuously."""
+    ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+    if ma is None or not hasattr(ma, "temp_size_in_bytes"):
+        raise RuntimeError(
+            "memory_analysis() reports no temp_size_in_bytes on this "
+            "backend — the paged-decode gather-temp bound cannot be checked")
+    return int(ma.temp_size_in_bytes)
+
+
+def bench_paged(rng, smoke: bool) -> None:
+    """Dense decode vs gather-then-dense paged vs Pallas-interpret paged.
+
+    Wall clocks on CPU favor the XLA variants (the interpreter emulates the
+    grid + DMAs step by step); the HBM-traffic story is the temp-bytes
+    column — on TPU the kernel's advantage IS that missing gather pass.
+    """
+    B, Hq, Hkv, D = (2, 4, 2, 32) if smoke else (4, 8, 2, 64)
+    bs, MB = (8, 8) if smoke else (16, 16)
+    Smax = bs * MB
+    NB = B * MB + 1
+    iters = 2 if smoke else 5
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((B, Smax, Hkv, D)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((B, Smax, Hkv, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((NB, bs, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NB, bs, Hkv, D)), jnp.float32)
+    pages = jnp.asarray(1 + np.arange(B * MB).reshape(B, MB), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, Smax + 1, B), jnp.int32)
+
+    dense = jax.jit(lambda *a: fa_ref.decode_reference(*a))
+    gather = jax.jit(lambda *a: fa_ref.paged_decode_reference(*a))
+    pallas = jax.jit(lambda *a: pa.paged_decode(*a, interpret=True))
+
+    gather_bytes = B * MB * bs * Hkv * D * 4       # ONE pool's dense view
+    t_dense = temp_bytes(lambda *a: fa_ref.decode_reference(*a),
+                         q, kd, vd, lengths)
+    t_gather = temp_bytes(lambda *a: fa_ref.paged_decode_reference(*a),
+                          q, kp, vp, pages, lengths)
+    t_pallas = temp_bytes(lambda *a: pa.paged_decode(*a, interpret=True),
+                          q, kp, vp, pages, lengths)
+
+    us_d = time_fn(dense, q, kd, vd, lengths, iters=iters)
+    us_g = time_fn(gather, q, kp, vp, pages, lengths, iters=iters)
+    us_p = time_fn(pallas, q, kp, vp, pages, lengths, iters=iters)
+    emit("kernels/paged_decode_dense", us_d, f"temp={t_dense}B")
+    emit("kernels/paged_decode_gather_ref", us_g,
+         f"temp={t_gather}B gather={gather_bytes}B")
+    emit("kernels/paged_decode_pallas_interpret", us_p,
+         f"temp={t_pallas}B gather={gather_bytes}B")
+
+    # acceptance: the kernel's compiled HLO holds no dense gather temp —
+    # its transient footprint must stay under a single pool's dense view
+    # (the reference allocates ~2 of them, one per K/V pool)
+    assert t_pallas < gather_bytes, (
+        f"paged Pallas decode materializes {t_pallas}B of temps — at least "
+        f"one dense {gather_bytes}B gather copy snuck back in")
+
+    # prefill walk parity point: chunked prefill through the page table
+    C = 4 if smoke else 8
+    qc = jnp.asarray(rng.standard_normal((B, C, Hq, D)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, Smax - C, B), jnp.int32)
+    g_pre = jax.jit(lambda *a: fa_ref.paged_prefill_reference(*a))
+    p_pre = jax.jit(lambda *a: pa.paged_prefill(*a, interpret=True))
+    us_gp = time_fn(g_pre, qc, kp, vp, pages, pos, iters=iters)
+    us_pp = time_fn(p_pre, qc, kp, vp, pages, pos, iters=iters)
+    emit("kernels/paged_prefill_gather_ref", us_gp)
+    emit("kernels/paged_prefill_pallas_interpret", us_pp)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump results as a JSON artifact")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / few iters (CI bench-smoke)")
+    args = ap.parse_args(argv if argv is not None else [])
+    rng = np.random.default_rng(0)
+    if not args.smoke:
+        bench_attention(rng)
+        bench_ssd(rng)
+    bench_paged(rng, args.smoke)
+    if args.json:
+        write_json(args.json)
+
+
 if __name__ == "__main__":
-    main()
+    import sys
+    main(sys.argv[1:])

@@ -22,6 +22,11 @@ import jax.numpy as jnp
 
 Backend = Literal["cpu", "tpu", "gpu"]
 KernelMode = Literal["xla", "xla_chunked", "pallas", "pallas_interpret"]
+# runtime twin of KernelMode for call sites that receive the mode as a
+# string (CLI flags, env vars): anything outside this set would silently
+# take the compiled-Pallas dispatch branch
+KERNEL_MODES: tuple[str, ...] = ("xla", "xla_chunked", "pallas",
+                                 "pallas_interpret")
 
 
 @dataclasses.dataclass(frozen=True)

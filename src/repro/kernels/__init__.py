@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Device-tuned kernels behind the function-API dispatch (paper: "speedy
+computation" without changing user code).
+
+Layout: each hot-spot package ships ``<name>.py`` (the Pallas TPU kernel),
+``ref.py`` (the pure-jnp oracle / XLA fallback) and is routed through
+:mod:`repro.kernels.ops`, where the active ``Context.kernels`` mode picks
+the implementation. See the op x mode matrix in the :mod:`.ops` docstring:
+
+* ``xla`` — plain references (CPU containers, dry runs, oracles).
+* ``xla_chunked`` — blockwise-XLA flash algorithm where one exists.
+* ``pallas`` — compiled Pallas TPU kernels (real-TPU deployments).
+* ``pallas_interpret`` — the same kernels on the Pallas interpreter
+  (bit-accurate CPU validation of kernel logic, used by CI).
+
+Packages: ``flash_attention`` (dense flash + decode, and the paged-
+attention page-table walk in ``flash_attention/paged_attention.py``),
+``ssd`` (Mamba-2 state-space duality scan).
+"""

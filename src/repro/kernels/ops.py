@@ -5,6 +5,25 @@ whether the Pallas TPU kernel, its interpret-mode build (CPU validation), or
 the plain-XLA reference executes. The dry-run container always takes the XLA
 path (TPU Pallas cannot lower on CPU backends); real-TPU deployments flip
 ``Context.kernels`` to ``"pallas"``.
+
+Op x mode matrix (which implementation runs):
+
+=========================  ==============  ==============  ===================
+op                         xla             xla_chunked     pallas[_interpret]
+=========================  ==============  ==============  ===================
+attention                  mha_reference   mha_chunked     flash_attention
+attention_decode           decode ref      decode ref      flash_decode
+attention_prefill          prefill ref     prefill ref     paged walk [#f1]_
+attention_decode_paged     gather+dense    gather+dense    paged_decode
+attention_prefill_paged    gather+dense    gather+dense    paged_prefill
+paged_cache_write          jnp scatter     jnp scatter     fused paged_write
+ssd                        ssd_chunked     ssd_chunked     ssd kernel [#f2]_
+ssd_decode_step            jnp             jnp             jnp (elementwise)
+=========================  ==============  ==============  ===================
+
+.. [#f1] dense prefill is the paged walk over an identity page table (a
+   contiguous cache reshapes to a block pool for free).
+.. [#f2] stateful continuation (``h0``) always takes the chunked-jnp path.
 """
 
 from __future__ import annotations
@@ -52,12 +71,15 @@ def attention_decode(q, k_cache, v_cache, lengths, *, scale=None) -> jax.Array:
 def attention_prefill(q, k_cache, v_cache, pos, *, scale=None) -> jax.Array:
     """Chunk-causal attention for chunked prefill: q (B, C, Hq, D) against a
     (B, Smax, Hkv, D) cache; query i of row b sees cache[: pos[b] + i + 1].
-
-    All modes currently lower to the XLA reference — the chunk is short and
-    the cache read is bandwidth-bound, so a dedicated Pallas kernel is a
-    later optimization that slots in behind this dispatch point.
     """
-    return fa_ref.prefill_reference(q, k_cache, v_cache, pos, scale=scale)
+    mode = _ctx.get_default_context().kernels
+    if mode in ("xla", "xla_chunked"):
+        # no chunked-XLA variant: the chunk is short and the cache read is
+        # one bandwidth pass, so blockwise XLA would buy nothing here
+        return fa_ref.prefill_reference(q, k_cache, v_cache, pos, scale=scale)
+    from repro.kernels.flash_attention import paged_attention as pa
+    return pa.prefill_dense(q, k_cache, v_cache, pos, scale=scale,
+                            interpret=(mode == "pallas_interpret"))
 
 
 def attention_decode_paged(q, k_pool, v_pool, pages, lengths, *,
@@ -66,14 +88,18 @@ def attention_decode_paged(q, k_pool, v_pool, pages, lengths, *,
     pools (num_blocks, block_size, Hkv, D), ``pages`` (B, max_blocks) int32
     block ids per row, ``lengths`` (B,) valid token counts.
 
-    All modes lower to the gather-then-dense XLA reference for now — the
-    gather is one HBM-bandwidth pass, identical traffic to the dense decode
-    read it replaces. A Pallas kernel that walks the page table in VMEM
-    (one async copy per block, no materialized dense view) slots in behind
-    this dispatch point.
+    XLA modes lower to the gather-then-dense reference — one extra full
+    HBM pass plus a transient dense copy sized by the worst-case table
+    width. Pallas modes walk the page table in VMEM (double-buffered block
+    DMAs, no materialized gather): :mod:`.flash_attention.paged_attention`.
     """
-    return fa_ref.paged_decode_reference(q, k_pool, v_pool, pages, lengths,
-                                         scale=scale)
+    mode = _ctx.get_default_context().kernels
+    if mode in ("xla", "xla_chunked"):
+        return fa_ref.paged_decode_reference(q, k_pool, v_pool, pages,
+                                             lengths, scale=scale)
+    from repro.kernels.flash_attention import paged_attention as pa
+    return pa.paged_decode(q, k_pool, v_pool, pages, lengths, scale=scale,
+                           interpret=(mode == "pallas_interpret"))
 
 
 def attention_prefill_paged(q, k_pool, v_pool, pages, pos, *,
@@ -81,10 +107,15 @@ def attention_prefill_paged(q, k_pool, v_pool, pages, pos, *,
     """Chunk-causal prefill against a block-paged cache: q (B, C, Hq, D)
     with query i of row b seeing positions ``<= pos[b] + i`` gathered
     through the row's page table (see :func:`attention_decode_paged` for
-    the layout and the Pallas upgrade path).
+    the layout and mode dispatch).
     """
-    return fa_ref.paged_prefill_reference(q, k_pool, v_pool, pages, pos,
-                                          scale=scale)
+    mode = _ctx.get_default_context().kernels
+    if mode in ("xla", "xla_chunked"):
+        return fa_ref.paged_prefill_reference(q, k_pool, v_pool, pages, pos,
+                                              scale=scale)
+    from repro.kernels.flash_attention import paged_attention as pa
+    return pa.paged_prefill(q, k_pool, v_pool, pages, pos, scale=scale,
+                            interpret=(mode == "pallas_interpret"))
 
 
 def paged_cache_write(pool, new, pages, pos):
@@ -94,12 +125,27 @@ def paged_cache_write(pool, new, pages, pos):
     with ``p = pos[b] + i``. Rows whose page-table entry is 0 (idle slots,
     pad columns past a row's allocation) scatter into the garbage block,
     which no valid mask ever reads — so the write needs no predication.
+    Tokens whose position falls past the table's last column likewise go to
+    the garbage block: clipping the column instead would silently overwrite
+    whatever live block sits in the last entry.
+
+    Pallas modes fuse the scatter into a kernel whose output index map
+    computes each token's (block, slot) destination directly (pool donated
+    in place); XLA modes use the flat jnp scatter below.
     """
+    mode = _ctx.get_default_context().kernels
+    if mode not in ("xla", "xla_chunked"):
+        from repro.kernels.flash_attention import paged_attention as pa
+        return pa.paged_write(pool, new, pages, pos,
+                              interpret=(mode == "pallas_interpret"))
     nb, bs = pool.shape[0], pool.shape[1]
     B, C = new.shape[0], new.shape[1]
+    MB = pages.shape[1]
     p = pos[:, None] + jax.numpy.arange(C, dtype=pos.dtype)[None, :]
+    col = p // bs
     blk = jax.numpy.take_along_axis(
-        pages, jax.numpy.clip(p // bs, 0, pages.shape[1] - 1), axis=1)
+        pages, jax.numpy.clip(col, 0, MB - 1), axis=1)
+    blk = jax.numpy.where(col < MB, blk, 0)    # overrun -> garbage block
     flat = (blk * bs + p % bs).reshape(-1)
     pool_flat = pool.reshape((nb * bs,) + pool.shape[2:])
     pool_flat = pool_flat.at[flat].set(

@@ -18,6 +18,11 @@ Flags:
                    max-seq); admission is gated on free blocks
   --no-paged       force the PR-1 dense per-slot cache layout
   --no-prefix-cache  disable cross-request prompt-prefix block reuse
+  --kernels MODE   kernel mode for the jitted step: xla (default; gather-
+                   then-dense paged references), xla_chunked, pallas (Pallas
+                   paged-attention page-table walk — real TPUs only), or
+                   pallas_interpret (same kernels on the CPU interpreter).
+                   Defaults to $REPRO_KERNELS when set.
 
 Per-request metrics (TTFT, queue wait, decode tok/s, prefix-hit tokens)
 print at the end.
@@ -26,6 +31,7 @@ print at the end.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -53,7 +59,17 @@ def main(argv=None) -> int:
     ap.add_argument("--no-paged", action="store_true",
                     help="use the dense per-slot cache layout")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    kernel_modes = ["xla", "xla_chunked", "pallas", "pallas_interpret"]
+    ap.add_argument("--kernels",
+                    default=os.environ.get("REPRO_KERNELS") or None,
+                    choices=kernel_modes,
+                    help="kernel mode for the serving step "
+                         "(default: $REPRO_KERNELS or ambient context)")
     args = ap.parse_args(argv)
+    # argparse does not validate `choices` against env-supplied defaults
+    if args.kernels is not None and args.kernels not in kernel_modes:
+        ap.error(f"invalid kernel mode {args.kernels!r} "
+                 f"(from $REPRO_KERNELS?)")
 
     import jax
     import jax.numpy as jnp
@@ -83,11 +99,13 @@ def main(argv=None) -> int:
                            paged=(None if not args.no_paged else False),
                            block_size=args.block_size,
                            num_blocks=args.num_blocks or None,
-                           prefix_cache=not args.no_prefix_cache)
+                           prefix_cache=not args.no_prefix_cache,
+                           kernels=args.kernels)
     if engine.paged:
         print(f"paged KV: {engine.num_blocks} blocks x "
               f"{engine.block_size} tok"
-              f"{', prefix cache on' if engine.prefix else ''}", flush=True)
+              f"{', prefix cache on' if engine.prefix else ''}"
+              f" | kernels={args.kernels or 'ambient'}", flush=True)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = args.prompt_len or int(rng.integers(2, 6))

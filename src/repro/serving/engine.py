@@ -28,6 +28,11 @@ out of slots without recompilation. Since PR 2 the KV cache is **paged**:
 * recurrent state (SSM ``h``, conv windows) stays dense per slot — it is
   O(1) in sequence — and is zeroed on slot reuse as before; families with
   no paged support at all (pure SSM, audio) fall back to the dense layout.
+* since PR 3 the attention hot path is kernel-mode selectable
+  (``kernels="pallas"`` on real TPUs walks the page table in VMEM with
+  double-buffered block DMAs instead of the gather-then-dense XLA
+  reference; ``"pallas_interpret"`` validates the same kernels on CPU).
+  The override scopes only the engine's jitted step, not the process.
 
 Scheduling is unchanged from PR 1: prompts are absorbed ``chunk`` tokens
 per slot per step through one fused ``prefill`` call (decode IS prefill
@@ -48,6 +53,7 @@ garbage epoch delta or a fake 0.0.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -59,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as nn
+from repro.core import context as _ctx
 from repro.models.registry import ModelApi
 from repro.serving import sampling
 from repro.serving.paged import (BlockAllocator, PrefixCache,
@@ -123,9 +130,20 @@ class ServingEngine:
                  max_batch: int = 4, max_seq: int = 256, chunk: int = 16,
                  cache_dtype=jnp.float32, paged: bool | None = None,
                  block_size: int = 16, num_blocks: int | None = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 kernels: _ctx.KernelMode | None = None):
         self.api = api
         self.params = params
+        # kernel-mode override for the jitted step (None = ambient context):
+        # "pallas" runs the paged-attention page-table walk on real TPUs,
+        # "pallas_interpret" the same kernel logic on CPU, "xla*" the
+        # gather-then-dense references. Reject typos here, at the boundary —
+        # an unknown string would otherwise dispatch to compiled Pallas and
+        # die deep inside Mosaic lowering.
+        if kernels and kernels not in _ctx.KERNEL_MODES:
+            raise ValueError(f"unknown kernels mode {kernels!r}; "
+                             f"one of {_ctx.KERNEL_MODES}")
+        self.kernels = kernels
         self.B = max_batch
         self.max_seq = max_seq
         # APIs without a prefill entry fall back to one-token absorption
@@ -185,20 +203,32 @@ class ServingEngine:
         # all-greedy batch (the default): skip the (B, V) sort pipeline
         return jnp.argmax(last, axis=-1).astype(jnp.int32)
 
+    def _kernel_scope(self):
+        """Context override applied while TRACING the jitted step — kernel
+        dispatch in :mod:`repro.kernels.ops` reads the ambient context at
+        trace time, so scoping the trace pins the engine's kernel mode
+        regardless of what the caller's context says."""
+        if not self.kernels:          # None/"" -> ambient context
+            return contextlib.nullcontext()
+        return _ctx.context_scope(dataclasses.replace(
+            _ctx.get_default_context(), kernels=self.kernels))
+
     def _step_fn(self, params, tokens, state, pos, length,
                  temps, top_k, top_p, seeds, counts, *, do_sample):
-        logits, new_state = nn.apply(
-            lambda t, s, p, l: self._prefill_fn(t, s, p, l),
-            params, tokens, state, pos, length)
+        with self._kernel_scope():
+            logits, new_state = nn.apply(
+                lambda t, s, p, l: self._prefill_fn(t, s, p, l),
+                params, tokens, state, pos, length)
         next_tok = self._sample_or_greedy(logits, temps, top_k, top_p,
                                           seeds, counts, do_sample)
         return next_tok, new_state
 
     def _step_paged_fn(self, params, tokens, state, pages, pos, length,
                        temps, top_k, top_p, seeds, counts, *, do_sample):
-        logits, new_state = nn.apply(
-            lambda t, s, g, p, l: self.api.prefill_paged(t, s, g, p, l),
-            params, tokens, state, pages, pos, length)
+        with self._kernel_scope():
+            logits, new_state = nn.apply(
+                lambda t, s, g, p, l: self.api.prefill_paged(t, s, g, p, l),
+                params, tokens, state, pages, pos, length)
         next_tok = self._sample_or_greedy(logits, temps, top_k, top_p,
                                           seeds, counts, do_sample)
         return next_tok, new_state

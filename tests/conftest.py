@@ -7,6 +7,20 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# REPRO_KERNELS=<mode> pins the default-context kernel mode for the whole
+# test run (CI's pallas-interpret leg re-runs the kernel/serving subset
+# with the interpret-mode Pallas kernels instead of the XLA references).
+_KERNELS_ENV = os.environ.get("REPRO_KERNELS")
+if _KERNELS_ENV:
+    import dataclasses
+
+    from repro.core import context as _ctx
+    if _KERNELS_ENV not in _ctx.KERNEL_MODES:
+        raise SystemExit(f"REPRO_KERNELS={_KERNELS_ENV!r} is not a kernel "
+                         f"mode; one of {_ctx.KERNEL_MODES}")
+    _ctx.set_default_context(dataclasses.replace(
+        _ctx.get_default_context(), kernels=_KERNELS_ENV))
+
 
 def run_in_subprocess(code: str, devices: int = 1, timeout: int = 300) -> str:
     """Run python code in a fresh process with N host devices.

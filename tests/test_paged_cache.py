@@ -239,9 +239,21 @@ def test_paged_matches_dense_logits(cfg, block_size):
 
     dense, paged = run_dense(), run_paged()
     assert len(dense) == len(paged) == 1 + ndec
+    # XLA reference modes gather the pool into the exact dense cache, so
+    # logits agree BITWISE. Pallas modes partition the online softmax by
+    # block_size — dense and paged walk different partitions, so equality
+    # is tight-allclose, not bitwise (CI's REPRO_KERNELS=pallas_interpret
+    # leg takes this branch).
+    from repro.core import context as _ctx
+    bitwise = _ctx.get_default_context().kernels in ("xla", "xla_chunked")
     for i, (a, b) in enumerate(zip(dense, paged)):
-        np.testing.assert_array_equal(
-            a, b, err_msg=f"step {i}: paged logits diverge from dense")
+        if bitwise:
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"step {i}: paged logits diverge from dense")
+        else:
+            np.testing.assert_allclose(
+                a, b, atol=1e-4, rtol=1e-4,
+                err_msg=f"step {i}: paged logits diverge from dense")
 
 
 @pytest.mark.parametrize("cfg", [DENSE, SSM, HYBRID],
