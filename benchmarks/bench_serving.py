@@ -114,13 +114,86 @@ def run_shared_prefix(n_requests: int = 8, prefix_len: int = 64,
     return m["mean_ttft_s"], m.get("mean_prefix_hit_tokens", 0.0)
 
 
+# ---------------------------------------------------------------------- #
+# tensor-parallel serving: TTFT / decode rate / per-device cache bytes
+# ---------------------------------------------------------------------- #
+
+# wider head geometry than CFG so tp=4 still splits the kv-head axis
+TP_CFG = ModelConfig(name="tp", family="dense", n_layers=4, d_model=128,
+                     n_heads=8, n_kv_heads=4, d_ff=256, vocab_size=512,
+                     head_dim=16, remat="none")
+
+_TP_PARAMS = None
+
+
+def get_tp_params():
+    global _TP_PARAMS
+    if _TP_PARAMS is None:
+        nn.clear_parameters()
+        _TP_PARAMS = nn.init(lambda t: T.forward(TP_CFG, t),
+                             jax.random.key(0), jnp.zeros((1, 8), jnp.int32))
+    return _TP_PARAMS
+
+
+def run_tp(tp: int, n_requests: int = 8, prompt_len: int = 48,
+           new_tokens: int = 16) -> tuple[float, float, int]:
+    """Returns (mean TTFT s, mean decode tok/s, cache bytes on device 0)
+    for one engine spanning ``tp`` host devices."""
+    from repro.launch.serve_shardings import per_device_state_bytes
+    eng = ServingEngine(get_model(TP_CFG), get_tp_params(), max_batch=4,
+                        max_seq=128, chunk=16, tp=tp)
+    # warm both compiled shapes before timing
+    eng.submit(Request(uid=-1, prompt=[1] * prompt_len, max_new_tokens=2))
+    eng.run_until_drained()
+    eng.completed.clear()
+    for i in range(n_requests):
+        prompt = [1 + (i + j) % (TP_CFG.vocab_size - 1)
+                  for j in range(prompt_len)]
+        eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=new_tokens))
+    eng.run_until_drained()
+    m = eng.metrics_summary()
+    return (m["mean_ttft_s"], m["mean_decode_tok_per_s"],
+            per_device_state_bytes(eng.state))
+
+
+def main_tp(args) -> None:
+    """--tp suite: one engine at tp=1/2/4 on forced host devices. Run with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 (the bench-smoke CI
+    job does); widths beyond the device count are skipped with a note."""
+    n_req = 4 if args.smoke else 8
+    new_tok = 8 if args.smoke else 16
+    n_dev = jax.device_count()
+    for tp in (1, 2, 4):
+        if tp > n_dev:
+            print(f"serving_tp/tp{tp}: skipped ({n_dev} devices)",
+                  flush=True)
+            continue
+        ttft, dec, dev_bytes = run_tp(tp, n_requests=n_req,
+                                      new_tokens=new_tok)
+        emit(f"serving_tp/tp{tp}_ttft_s", ttft * 1e6,
+             f"TTFT {ttft * 1e3:.1f}ms at tp={tp}")
+        emit(f"serving_tp/tp{tp}_decode_tok_per_s", 1e6 / max(dec, 1e-9),
+             f"{dec:.1f} tok/s decode at tp={tp}")
+        emit(f"serving_tp/tp{tp}_cache_bytes_per_device", float(dev_bytes),
+             f"{dev_bytes / 2**20:.2f} MiB KV on device 0 "
+             f"(1/{tp} of the pool)")
+
+
 def main(argv=()) -> None:
     # default () so run.py's programmatic call ignores ITS own sys.argv
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="", help="write results JSON here")
     ap.add_argument("--smoke", action="store_true",
                     help="CI sizes: fewer requests, same code paths")
+    ap.add_argument("--tp", action="store_true",
+                    help="run the tensor-parallel suite instead (needs "
+                         "forced host devices; see main_tp docstring)")
     args = ap.parse_args(list(argv))
+    if args.tp:
+        main_tp(args)
+        if args.json:
+            write_json(args.json)
+        return
     n_req = 4 if args.smoke else 8
     new_tok = 8 if args.smoke else 16
 

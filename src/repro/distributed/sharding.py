@@ -120,6 +120,27 @@ def param_spec(path: str, shape: tuple[int, ...]) -> P:
     return P()  # replicate by default
 
 
+def named_zeros(names: tuple[str | None, ...], shape: tuple[int, ...],
+                dtype) -> jax.Array:
+    """Zeros placed by the logical-axis rule table.
+
+    Without a mesh this is exactly ``jnp.zeros`` (the eager plane and every
+    single-device caller are untouched). Under an active env the array is
+    committed to its :class:`NamedSharding` at creation — jit with
+    ``out_shardings`` makes each device write only its own shard, so a
+    pool sized to the *aggregate* memory of a tp slice never materializes
+    as a full single-device copy first. Indivisible dims degrade to
+    replicated exactly as :func:`spec_for` does for activations.
+    """
+    import jax.numpy as jnp
+    env = _state.env
+    if env.mesh is None or env.mesh.empty:
+        return jnp.zeros(shape, dtype)
+    sharding = NamedSharding(env.mesh, spec_for(tuple(names), tuple(shape)))
+    return jax.jit(lambda: jnp.zeros(shape, dtype),
+                   out_shardings=sharding)()
+
+
 def params_shardings(params: dict[str, Any]) -> dict[str, NamedSharding]:
     env = _state.env
     assert env.mesh is not None

@@ -24,15 +24,131 @@ ssd_decode_step            jnp             jnp             jnp (elementwise)
 .. [#f1] dense prefill is the paged walk over an identity page table (a
    contiguous cache reshapes to a block pool for free).
 .. [#f2] stateful continuation (``h0``) always takes the chunked-jnp path.
+
+Tensor parallelism (serving mesh with a ``model`` axis active in the
+ambient :class:`repro.distributed.sharding.ShardingEnv` at trace time):
+
+=========================  =====================  =========================
+op                         xla / xla_chunked      pallas[_interpret]
+=========================  =====================  =========================
+attention_{prefill,decode} GSPMD partitions the   shard_map over kv heads
+ [+ _paged variants]       jnp reference (rule    (``Hkv % tp == 0``) or
+                           table + ``constrain``  over grouped query heads
+                           hints keep kv-head     (GQA ``Hkv < tp``: KV
+                           dims sharded)          replicates); else runs
+                                                  fully replicated
+paged_cache_write          GSPMD scatter          shard_map over kv heads;
+                                                  per-shard kernel keeps
+                                                  ``input_output_aliases``
+                                                  pool donation
+=========================  =====================  =========================
+
+The shard_map body is the *unchanged* single-device kernel: with the pool
+sharded on kv heads, every shard walks the full page table over its local
+``Hkv/tp`` head slice of every block — block ids stay global, the VMEM
+double-buffered DMA walk and fused-scatter donation work per shard exactly
+as they do on one device.
 """
 
 from __future__ import annotations
 
 import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import context as _ctx
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.ssd import ref as ssd_ref
+
+
+# --------------------------------------------------------------------------- #
+# tensor-parallel wrapping of the Pallas kernels
+#
+# The XLA reference paths are plain jnp: under a serving mesh GSPMD
+# partitions them from the rule-table constraints alone. pallas_call has no
+# partitioning rule, so the Pallas builds must be wrapped in shard_map with
+# an explicit layout — chosen here, at the dispatch layer, so neither the
+# kernels nor the models know the mesh exists.
+# --------------------------------------------------------------------------- #
+
+def _tp_mesh():
+    """The serving mesh, iff a >1-wide ``model`` axis is active at trace
+    time (the engine scopes its ShardingEnv around step tracing)."""
+    from repro.distributed.sharding import get_env
+    mesh = get_env().mesh
+    if mesh is None or mesh.empty or "model" not in mesh.shape:
+        return None
+    return mesh if mesh.shape["model"] > 1 else None
+
+
+def _repl(*arrays):
+    return tuple(P() for _ in arrays)
+
+
+def _tp_heads_call(fn, q, kv_args, rep_args):
+    """Run ``fn(q, *kv_args, *rep_args) -> (B, C, Hq, D)`` under shard_map.
+
+    ``kv_args`` carry the kv-head axis at position -2 (block pools
+    ``(NB, bs, Hkv, D)`` and dense caches ``(B, S, Hkv, D)`` both do);
+    ``rep_args`` (page tables, positions, lengths) replicate. Layouts, in
+    preference order: shard kv heads (each shard walks only its local pool
+    slice); GQA ``Hkv < tp``: replicate KV, shard the per-group query
+    heads; indivisible probe geometries: run fully replicated.
+    """
+    mesh = _tp_mesh()
+    if mesh is None:
+        return fn(q, *kv_args, *rep_args)
+    tp = mesh.shape["model"]
+    B, C, Hq, D = q.shape
+    Hkv = kv_args[0].shape[-2]
+    rep_specs = _repl(*rep_args)
+    if Hkv % tp == 0:
+        # q heads are grouped contiguously by kv head (head h serves kv
+        # head h // rep), so sharding the q-head axis into tp contiguous
+        # chunks lands each chunk on the shard holding its kv heads.
+        kv_specs = tuple(
+            P(*(None,) * (a.ndim - 2), "model", None) for a in kv_args)
+        sharded = shard_map(
+            fn, mesh=mesh,
+            in_specs=(P(None, None, "model", None),) + kv_specs + rep_specs,
+            out_specs=P(None, None, "model", None), check_rep=False)
+        return sharded(q, *kv_args, *rep_args)
+    group = Hq // Hkv
+    if group % tp == 0:
+        # replicate KV, split each kv head's query group across shards;
+        # regrouping happens inside the shard so GQA ratios stay intact
+        qg = q.reshape(B, C, Hkv, group, D)
+
+        def _grouped(qg_loc, *args):
+            out = fn(qg_loc.reshape(B, C, -1, D), *args)
+            return out.reshape(qg_loc.shape)
+
+        sharded = shard_map(
+            _grouped, mesh=mesh,
+            in_specs=(P(None, None, None, "model", None),)
+            + _repl(*kv_args) + rep_specs,
+            out_specs=P(None, None, None, "model", None), check_rep=False)
+        return sharded(qg, *kv_args, *rep_args).reshape(B, C, Hq, D)
+    sharded = shard_map(fn, mesh=mesh,
+                        in_specs=_repl(q, *kv_args) + rep_specs,
+                        out_specs=P(), check_rep=False)
+    return sharded(q, *kv_args, *rep_args)
+
+
+def _tp_write_call(fn, pool, new, pages, pos):
+    """Fused paged scatter under shard_map: pool and chunk both shard on
+    the kv-head axis (position -2), page table and positions replicate.
+    The per-shard kernel still donates its pool slice in place via
+    ``input_output_aliases``."""
+    mesh = _tp_mesh()
+    if mesh is None:
+        return fn(pool, new, pages, pos)
+    tp = mesh.shape["model"]
+    kv = (P(*(None,) * (pool.ndim - 2), "model", None)
+          if pool.shape[-2] % tp == 0 else P())
+    sharded = shard_map(fn, mesh=mesh, in_specs=(kv, kv, P(), P()),
+                        out_specs=kv, check_rep=False)
+    return sharded(pool, new, pages, pos)
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
@@ -64,8 +180,12 @@ def attention_decode(q, k_cache, v_cache, lengths, *, scale=None) -> jax.Array:
         return fa_ref.decode_reference(q, k_cache, v_cache, lengths,
                                        scale=scale)
     from repro.kernels.flash_attention import flash_attention as fa
-    return fa.flash_decode(q, k_cache, v_cache, lengths, scale=scale,
-                           interpret=(mode == "pallas_interpret"))
+
+    def _call(q_, k_, v_, len_):
+        return fa.flash_decode(q_, k_, v_, len_, scale=scale,
+                               interpret=(mode == "pallas_interpret"))
+
+    return _tp_heads_call(_call, q, (k_cache, v_cache), (lengths,))
 
 
 def attention_prefill(q, k_cache, v_cache, pos, *, scale=None) -> jax.Array:
@@ -78,8 +198,12 @@ def attention_prefill(q, k_cache, v_cache, pos, *, scale=None) -> jax.Array:
         # one bandwidth pass, so blockwise XLA would buy nothing here
         return fa_ref.prefill_reference(q, k_cache, v_cache, pos, scale=scale)
     from repro.kernels.flash_attention import paged_attention as pa
-    return pa.prefill_dense(q, k_cache, v_cache, pos, scale=scale,
-                            interpret=(mode == "pallas_interpret"))
+
+    def _call(q_, k_, v_, pos_):
+        return pa.prefill_dense(q_, k_, v_, pos_, scale=scale,
+                                interpret=(mode == "pallas_interpret"))
+
+    return _tp_heads_call(_call, q, (k_cache, v_cache), (pos,))
 
 
 def attention_decode_paged(q, k_pool, v_pool, pages, lengths, *,
@@ -98,8 +222,12 @@ def attention_decode_paged(q, k_pool, v_pool, pages, lengths, *,
         return fa_ref.paged_decode_reference(q, k_pool, v_pool, pages,
                                              lengths, scale=scale)
     from repro.kernels.flash_attention import paged_attention as pa
-    return pa.paged_decode(q, k_pool, v_pool, pages, lengths, scale=scale,
-                           interpret=(mode == "pallas_interpret"))
+
+    def _call(q_, k_, v_, pages_, len_):
+        return pa.paged_decode(q_, k_, v_, pages_, len_, scale=scale,
+                               interpret=(mode == "pallas_interpret"))
+
+    return _tp_heads_call(_call, q, (k_pool, v_pool), (pages, lengths))
 
 
 def attention_prefill_paged(q, k_pool, v_pool, pages, pos, *,
@@ -114,8 +242,12 @@ def attention_prefill_paged(q, k_pool, v_pool, pages, pos, *,
         return fa_ref.paged_prefill_reference(q, k_pool, v_pool, pages, pos,
                                               scale=scale)
     from repro.kernels.flash_attention import paged_attention as pa
-    return pa.paged_prefill(q, k_pool, v_pool, pages, pos, scale=scale,
-                            interpret=(mode == "pallas_interpret"))
+
+    def _call(q_, k_, v_, pages_, pos_):
+        return pa.paged_prefill(q_, k_, v_, pages_, pos_, scale=scale,
+                                interpret=(mode == "pallas_interpret"))
+
+    return _tp_heads_call(_call, q, (k_pool, v_pool), (pages, pos))
 
 
 def paged_cache_write(pool, new, pages, pos):
@@ -136,8 +268,12 @@ def paged_cache_write(pool, new, pages, pos):
     mode = _ctx.get_default_context().kernels
     if mode not in ("xla", "xla_chunked"):
         from repro.kernels.flash_attention import paged_attention as pa
-        return pa.paged_write(pool, new, pages, pos,
-                              interpret=(mode == "pallas_interpret"))
+
+        def _call(pool_, new_, pages_, pos_):
+            return pa.paged_write(pool_, new_, pages_, pos_,
+                                  interpret=(mode == "pallas_interpret"))
+
+        return _tp_write_call(_call, pool, new, pages, pos)
     nb, bs = pool.shape[0], pool.shape[1]
     B, C = new.shape[0], new.shape[1]
     MB = pages.shape[1]

@@ -5,6 +5,18 @@ Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — 'pod' is the
 cross-pod (DCN-connected) axis; it carries either outer data parallelism
 (default) or pipeline stages (PP mode).
 
+Serving meshes use the same two ICI axes with serving semantics
+(:mod:`repro.launch.serve_shardings` owns the rule table):
+
+* ``model`` — tensor parallelism for the decode step: attention/MLP/vocab
+  weights shard Megatron-style and the paged K/V block pools shard on the
+  kv-head axis, so each chip holds ``1/tp`` of the KV memory and walks only
+  its local pool slice. Page tables, positions and lengths replicate (they
+  are tiny int32 metadata the host scheduler mutates every step).
+* ``data`` — replica parallelism across engine instances; a single engine
+  runs with ``data = 1`` (continuous batching fills the batch axis, there
+  is nothing to split).
+
 Functions, not module constants — importing this module never touches jax
 device state (smoke tests must keep seeing 1 device).
 """
@@ -32,4 +44,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Small helper meshes for tests/benchmarks (e.g. (8,) 'data')."""
     n = int(np.prod(shape))
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "importing jax (a silent [:n] slice would build a mesh of the "
+            "wrong size)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_serving_mesh(tp: int, *, data: int = 1):
+    """(data, model) mesh for one tensor-parallel serving engine.
+
+    ``tp`` chips shard the decode step and the paged KV pools; ``data``
+    defaults to 1 — a serving engine is one replica, continuous batching
+    (not the mesh) fills its batch axis.
+    """
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    return make_host_mesh((data, tp), ("data", "model"))

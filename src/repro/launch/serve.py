@@ -23,6 +23,12 @@ Flags:
                    paged-attention page-table walk — real TPUs only), or
                    pallas_interpret (same kernels on the CPU interpreter).
                    Defaults to $REPRO_KERNELS when set.
+  --tp N           tensor parallelism: shard params and the paged KV pools
+                   over an N-wide (data=1, model=N) mesh so one engine
+                   spans N devices (each holds 1/N of the KV bytes). Needs
+                   N devices — on CPU set
+                   XLA_FLAGS=--xla_force_host_platform_device_count=N.
+                   1 (default) = the single-device engine, unchanged.
 
 Per-request metrics (TTFT, queue wait, decode tok/s, prefix-hit tokens)
 print at the end.
@@ -59,6 +65,8 @@ def main(argv=None) -> int:
     ap.add_argument("--no-paged", action="store_true",
                     help="use the dense per-slot cache layout")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width (devices per engine)")
     kernel_modes = ["xla", "xla_chunked", "pallas", "pallas_interpret"]
     ap.add_argument("--kernels",
                     default=os.environ.get("REPRO_KERNELS") or None,
@@ -100,12 +108,20 @@ def main(argv=None) -> int:
                            block_size=args.block_size,
                            num_blocks=args.num_blocks or None,
                            prefix_cache=not args.no_prefix_cache,
-                           kernels=args.kernels)
+                           kernels=args.kernels, tp=args.tp)
     if engine.paged:
         print(f"paged KV: {engine.num_blocks} blocks x "
               f"{engine.block_size} tok"
               f"{', prefix cache on' if engine.prefix else ''}"
               f" | kernels={args.kernels or 'ambient'}", flush=True)
+    if engine.tp > 1:
+        from repro.launch.serve_shardings import per_device_state_bytes
+        print(f"tensor parallel: tp={engine.tp} over "
+              f"{[d.platform for d in jax.devices()[:engine.tp]]} | "
+              f"{per_device_state_bytes(engine.state) / 2**20:.2f} MiB "
+              f"cache/device", flush=True)
+        for leaf, spec in sorted(engine.tp_layout().items()):
+            print(f"  state {leaf}: {spec}", flush=True)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         plen = args.prompt_len or int(rng.integers(2, 6))

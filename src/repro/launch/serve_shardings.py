@@ -1,0 +1,126 @@
+"""Serving-side sharding policy: one engine spans a (data, model) mesh.
+
+The training rule tables (:mod:`repro.launch.shardings`) are tuned for
+large-batch pjit cells; serving has a different shape — tiny batches, a
+latency-bound mixed prefill/decode step, and state that is a *block pool*
+with no batch axis at all. This module owns the serving layout:
+
+* **Params** shard by the shared ``PARAM_RULES`` path table (Megatron
+  column->row attention/MLP, vocab-sharded embedding + head, expert
+  parallelism for MoE, Mamba inner projections over ``model``).
+* **Paged K/V pools** ``(layers|sites, num_blocks, block_size, Hkv, hd)``
+  shard on the **kv-head axis**: every device holds ``1/tp`` of the KV
+  bytes of *every* block, so the host-side allocator, page tables and
+  prefix cache stay completely device-agnostic (block ids mean the same
+  thing on every shard). GQA models with ``Hkv < tp`` (or indivisible)
+  degrade that dim to replicated — query heads still shard, attention
+  stays collective-free — and the :class:`~repro.models.registry.CacheSpec`
+  ``tp_note`` records the policy.
+* **Recurrent state** (hybrid/SSM ``h``, conv windows) shards on its head /
+  channel dim when divisible, else replicates: it is O(1) per slot, so
+  replication costs bytes, not per-token bandwidth.
+* **Step metadata** (tokens, page tables, positions, lengths, sampling
+  knobs) replicates — a few KB of int32 the host scheduler rewrites every
+  step.
+
+The rule table degrades per-shape (see :func:`repro.distributed.sharding.
+spec_for`), so one policy serves every family and every tp width; with
+``tp = 1`` the engine never builds an env at all and the single-device
+path is bitwise-identical to the pre-mesh engine.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingEnv
+from repro.launch.shardings import PARAM_RULES
+
+
+def serve_axis_rules(mesh: Mesh) -> dict[str, Any]:
+    """Logical axis -> mesh axis for the serving step.
+
+    Unlisted names replicate. ``kv_heads`` nominally shards over ``model``
+    and degrades per-shape (GQA with ``Hkv % tp != 0`` replicates the KV
+    pool while the query projections stay sharded over ``heads_merged``).
+    """
+    axes = set(mesh.axis_names)
+    dp = "data" if "data" in axes else None
+    return {
+        # activations: batch over data (trivial at data=1), seq/embed local
+        "batch": dp,
+        "batch_kv": None,
+        "seq": None,
+        "attn_seq": None,
+        "frames": None,
+        "embed": None,
+        "head_dim": None,
+        "state": None,
+        "layers": None,
+        "position": None,
+        "kv_seq": None,
+        # tensor parallelism over the model axis
+        "heads": "model",
+        "heads_merged": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_group": dp,
+        "ssm_inner": "model",
+        "ssm_fused": "model",
+        "conv_ch": "model",
+    }
+
+
+def make_serve_env(mesh: Mesh, cfg: ModelConfig) -> ShardingEnv:
+    """The engine's trace-time env: serving axis rules + the shared
+    parameter path table. ``cfg`` is accepted for future per-family
+    overrides; the per-shape degrade in ``spec_for`` already handles GQA
+    and odd head counts."""
+    del cfg
+    return ShardingEnv(mesh=mesh, axis_rules=serve_axis_rules(mesh),
+                       param_rules=list(PARAM_RULES))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def state_layout(state: Any) -> dict[str, str]:
+    """Human/test-readable map of state leaf -> placement decision.
+
+    ``{"kv/k": "PartitionSpec(None, None, None, 'model', None)",
+    "ssm/h": "replicated", ...}`` — the engine exposes this so tests and
+    operators can see exactly which leaves split ``tp``-ways and which
+    replicated (and why: see ``CacheSpec.tp_note``).
+    """
+    out: dict[str, str] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        spec = getattr(getattr(leaf, "sharding", None), "spec", None)
+        if spec is None or all(s is None for s in spec):
+            out[key] = "replicated"
+        else:
+            out[key] = str(spec)
+    return out
+
+
+def per_device_state_bytes(state: Any, device=None) -> int:
+    """Bytes of ``state`` resident on one device (default: device 0).
+
+    For a kv-head-sharded pool this is ``total / tp``; replicated leaves
+    count fully — exactly the number a capacity planner needs.
+    """
+    device = device if device is not None else jax.devices()[0]
+    total = 0
+    for leaf in jax.tree.leaves(state):
+        for shard in leaf.addressable_shards:
+            if shard.device == device:
+                total += shard.data.nbytes
+    return total

@@ -18,6 +18,7 @@ from jax import lax
 import repro.core as nn
 from repro.core import functions as F
 from repro.configs.base import ModelConfig
+from repro.distributed.sharding import named_zeros
 from repro.models import mamba as M
 from repro.models import transformer as T
 
@@ -111,9 +112,10 @@ def init_state(cfg: ModelConfig, batch: int, max_seq: int,
     hd = cfg.resolved_head_dim
     sites = n_attn_sites(cfg)
     kv_shape = (sites, batch, max_seq, cfg.n_kv_heads, hd)
+    kv_names = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
     return {"ssm": M.init_state(cfg, batch, dtype),
-            "kv": {"k": jnp.zeros(kv_shape, dtype),
-                   "v": jnp.zeros(kv_shape, dtype)}}
+            "kv": {"k": named_zeros(kv_names, kv_shape, dtype),
+                   "v": named_zeros(kv_names, kv_shape, dtype)}}
 
 
 def state_specs(cfg: ModelConfig, batch: int, max_seq: int,
@@ -132,13 +134,19 @@ def init_paged_state(cfg: ModelConfig, batch: int, num_blocks: int,
     addressed through per-slot page tables (no batch axis), while the
     recurrent mamba state — SSD ``h`` and the conv ring window — stays a
     dense per-slot layout (it is O(1) in sequence, there is nothing to
-    page; it rides alongside the paged KV in the same state dict)."""
+    page; it rides alongside the paged KV in the same state dict).
+
+    Under a tensor-parallel serving env the per-site pools shard on the
+    kv-head axis and the dense SSM state shards on its SSD-head / conv
+    channel dims (:func:`repro.models.mamba.init_state`); indivisible dims
+    replicate — see ``CacheSpec.tp_note`` for the recorded rationale."""
     hd = cfg.resolved_head_dim
     sites = n_attn_sites(cfg)
     kv_shape = (sites, num_blocks, block_size, cfg.n_kv_heads, hd)
+    kv_names = ("layers", None, None, "kv_heads", "head_dim")
     return {"ssm": M.init_state(cfg, batch, dtype),
-            "kv": {"k": jnp.zeros(kv_shape, dtype),
-                   "v": jnp.zeros(kv_shape, dtype)}}
+            "kv": {"k": named_zeros(kv_names, kv_shape, dtype),
+                   "v": named_zeros(kv_names, kv_shape, dtype)}}
 
 
 def paged_state_specs(cfg: ModelConfig, batch: int, num_blocks: int,

@@ -33,7 +33,7 @@ from repro.core import functions as F
 from repro.core import initializer as I
 from repro.core import parametric as PF
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, named_zeros
 from repro.kernels import ops as K
 from repro.models import transformer as T
 
@@ -337,8 +337,14 @@ def init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
                ) -> dict[str, Any]:
     d_inner, H, P, G, N, conv_ch = _dims(cfg, cfg.d_model)
     L = cfg.n_layers
-    return {"h": jnp.zeros((L, batch, H, P, N), jnp.float32),
-            "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch), dtype)}
+    # under a tensor-parallel serving env: h shards on its SSD-head dim and
+    # the conv window on channels when divisible, else replicates (the
+    # state is O(1) per slot — replication costs bytes, not bandwidth)
+    return {"h": named_zeros(("layers", "batch", "heads", None, "state"),
+                             (L, batch, H, P, N), jnp.float32),
+            "conv": named_zeros(("layers", "batch", None, "conv_ch"),
+                                (L, batch, cfg.ssm_conv - 1, conv_ch),
+                                dtype)}
 
 
 def state_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):

@@ -39,10 +39,15 @@ class CacheSpec:
     true only when the cache captures the full effect of the skipped tokens
     (pure KV). Recurrent/hybrid families must re-run every prompt token
     through the SSM even when their KV blocks could be shared.
+    ``tp_note``: how the family's state lays out on a tensor-parallel
+    serving mesh, including the recorded reason whenever a leaf replicates
+    instead of sharding (``repro.launch.serve_shardings`` applies the
+    policy; the engine's ``tp_layout()`` reports the realized placement).
     """
     kind: str
     paged: bool = False
     prefix_reuse: bool = False
+    tp_note: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,7 +110,11 @@ def _lm_api(cfg: ModelConfig) -> ModelApi:
             transformer.init_kv_cache(cfg, b, s, dt),
         prefill=lambda tokens, state, pos, length, **kw:
             transformer.prefill(cfg, tokens, state, pos, length, **kw),
-        cache_spec=CacheSpec(kind="kv", paged=True, prefix_reuse=True),
+        cache_spec=CacheSpec(
+            kind="kv", paged=True, prefix_reuse=True,
+            tp_note="KV pools shard on the kv-head axis; GQA with "
+                    "Hkv % tp != 0 replicates the pools (head slices "
+                    "can't split evenly) while query heads stay sharded"),
         prefill_paged=lambda tokens, state, pages, pos, length, **kw:
             transformer.prefill_paged(cfg, tokens, state, pages, pos,
                                       length, **kw),
@@ -132,7 +141,10 @@ def _ssm_api(cfg: ModelConfig) -> ModelApi:
         prefill=lambda tokens, state, pos, length, **kw:
             mamba.prefill(cfg, tokens, state, pos, length, **kw),
         # O(1) recurrent state: nothing to page, nothing to prefix-share
-        cache_spec=CacheSpec(kind="recurrent"),
+        cache_spec=CacheSpec(
+            kind="recurrent",
+            tp_note="h shards on SSD heads, conv on channels when "
+                    "divisible; else replicates (O(1) per slot)"),
     )
 
 
@@ -152,7 +164,13 @@ def _hybrid_api(cfg: ModelConfig) -> ModelApi:
             hybrid.prefill(cfg, tokens, state, pos, length, **kw),
         # paged KV at attention sites; prefix reuse is unsound (the SSM
         # state must still absorb every prompt token)
-        cache_spec=CacheSpec(kind="hybrid", paged=True, prefix_reuse=False),
+        cache_spec=CacheSpec(
+            kind="hybrid", paged=True, prefix_reuse=False,
+            tp_note="per-site KV pools shard on kv heads; dense SSM h "
+                    "shards on SSD heads and conv windows on channels; "
+                    "any indivisible dim replicates — recurrent state is "
+                    "O(1) per slot, so replication costs bytes, not "
+                    "per-token bandwidth"),
         prefill_paged=lambda tokens, state, pages, pos, length, **kw:
             hybrid.prefill_paged(cfg, tokens, state, pages, pos, length,
                                  **kw),

@@ -25,7 +25,7 @@ from repro.core import functions as F
 from repro.core import initializer as I
 from repro.core import parametric as PF
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, named_zeros
 from repro.kernels import ops as K
 
 MOE_AUX_COEF = 0.01
@@ -194,6 +194,10 @@ def attention(cfg: ModelConfig, x, cos, sin, *, name: str = "attn",
         assert pos_arr.ndim == 1, "paged attention needs per-row positions"
         k_pool = K.paged_cache_write(k_pool, k, pages, pos_arr)
         v_pool = K.paged_cache_write(v_pool, v, pages, pos_arr)
+        # pin the pool's kv-head sharding through the scatter so GSPMD
+        # carries it across layers (tp serving; no-op without a mesh)
+        k_pool = constrain(k_pool, None, None, "kv_heads", "head_dim")
+        v_pool = constrain(v_pool, None, None, "kv_heads", "head_dim")
         if S > 1:
             y = K.attention_prefill_paged(q, k_pool, v_pool, pages, pos_arr)
         else:
@@ -478,7 +482,9 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
                   dtype=jnp.bfloat16) -> dict[str, Any]:
     hd = cfg.resolved_head_dim
     shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    names = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {"k": named_zeros(names, shape, dtype),
+            "v": named_zeros(names, shape, dtype)}
 
 
 def kv_cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
@@ -493,10 +499,17 @@ def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                         dtype=jnp.bfloat16) -> dict[str, Any]:
     """Block-paged KV pool: no batch axis — rows address blocks through
     per-slot page tables, so memory scales with allocated blocks, not
-    ``batch * max_seq``. Block 0 is the engine's garbage block."""
+    ``batch * max_seq``. Block 0 is the engine's garbage block.
+
+    Under an active serving env (tensor-parallel engine) the pools come
+    out sharded on the kv-head axis — each device is born holding
+    ``1/tp`` of every block — degrading to replicated for GQA geometries
+    where ``Hkv`` doesn't divide the model axis."""
     hd = cfg.resolved_head_dim
     shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    names = ("layers", None, None, "kv_heads", "head_dim")
+    return {"k": named_zeros(names, shape, dtype),
+            "v": named_zeros(names, shape, dtype)}
 
 
 def paged_kv_cache_specs(cfg: ModelConfig, num_blocks: int, block_size: int,

@@ -33,6 +33,18 @@ out of slots without recompilation. Since PR 2 the KV cache is **paged**:
   double-buffered block DMAs instead of the gather-then-dense XLA
   reference; ``"pallas_interpret"`` validates the same kernels on CPU).
   The override scopes only the engine's jitted step, not the process.
+* since PR 4 one engine can span a **(data, model) mesh**: ``tp=N`` (or an
+  explicit ``mesh=``) shards the params Megatron-style and the paged K/V
+  pools on the kv-head axis (:mod:`repro.launch.serve_shardings` owns the
+  policy), so every device holds ``1/tp`` of the KV bytes and the jitted
+  step runs GSPMD-partitioned with explicit in/out shardings. All host-side
+  machinery — allocator, page tables, prefix cache, scheduling — is
+  layout-blind: block ids mean the same thing on every shard, page tables
+  and positions replicate. Pallas kernel modes wrap the per-shard kernels
+  in ``shard_map`` at the dispatch layer (each shard walks only its local
+  pool slice, fused-scatter pool donation included); the default ``tp=1``
+  builds no mesh at all and stays bitwise-identical to the single-device
+  engine.
 
 Scheduling is unchanged from PR 1: prompts are absorbed ``chunk`` tokens
 per slot per step through one fused ``prefill`` call (decode IS prefill
@@ -55,6 +67,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import math
 import time
 from collections import deque
@@ -66,6 +79,7 @@ import numpy as np
 
 import repro.core as nn
 from repro.core import context as _ctx
+from repro.distributed import sharding as _sh
 from repro.models.registry import ModelApi
 from repro.serving import sampling
 from repro.serving.paged import (BlockAllocator, PrefixCache,
@@ -131,9 +145,37 @@ class ServingEngine:
                  cache_dtype=jnp.float32, paged: bool | None = None,
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True,
-                 kernels: _ctx.KernelMode | None = None):
+                 kernels: _ctx.KernelMode | None = None,
+                 mesh=None, tp: int | None = None):
         self.api = api
         self.params = params
+        # tensor parallelism: tp=N builds a (1, N) (data, model) host mesh
+        # (or pass an explicit mesh with a "model" axis). tp=1 / no mesh is
+        # the unchanged single-device engine — no env, no device_put, the
+        # exact pre-mesh trace.
+        if tp is not None and tp < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
+        if mesh is None and tp is not None and tp > 1:
+            from repro.launch.mesh import make_serving_mesh
+            mesh = make_serving_mesh(tp)
+        elif mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError("serving mesh needs a 'model' axis, got "
+                                 f"{mesh.axis_names}")
+            if tp is not None and tp != mesh.shape["model"]:
+                raise ValueError(
+                    f"tp={tp} conflicts with the mesh's model axis of "
+                    f"{mesh.shape['model']} — pass one or the other")
+        self.mesh = mesh
+        self.tp = int(mesh.shape["model"]) if mesh is not None else 1
+        if mesh is not None:
+            from repro.launch.serve_shardings import make_serve_env
+            self._env = make_serve_env(mesh, api.cfg)
+            with _sh.sharding_env(self._env):
+                self.params = jax.device_put(
+                    params, _sh.params_shardings(params))
+        else:
+            self._env = None
         # kernel-mode override for the jitted step (None = ambient context):
         # "pallas" runs the paged-attention page-table walk on real TPUs,
         # "pallas_interpret" the same kernel logic on CPU, "xla*" the
@@ -169,8 +211,9 @@ class ServingEngine:
             # garbage block; size it down to oversubscribe slots on memory
             self.num_blocks = (num_blocks if num_blocks is not None
                                else max_batch * self.max_blocks + 1)
-            self.state = api.paged_state_init(
-                max_batch, self.num_blocks, self.block_size, cache_dtype)
+            with self._env_scope():
+                self.state = api.paged_state_init(
+                    max_batch, self.num_blocks, self.block_size, cache_dtype)
             self.alloc = BlockAllocator(self.num_blocks, self.block_size)
             self.prefix = (PrefixCache(self.alloc)
                            if prefix_cache and api.cache_spec.prefix_reuse
@@ -181,18 +224,18 @@ class ServingEngine:
             self._slot_keys: list[list[bytes]] = [[] for _ in range(max_batch)]
             self._slot_hits = np.zeros(max_batch, np.int32)
             self._slot_plen = np.zeros(max_batch, np.int32)
-            self._step = jax.jit(self._step_paged_fn,
-                                 static_argnames=("do_sample",))
+            # 8 replicated metadata args: pages, pos, length + 5 sampling
+            self._step = self._jit_step(self._step_paged_fn, n_meta=8)
         else:
             # dense fallback: one (max_seq + chunk)-deep region per slot.
             # chunk-1 headroom: a C-wide cache write starting at pos <=
             # max_seq-1 must never clamp (pad columns past a row's valid
             # length would otherwise shift onto live entries)
             self.prefix = None
-            self.state = api.decode_state_init(
-                max_batch, max_seq + self.chunk, cache_dtype)
-            self._step = jax.jit(self._step_fn,
-                                 static_argnames=("do_sample",))
+            with self._env_scope():
+                self.state = api.decode_state_init(
+                    max_batch, max_seq + self.chunk, cache_dtype)
+            self._step = self._jit_step(self._step_fn, n_meta=7)
 
     # ------------------------------------------------------------------ #
     def _sample_or_greedy(self, logits, temps, top_k, top_p, seeds, counts,
@@ -203,15 +246,65 @@ class ServingEngine:
         # all-greedy batch (the default): skip the (B, V) sort pipeline
         return jnp.argmax(last, axis=-1).astype(jnp.int32)
 
-    def _kernel_scope(self):
-        """Context override applied while TRACING the jitted step — kernel
-        dispatch in :mod:`repro.kernels.ops` reads the ambient context at
-        trace time, so scoping the trace pins the engine's kernel mode
-        regardless of what the caller's context says."""
-        if not self.kernels:          # None/"" -> ambient context
+    def _env_scope(self):
+        """The engine's ShardingEnv, active while building state and while
+        TRACING the jitted step: ``constrain`` calls in the models and the
+        shard_map wrapping in :mod:`repro.kernels.ops` both read the
+        thread-local env at trace time. Null without a mesh."""
+        if self._env is None:
             return contextlib.nullcontext()
-        return _ctx.context_scope(dataclasses.replace(
-            _ctx.get_default_context(), kernels=self.kernels))
+        return _sh.sharding_env(self._env)
+
+    def _kernel_scope(self):
+        """Context overrides applied while TRACING the jitted step — kernel
+        dispatch in :mod:`repro.kernels.ops` reads the ambient context at
+        trace time, so scoping the trace pins the engine's kernel mode (and
+        its serving mesh) regardless of what the caller's context says."""
+        stack = contextlib.ExitStack()
+        if self.kernels:              # None/"" -> ambient context
+            stack.enter_context(_ctx.context_scope(dataclasses.replace(
+                _ctx.get_default_context(), kernels=self.kernels)))
+        stack.enter_context(self._env_scope())
+        return stack
+
+    def _jit_step(self, fn, *, n_meta: int):
+        """Compile the step. Single-device engines keep the plain jit of
+        PRs 1-3 (bitwise-identical trace). Under a mesh the step is pinned
+        with explicit in/out shardings: params and state keep their
+        placement fixed-point (no first-step reshard, no sharding drift
+        between the state returned by step N and consumed by step N+1),
+        tokens/pages/positions/sampling knobs and the sampled token
+        replicate. ``n_meta`` counts those replicated metadata args."""
+        if self._env is None:
+            return jax.jit(fn, static_argnames=("do_sample",))
+        from jax.sharding import NamedSharding, PartitionSpec
+        repl = NamedSharding(self.mesh, PartitionSpec())
+
+        def put(a):
+            sh = getattr(a, "sharding", None)
+            return sh if isinstance(sh, NamedSharding) else repl
+
+        p_sh = jax.tree.map(put, self.params)
+        s_sh = jax.tree.map(put, self.state)
+        # jit rejects kwargs once in_shardings is given, so the static
+        # do_sample flag is pre-bound: one jitted callee per variant
+        # (exactly the two traces the single-device path compiles lazily)
+        jitted = {
+            ds: jax.jit(functools.partial(fn, do_sample=ds),
+                        in_shardings=(p_sh, repl, s_sh) + (repl,) * n_meta,
+                        out_shardings=(repl, s_sh))
+            for ds in (False, True)
+        }
+        return lambda *args, do_sample: jitted[do_sample](*args)
+
+    def tp_layout(self) -> dict[str, str]:
+        """Realized state placement (leaf path -> spec or "replicated");
+        {} for single-device engines. See ``CacheSpec.tp_note`` for the
+        per-family rationale behind replicated leaves."""
+        if self._env is None:
+            return {}
+        from repro.launch.serve_shardings import state_layout
+        return state_layout(self.state)
 
     def _step_fn(self, params, tokens, state, pos, length,
                  temps, top_k, top_p, seeds, counts, *, do_sample):

@@ -1,4 +1,5 @@
 import os
+import re
 import subprocess
 import sys
 
@@ -6,6 +7,18 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+
+# REPRO_HOST_DEVICES=<n> forces N XLA host devices for the whole run (CI's
+# tp leg runs the distributed/serving/TP subset on 8). Must land in
+# XLA_FLAGS here, before anything initializes a jax backend; tests gate on
+# len(jax.devices()) and skip when the flag isn't set.
+_HOST_DEVS = os.environ.get("REPRO_HOST_DEVICES")
+if _HOST_DEVS and "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_HOST_DEVS)}"
+    ).strip()
 
 # REPRO_KERNELS=<mode> pins the default-context kernel mode for the whole
 # test run (CI's pallas-interpret leg re-runs the kernel/serving subset
@@ -31,8 +44,13 @@ def run_in_subprocess(code: str, devices: int = 1, timeout: int = 300) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     if devices > 1:
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                            + f" --xla_force_host_platform_device_count={devices}").strip()
+        # drop any inherited count (e.g. the tp CI leg's REPRO_HOST_DEVICES
+        # wiring above) so the subprocess sees exactly `devices`
+        flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                       env.get("XLA_FLAGS", ""))
+        env["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={devices}"
+        ).strip()
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=timeout)
     if proc.returncode != 0:

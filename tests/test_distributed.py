@@ -28,6 +28,33 @@ def test_sharding_rules_degrade_on_indivisible():
         assert spec_for(("heads",), (8,)) == P("model")
 
 
+def test_make_host_mesh_rejects_insufficient_devices():
+    """make_host_mesh must raise the same loud "needs N, have M" error as
+    make_production_mesh instead of silently slicing jax.devices()[:n]
+    into a wrong-sized mesh."""
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    have = len(jax.devices())
+    with pytest.raises(RuntimeError,
+                       match=f"needs {8 * have} devices, have {have}"):
+        make_host_mesh((8 * have,), ("data",))
+    # exact fit still works
+    mesh = make_host_mesh((have,), ("data",))
+    assert mesh.shape["data"] == have
+
+
+def test_make_serving_mesh_shape():
+    import jax
+    from repro.launch.mesh import make_serving_mesh
+    mesh = make_serving_mesh(1)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["model"] == 1 and mesh.shape["data"] == 1
+    with pytest.raises(ValueError, match="tp must be >= 1"):
+        make_serving_mesh(0)
+    with pytest.raises(RuntimeError, match="needs"):
+        make_serving_mesh(8 * len(jax.devices()))
+
+
 def test_duplicate_mesh_axis_dropped():
     import jax
     from jax.sharding import PartitionSpec as P

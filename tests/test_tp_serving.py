@@ -1,0 +1,203 @@
+"""Tensor-parallel serving: one engine spans a (data, model) mesh.
+
+Runs in-process against forced host devices — set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (or
+``REPRO_HOST_DEVICES=8``, wired through conftest) before starting pytest;
+without enough devices every test here skips. CI's tp leg provides 8.
+
+Covers the ISSUE-4 acceptance matrix: greedy-decode token equality
+tp=1 vs tp=2 vs tp=4 across transformer (GQA + MQA) and hybrid families,
+with prefix-cache hits in the mix; the per-device KV-pool split assertion;
+kernel-mode parity (shard_map-wrapped interpret Pallas == GSPMD XLA); and
+tp=1 identity with the mesh-free engine.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as nn
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+
+GQA = ModelConfig(name="tp-gqa", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  head_dim=16, remat="none")
+MQA = dataclasses.replace(GQA, name="tp-mqa", n_kv_heads=1)
+HYBRID = ModelConfig(name="tp-hyb", family="hybrid", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                     head_dim=16, ssm_state=16, ssm_head_dim=32, ssm_chunk=4,
+                     attn_every=2, remat="none")
+
+_PARAMS_CACHE: dict[str, dict] = {}
+_BASELINE_CACHE: dict[str, dict[int, list[int]]] = {}
+
+
+def _needs_devices(n: int) -> None:
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} host devices, have {len(jax.devices())} — "
+                    "set XLA_FLAGS=--xla_force_host_platform_device_count")
+
+
+def init_params(cfg):
+    if cfg.name not in _PARAMS_CACHE:
+        api = get_model(cfg)
+        _PARAMS_CACHE[cfg.name] = nn.init(
+            lambda t: api.forward(t), jax.random.key(0),
+            jnp.zeros((1, 8), jnp.int32))
+    return _PARAMS_CACHE[cfg.name]
+
+
+def _prompts(cfg, shared_prefix: bool = False) -> list[list[int]]:
+    rng = np.random.default_rng(7)
+    if shared_prefix:
+        # two waves over a common 20-token prefix: wave 2 hits the prefix
+        # cache (pure-KV families) while wave 1 is still a cold miss
+        pre = rng.integers(1, cfg.vocab_size, 20).tolist()
+        wave = [pre + rng.integers(1, cfg.vocab_size, 4).tolist()
+                for _ in range(3)]
+        return wave + wave
+    return [rng.integers(1, cfg.vocab_size, 12).tolist() for _ in range(4)]
+
+
+def run_engine(cfg, tp: int, *, kernels=None, shared_prefix=False,
+               **kw) -> tuple[dict[int, list[int]], ServingEngine]:
+    api = get_model(cfg)
+    eng = ServingEngine(api, init_params(cfg), max_batch=2, max_seq=64,
+                        chunk=8, tp=tp, kernels=kernels, **kw)
+    for i, p in enumerate(_prompts(cfg, shared_prefix)):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+    done = eng.run_until_drained()
+    assert all(r.done for r in done) and done
+    return {r.uid: r.generated for r in done}, eng
+
+
+def baseline(cfg, shared_prefix: bool = False) -> dict[int, list[int]]:
+    key = f"{cfg.name}/{shared_prefix}"
+    if key not in _BASELINE_CACHE:
+        _BASELINE_CACHE[key], _ = run_engine(cfg, tp=1,
+                                             shared_prefix=shared_prefix)
+    return _BASELINE_CACHE[key]
+
+
+# ---------------------------------------------------------------------- #
+# greedy-decode token equality across tp widths
+# ---------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("tp", [2, 4])
+@pytest.mark.parametrize("cfg", [GQA, MQA, HYBRID],
+                         ids=["gqa", "mqa", "hybrid"])
+def test_tp_greedy_matches_single_device(cfg, tp):
+    """tp=2 shards the kv-head axis; tp=4 with Hkv<=2 exercises the
+    replicate-KV / shard-query-heads GQA path. Both must reproduce the
+    single-device greedy tokens exactly."""
+    _needs_devices(tp)
+    got, eng = run_engine(cfg, tp=tp)
+    assert eng.tp == tp and eng.mesh is not None
+    assert got == baseline(cfg)
+
+
+@pytest.mark.parametrize("cfg,tp", [(GQA, 2), (MQA, 2), (HYBRID, 2),
+                                    (GQA, 4), (MQA, 4)],
+                         ids=["gqa-tp2", "mqa-tp2", "hybrid-tp2",
+                              "gqa-tp4", "mqa-tp4"])
+def test_tp_pallas_interpret_matches_xla(cfg, tp):
+    """The shard_map-wrapped interpret-mode Pallas kernels produce the
+    same greedy tokens as the GSPMD-partitioned XLA references — across
+    all three _tp_heads_call branches: kv-head sharding (GQA tp=2),
+    grouped query heads with replicated KV (MQA, and MQA tp=4), and the
+    fully-replicated fallback (GQA Hkv=2 on tp=4: group=2 % 4 != 0)."""
+    _needs_devices(tp)
+    got, _ = run_engine(cfg, tp=tp, kernels="pallas_interpret")
+    assert got == baseline(cfg)
+
+
+def test_tp_prefix_cache_hits(cfg=GQA):
+    """Prefix reuse stays sound under TP: the host-side prefix map is
+    layout-blind (block ids are global), so hit counts AND tokens match
+    the single-device engine."""
+    _needs_devices(2)
+    got, eng = run_engine(cfg, tp=2, shared_prefix=True)
+    hits = sum(r.metrics.prefix_hit_tokens for r in eng.completed)
+    assert hits > 0, "shared-prefix wave 2 must hit the prefix cache"
+    assert got == baseline(cfg, shared_prefix=True)
+    _, e1 = run_engine(cfg, tp=1, shared_prefix=True)
+    assert hits == sum(r.metrics.prefix_hit_tokens for r in e1.completed)
+
+
+# ---------------------------------------------------------------------- #
+# memory layout: the pool really is split tp-ways
+# ---------------------------------------------------------------------- #
+
+def test_pool_sharded_per_device():
+    """Each device holds exactly 1/tp of every KV pool: the kv-head dim of
+    every addressable shard is Hkv/tp and per-device bytes are total/tp."""
+    from repro.launch.serve_shardings import per_device_state_bytes
+    _needs_devices(2)
+    tp = 2
+    _, eng = run_engine(GQA, tp=tp)
+    for name in ("k", "v"):
+        pool = eng.state[name]
+        assert pool.sharding.spec[3] == "model"
+        for shard in pool.addressable_shards:
+            assert shard.data.shape[3] == GQA.n_kv_heads // tp
+            assert shard.data.nbytes == pool.nbytes // tp
+    total = sum(a.nbytes for a in jax.tree.leaves(eng.state))
+    for dev in eng.mesh.devices.flat:
+        assert per_device_state_bytes(eng.state, dev) == total // tp
+
+
+def test_gqa_indivisible_kv_replicates_with_note():
+    """Hkv=2 on tp=4 can't split: pools replicate (the recorded CacheSpec
+    policy) while the engine still answers correctly — covered above."""
+    _needs_devices(4)
+    _, eng = run_engine(GQA, tp=4)
+    layout = eng.tp_layout()
+    assert layout["k"] == "replicated" and layout["v"] == "replicated"
+    assert "replicates" in get_model(GQA).cache_spec.tp_note
+
+
+def test_hybrid_ssm_state_layout_recorded():
+    """Hybrid under tp=2: per-site pools shard on kv heads, SSM h on SSD
+    heads; the layout report and the CacheSpec note both say so."""
+    _needs_devices(2)
+    _, eng = run_engine(HYBRID, tp=2)
+    layout = eng.tp_layout()
+    assert "'model'" in layout["kv/k"] and "'model'" in layout["kv/v"]
+    assert "'model'" in layout["ssm/h"]
+    assert "SSD heads" in get_model(HYBRID).cache_spec.tp_note
+
+
+# ---------------------------------------------------------------------- #
+# tp=1 stays the single-device engine
+# ---------------------------------------------------------------------- #
+
+def test_tp1_is_identity():
+    """tp=1 builds no mesh and takes the exact pre-mesh code path; its
+    tokens match the default engine's bitwise (same trace, same arrays)."""
+    got1, e1 = run_engine(GQA, tp=1)
+    got_default, e_default = run_engine(GQA, tp=None)
+    assert e1.mesh is None and e1.tp == 1 and e1.tp_layout() == {}
+    assert e_default.mesh is None
+    assert got1 == got_default
+
+
+def test_tp_rejects_bad_width():
+    with pytest.raises(ValueError, match="tp must be >= 1"):
+        ServingEngine(get_model(GQA), init_params(GQA), tp=0)
+
+
+def test_explicit_mesh_validated():
+    """A hand-built mesh must carry a 'model' axis, and a conflicting
+    tp=/mesh= pair is rejected instead of silently ignoring tp."""
+    from repro.launch.mesh import make_host_mesh
+    no_model = make_host_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="needs a 'model' axis"):
+        ServingEngine(get_model(GQA), init_params(GQA), mesh=no_model)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="conflicts"):
+        ServingEngine(get_model(GQA), init_params(GQA), mesh=mesh, tp=2)
