@@ -3,7 +3,9 @@
 fixed-slot compiled step; slots refill without recompilation. Prompts are
 absorbed through chunked prefill (several tokens per fused step) and each
 request carries its own sampling settings (temperature / top-k / top-p /
-seed; temperature 0 = greedy).
+seed; temperature 0 = greedy) plus a scheduling ``priority`` class —
+higher classes are admitted first and may preempt running lower-priority
+requests under pressure (see repro.serving.scheduler).
 
 Run: PYTHONPATH=src python examples/serve_lm.py
 """
@@ -30,8 +32,11 @@ def main():
 
     prompts = [[1, 5, 9], [2, 6], [3, 7, 11, 13], [4, 8], [5, 9], [6, 10]]
     for i, p in enumerate(prompts):
-        # even uids decode greedily, odd uids sample at temperature 0.8
+        # even uids decode greedily, odd uids sample at temperature 0.8;
+        # the last request is high-priority: it jumps the backlog (and
+        # would preempt a running bulk request under pool pressure)
         engine.submit(Request(uid=i, prompt=p, max_new_tokens=12,
+                              priority=2 if i == len(prompts) - 1 else 0,
                               temperature=0.0 if i % 2 == 0 else 0.8,
                               top_k=40, top_p=0.95, seed=i))
 

@@ -29,6 +29,16 @@ Flags:
                    N devices — on CPU set
                    XLA_FLAGS=--xla_force_host_platform_device_count=N.
                    1 (default) = the single-device engine, unchanged.
+  --scheduler P    queue policy (repro.serving.scheduler): "priority"
+                   (default; priority classes, FIFO tie-break, block-level
+                   preemption of strictly-lower-priority actives under
+                   pool pressure) or "fifo" (priorities ignored, never
+                   preempts — the literal pre-PR-5 queue)
+  --priority LIST  comma-separated priority cycle assigned round-robin
+                   across requests (e.g. "0,0,2": every third request is
+                   high-priority); higher = more urgent. Default "0".
+  --sched-aging S  anti-starvation: a queued request gains one priority
+                   class per S seconds of wait (0 = off)
 
 Per-request metrics (TTFT, queue wait, decode tok/s, prefix-hit tokens)
 print at the end.
@@ -67,6 +77,17 @@ def main(argv=None) -> int:
     ap.add_argument("--no-prefix-cache", action="store_true")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel width (devices per engine)")
+    ap.add_argument("--scheduler", default="priority",
+                    choices=["priority", "fifo"],
+                    help="queue policy: priority classes + preemption, or "
+                         "plain FIFO")
+    ap.add_argument("--priority", default="0",
+                    help="comma-separated priority cycle assigned "
+                         "round-robin across requests (higher = more "
+                         "urgent)")
+    ap.add_argument("--sched-aging", type=float, default=0.0,
+                    help="seconds of queue wait per aged priority class "
+                         "(0 = no aging)")
     kernel_modes = ["xla", "xla_chunked", "pallas", "pallas_interpret"]
     ap.add_argument("--kernels",
                     default=os.environ.get("REPRO_KERNELS") or None,
@@ -78,6 +99,13 @@ def main(argv=None) -> int:
     if args.kernels is not None and args.kernels not in kernel_modes:
         ap.error(f"invalid kernel mode {args.kernels!r} "
                  f"(from $REPRO_KERNELS?)")
+    try:
+        priorities = [int(p) for p in args.priority.split(",") if p != ""]
+    except ValueError:
+        ap.error(f"--priority must be a comma-separated int list, "
+                 f"got {args.priority!r}")
+    if not priorities:
+        priorities = [0]
 
     import jax
     import jax.numpy as jnp
@@ -108,7 +136,13 @@ def main(argv=None) -> int:
                            block_size=args.block_size,
                            num_blocks=args.num_blocks or None,
                            prefix_cache=not args.no_prefix_cache,
-                           kernels=args.kernels, tp=args.tp)
+                           kernels=args.kernels, tp=args.tp,
+                           scheduler=args.scheduler,
+                           aging_s=args.sched_aging)
+    if args.scheduler != "priority" or len(priorities) > 1 \
+            or args.sched_aging:
+        print(f"scheduler: {args.scheduler}, priority cycle {priorities}, "
+              f"aging {args.sched_aging:g}s", flush=True)
     if engine.paged:
         print(f"paged KV: {engine.num_blocks} blocks x "
               f"{engine.block_size} tok"
@@ -128,6 +162,7 @@ def main(argv=None) -> int:
         prompt = rng.integers(1, cfg.vocab_size, plen).tolist()
         engine.submit(Request(uid=i, prompt=prompt,
                               max_new_tokens=args.max_new,
+                              priority=priorities[i % len(priorities)],
                               temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed + i))
@@ -148,6 +183,9 @@ def main(argv=None) -> int:
         if "mean_prefix_hit_tokens" in m:
             line += (f" | prefix hits "
                      f"{m['mean_prefix_hit_tokens']:.1f} tok/req")
+        if m.get("preemptions"):
+            line += (f" | {m['preemptions']:.0f} preemptions, "
+                     f"{m['requeues']:.0f} requeues")
         print(line, flush=True)
     return 0
 

@@ -17,7 +17,7 @@ out of slots without recompilation. Since PR 2 the KV cache is **paged**:
   free blocks in the pool, not on worst-case slot capacity. Blocks return
   to the free list the moment a request completes.
 * a **prefix cache** (vLLM-style, :mod:`repro.serving.paged`) keys each
-  full prompt block by a chained 128-bit prefix digest; ``_admit`` reuses
+  full prompt block by a chained 128-bit prefix digest; admission reuses
   cache-hit leading blocks by refcount (shared blocks are read-only —
   writes always start at or past the first private block, so copy-on-write
   degenerates to recomputing the partial tail block) and skips prefill
@@ -46,11 +46,21 @@ out of slots without recompilation. Since PR 2 the KV cache is **paged**:
   builds no mesh at all and stays bitwise-identical to the single-device
   engine.
 
-Scheduling is unchanged from PR 1: prompts are absorbed ``chunk`` tokens
-per slot per step through one fused ``prefill`` call (decode IS prefill
-with C = 1), mixed (B, chunk)/(B, 1) steps, freed slots refilled FIFO with
-no draining barrier. Two compiled shapes × greedy/sampled variants: at
-most four compilations per engine.
+Scheduling policy lives in :mod:`repro.serving.scheduler` since PR 5: the
+engine owns only the device-facing machinery (the jitted step, the
+sharding env, metrics aggregation) and drives a host-side
+:class:`~repro.serving.scheduler.Scheduler` that owns the queue, the
+block allocator / prefix-cache handles and all per-slot bookkeeping.
+Requests carry a ``priority`` class (higher = more urgent; FIFO within a
+class, which makes the all-default case exactly the PR-1..4 FIFO), an
+anti-starvation aging knob bounds queue wait, and under pool pressure the
+scheduler preempts lower-priority actives block-by-block (requeue-as-
+prefill — see the scheduler module docstring for the policy and its
+rationale). Mechanically, prompts are absorbed ``chunk`` tokens per slot
+per step through one fused ``prefill`` call (decode IS prefill with
+C = 1), mixed (B, chunk)/(B, 1) steps, freed slots refilled with no
+draining barrier. Two compiled shapes × greedy/sampled variants: at most
+four compilations per engine.
 
 Sampling: per-request temperature, top-k, top-p and PRNG seed (see
 :mod:`repro.serving.sampling`), fused into the jitted step;
@@ -70,7 +80,6 @@ import dataclasses
 import functools
 import math
 import time
-from collections import deque
 from typing import Any
 
 import jax
@@ -82,8 +91,7 @@ from repro.core import context as _ctx
 from repro.distributed import sharding as _sh
 from repro.models.registry import ModelApi
 from repro.serving import sampling
-from repro.serving.paged import (BlockAllocator, PrefixCache,
-                                 blocks_for_tokens, prefix_keys)
+from repro.serving.scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -95,6 +103,7 @@ class RequestMetrics:
     prefill_steps: int = 0
     decode_steps: int = 0
     prefix_hit_tokens: int = 0  # prompt tokens skipped via the prefix cache
+    preemptions: int = 0        # times this request was evicted mid-flight
 
     @property
     def queue_wait(self) -> float:
@@ -128,6 +137,9 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: int | None = None
+    # scheduling class: higher = more urgent; FIFO within a class. The
+    # default 0 everywhere reproduces plain FIFO admission exactly.
+    priority: int = 0
     # sampling knobs: temperature 0 = greedy; top_k <= 0 / top_p >= 1 disable
     temperature: float = 0.0
     top_k: int = 0
@@ -146,7 +158,9 @@ class ServingEngine:
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True,
                  kernels: _ctx.KernelMode | None = None,
-                 mesh=None, tp: int | None = None):
+                 mesh=None, tp: int | None = None,
+                 scheduler: str = "priority", aging_s: float = 0.0,
+                 preemption: bool = True):
         self.api = api
         self.params = params
         # tensor parallelism: tp=N builds a (1, N) (data, model) host mesh
@@ -193,37 +207,24 @@ class ServingEngine:
         self.chunk = max(1, int(chunk)) if api.prefill is not None else 1
         self._prefill_fn = api.prefill if api.prefill is not None else (
             lambda t, s, p, l: api.decode_step(t, s, p))
-        self.queue: deque[Request] = deque()
-        self.active: list[Request | None] = [None] * max_batch
-        self.pos = np.zeros(max_batch, np.int32)          # next write index
-        self.pending_prompt: list[deque[int]] = [deque() for _ in range(max_batch)]
         self.completed: list[Request] = []
 
         can_page = api.prefill_paged is not None and api.cache_spec.paged
         self.paged = can_page if paged is None else (paged and can_page)
+        # every scheduling decision — queue order, placement, eviction,
+        # preemption — and all per-slot bookkeeping lives in the scheduler;
+        # it is host-side and layout-blind, so tp=N engines construct it
+        # identically to tp=1
+        self.scheduler = Scheduler(
+            max_batch=max_batch, max_seq=max_seq, chunk=self.chunk,
+            paged=self.paged, block_size=block_size, num_blocks=num_blocks,
+            prefix_cache=prefix_cache and api.cache_spec.prefix_reuse,
+            policy=scheduler, aging_s=aging_s, preemption=preemption)
         if self.paged:
-            self.block_size = int(block_size)
-            # tables must cover every write of a padded chunk starting at
-            # pos <= max_seq - 1 (pads past that spill into garbage blk 0)
-            self.max_blocks = math.ceil((max_seq + self.chunk)
-                                        / self.block_size)
-            # default pool: every slot can hold a max-length request, + the
-            # garbage block; size it down to oversubscribe slots on memory
-            self.num_blocks = (num_blocks if num_blocks is not None
-                               else max_batch * self.max_blocks + 1)
             with self._env_scope():
                 self.state = api.paged_state_init(
-                    max_batch, self.num_blocks, self.block_size, cache_dtype)
-            self.alloc = BlockAllocator(self.num_blocks, self.block_size)
-            self.prefix = (PrefixCache(self.alloc)
-                           if prefix_cache and api.cache_spec.prefix_reuse
-                           else None)
-            self.pages = np.zeros((max_batch, self.max_blocks), np.int32)
-            self._prompt_keys: dict[int, list[bytes]] = {}  # id(req) -> keys
-            self._slot_blocks: list[list[int]] = [[] for _ in range(max_batch)]
-            self._slot_keys: list[list[bytes]] = [[] for _ in range(max_batch)]
-            self._slot_hits = np.zeros(max_batch, np.int32)
-            self._slot_plen = np.zeros(max_batch, np.int32)
+                    max_batch, self.scheduler.num_blocks,
+                    self.scheduler.block_size, cache_dtype)
             # 8 replicated metadata args: pages, pos, length + 5 sampling
             self._step = self._jit_step(self._step_paged_fn, n_meta=8)
         else:
@@ -231,11 +232,47 @@ class ServingEngine:
             # chunk-1 headroom: a C-wide cache write starting at pos <=
             # max_seq-1 must never clamp (pad columns past a row's valid
             # length would otherwise shift onto live entries)
-            self.prefix = None
             with self._env_scope():
                 self.state = api.decode_state_init(
                     max_batch, max_seq + self.chunk, cache_dtype)
             self._step = self._jit_step(self._step_fn, n_meta=7)
+
+    # ------------------------------------------------------------------ #
+    # read-only views into the scheduler (benchmarks/tests introspect
+    # these; the engine itself never touches allocator or prefix-cache
+    # internals — that is the scheduler's job)
+    # ------------------------------------------------------------------ #
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def active(self):
+        return self.scheduler.active
+
+    @property
+    def pos(self):
+        return self.scheduler.pos
+
+    @property
+    def alloc(self):
+        return self.scheduler.alloc
+
+    @property
+    def prefix(self):
+        return self.scheduler.prefix
+
+    @property
+    def num_blocks(self):
+        return self.scheduler.num_blocks
+
+    @property
+    def block_size(self):
+        return self.scheduler.block_size
+
+    @property
+    def max_blocks(self):
+        return self.scheduler.max_blocks
 
     # ------------------------------------------------------------------ #
     def _sample_or_greedy(self, logits, temps, top_k, top_p, seeds, counts,
@@ -327,102 +364,13 @@ class ServingEngine:
         return next_tok, new_state
 
     # ------------------------------------------------------------------ #
-    def _request_blocks(self, req: Request) -> int:
-        """Total block footprint of a request: what it will actually write
-        (truncated prompt + generation), NOT max_seq — the paged capacity
-        win. Prefix hits reduce *fresh* allocation, never this total (hit
-        blocks occupy the pool and stay pinned for the whole request)."""
-        plen = min(len(req.prompt), self.max_seq - 1)
-        return min(blocks_for_tokens(plen + req.max_new_tokens,
-                                     self.block_size), self.max_blocks)
-
     def submit(self, req: Request) -> None:
-        if self.paged:
-            need = self._request_blocks(req)
-            if need > self.num_blocks - 1:
-                # can never fit even an empty pool: reject up front (a
-                # mid-scheduling failure would wedge the FIFO queue)
-                raise ValueError(
-                    f"request {req.uid} needs {need} blocks; pool has "
-                    f"{self.num_blocks - 1} usable — raise num_blocks or "
-                    f"lower max_seq/max_new_tokens")
-            if self.prefix is not None:
-                # memoize: admission may retry every step while the pool
-                # is short; the O(plen) key build must not repeat
-                self._prompt_keys[id(req)] = prefix_keys(
-                    req.prompt[: self.max_seq - 1], self.block_size)
-        req.metrics.submit_t = time.monotonic()
-        self.queue.append(req)
-
-    def _admit_one_paged(self, slot: int, req: Request) -> bool:
-        """Try to place ``req`` in ``slot``: prefix peek, then block-based
-        admission control. Returns False when the pool is short (the
-        request stays queued — FIFO, no skip-ahead); a failed attempt
-        mutates nothing, so per-step retries are free of refcount churn
-        and prefix-stat/LRU skew."""
-        prompt = req.prompt[: self.max_seq - 1]
-        plen = len(prompt)
-        keys = (self._prompt_keys.get(id(req), [])
-                if self.prefix is not None else [])
-        hits = self.prefix.peek(keys) if self.prefix is not None else []
-        peeked = len(hits)     # pre-pop count: stats/LRU credit ALL hits
-        # never skip the whole prompt: >= 1 token must still run through
-        # prefill so the step has logits to sample the first token from
-        while hits and len(hits) * self.block_size >= plen:
-            hits.pop()
-        need = self._request_blocks(req)
-        fresh = need - len(hits)
-        if self.prefix is not None:
-            # incref hits before any eviction so it can't reclaim them
-            self.prefix.acquire(hits)
-        short = fresh - self.alloc.free_blocks
-        if short > 0:
-            # evict only when it actually covers the shortfall — otherwise
-            # admission is doomed until an active request completes, and
-            # flushing hot prefixes would buy nothing
-            if self.prefix is None or self.prefix.evictable() < short:
-                if self.prefix is not None:
-                    self.prefix.release(hits)
-                return False
-            self.prefix.evict(short)
-        blocks = hits + self.alloc.alloc(fresh)
-        if self.prefix is not None:
-            # peeked, not len(hits): a full-prompt repeat still touched its
-            # deepest block — keep its LRU recency hot and count the hit
-            self.prefix.commit(keys, peeked)
-            self._prompt_keys.pop(id(req), None)
-        self.active[slot] = req
-        self._slot_blocks[slot] = blocks
-        self._slot_keys[slot] = keys
-        self._slot_hits[slot] = len(hits)
-        self._slot_plen[slot] = plen
-        self.pages[slot, :] = 0
-        self.pages[slot, :len(blocks)] = blocks
-        skip = len(hits) * self.block_size
-        self.pos[slot] = skip
-        self.pending_prompt[slot] = deque(prompt[skip:])
-        req.metrics.prefix_hit_tokens = skip
-        return True
+        """Enqueue a request (may raise when it can never fit the pool —
+        see :meth:`Scheduler.submit`)."""
+        self.scheduler.submit(req, time.monotonic())
 
     def _admit(self, now: float) -> None:
-        fresh = []
-        for slot in range(self.B):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            if self.paged:
-                if not self._admit_one_paged(slot, req):
-                    break   # pool short: keep FIFO order, wait for frees
-            else:
-                self.active[slot] = req
-                self.pos[slot] = 0
-                # truncate: at most max_seq-1 prompt tokens fit the cache
-                # while leaving room for one generated token
-                self.pending_prompt[slot] = deque(
-                    req.prompt[: self.max_seq - 1])
-            self.queue.popleft()
-            req.metrics.admit_t = now
-            fresh.append(slot)
+        fresh = self.scheduler.admit(now)
         if fresh:
             idx = jnp.asarray(fresh, jnp.int32)
             # Zero the admitted rows of every *recurrent* state leaf so a
@@ -438,36 +386,15 @@ class ServingEngine:
                 return a.at[:, idx].set(0)
             self.state = jax.tree_util.tree_map_with_path(reset, self.state)
 
-    def _register_prompt_blocks(self, slot: int) -> None:
-        """Prompt fully absorbed: publish its full, exclusively-written
-        blocks to the prefix map so later requests can share them."""
-        if self.prefix is None:
-            return
-        plen = int(self._slot_plen[slot])
-        keys = self._slot_keys[slot]
-        blocks = self._slot_blocks[slot]
-        for j in range(int(self._slot_hits[slot]),
-                       plen // self.block_size):
-            self.prefix.register(keys[j], blocks[j])
-
-    def _free_slot(self, slot: int) -> None:
-        self.active[slot] = None   # slot refilled next step
-        self.pos[slot] = 0
-        self.pending_prompt[slot] = deque()
-        if self.paged:
-            for bid in self._slot_blocks[slot]:
-                self.alloc.decref(bid)
-            self._slot_blocks[slot] = []
-            self._slot_keys[slot] = []
-            self.pages[slot, :] = 0
-
     def step(self) -> int:
         """One synchronized mixed prefill/decode step; returns #active."""
+        sched = self.scheduler
         self._admit(time.monotonic())
-        active_slots = [s for s, r in enumerate(self.active) if r is not None]
+        active_slots = [s for s, r in enumerate(sched.active)
+                        if r is not None]
         if not active_slots:
             return 0
-        prefilling = any(len(self.pending_prompt[s]) > 1
+        prefilling = any(len(sched.pending_prompt[s]) > 1
                          for s in active_slots)
         C = self.chunk if prefilling else 1
         B = self.B
@@ -481,8 +408,8 @@ class ServingEngine:
         emits = [False] * B
         prompt_done = []
         for s in active_slots:
-            req = self.active[s]
-            pend = self.pending_prompt[s]
+            req = sched.active[s]
+            pend = sched.pending_prompt[s]
             if pend:
                 k = min(C, len(pend))
                 for i in range(k):
@@ -503,23 +430,26 @@ class ServingEngine:
             # mask to 31 bits: callers often derive 64-bit seeds (hashes)
             seeds[s] = (req.seed if req.seed is not None
                         else req.uid) & 0x7FFFFFFF
+            # count = tokens generated so far: a preempted-then-resumed
+            # request keeps its generated list, so the per-(seed, count)
+            # PRNG stream continues exactly where it left off
             counts[s] = len(req.generated)
         do_sample = any(temps[s] > 0.0 for s in active_slots)
         args = (self.params, jnp.asarray(tokens), self.state)
         if self.paged:
-            args += (jnp.asarray(self.pages),)
+            args += (jnp.asarray(sched.pages),)
         next_tok, self.state = self._step(
-            *args, jnp.asarray(self.pos), jnp.asarray(length),
+            *args, jnp.asarray(sched.pos), jnp.asarray(length),
             jnp.asarray(temps), jnp.asarray(top_k), jnp.asarray(top_p),
             jnp.asarray(seeds), jnp.asarray(counts), do_sample=do_sample)
         next_tok = np.asarray(next_tok)
         now = time.monotonic()
         if self.paged:
             for s in prompt_done:
-                self._register_prompt_blocks(s)
+                sched.register_prompt_blocks(s)
         for s in active_slots:
-            req = self.active[s]
-            self.pos[s] += int(length[s])
+            req = sched.active[s]
+            sched.advance(s, int(length[s]))
             if not emits[s]:
                 continue  # still absorbing prompt
             req.generated.append(int(next_tok[s]))
@@ -528,19 +458,29 @@ class ServingEngine:
             hit_eos = (req.eos_id is not None
                        and req.generated[-1] == req.eos_id)
             if (len(req.generated) >= req.max_new_tokens or hit_eos
-                    or self.pos[s] >= self.max_seq - 1):
+                    or sched.pos[s] >= self.max_seq - 1):
                 req.done = True
                 req.metrics.done_t = now
                 self.completed.append(req)
-                self._free_slot(s)
-        return sum(1 for r in self.active if r is not None)
+                sched.finish(s)
+        return sum(1 for r in sched.active if r is not None)
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         for _ in range(max_steps):
             n = self.step()
-            if n == 0 and not self.queue:
-                break
-        return self.completed
+            if n == 0 and not self.scheduler.has_work():
+                return self.completed
+        if not self.scheduler.has_work():
+            return self.completed
+        # a wedged pool (or a genuinely longer workload) must not
+        # masquerade as a clean drain — report what is still stuck
+        queued = len(self.scheduler.queue)
+        active = sum(1 for r in self.scheduler.active if r is not None)
+        raise RuntimeError(
+            f"run_until_drained: {max_steps} steps exhausted with {active} "
+            f"active and {queued} queued requests undrained — the pool may "
+            f"be wedged; raise max_steps only if the workload is genuinely "
+            f"this long ({len(self.completed)} requests did complete)")
 
     # ------------------------------------------------------------------ #
     def metrics_summary(self) -> dict[str, float]:
@@ -563,8 +503,8 @@ class ServingEngine:
             "mean_decode_tok_per_s": finite_mean(
                 r.metrics.decode_tok_per_s(len(r.generated)) for r in done),
         }
+        out.update(self.scheduler.stats())  # preemptions/requeues[/blocks]
         if self.paged:
-            out["free_blocks"] = float(self.alloc.free_blocks)
             out["mean_prefix_hit_tokens"] = (
                 sum(r.metrics.prefix_hit_tokens for r in done) / len(done))
         return out

@@ -178,9 +178,15 @@ class PrefixCache:
             self.alloc.decref(b)
 
     def commit(self, keys: list[bytes], n_hits: int) -> None:
-        """Admission succeeded: record stats, refresh LRU recency."""
+        """Admission succeeded: record stats, refresh LRU recency.
+
+        A peeked key may be gone by commit time: the deepest hit popped
+        by the never-skip-the-whole-prompt rule is *not* acquired, so the
+        caller's own eviction pass (between peek and commit) can free it.
+        Refresh what is still present rather than KeyError-ing."""
         for k in keys[:n_hits]:
-            self._map.move_to_end(k)
+            if k in self._map:
+                self._map.move_to_end(k)
         self.hits += n_hits
         if n_hits < len(keys):
             self.misses += 1
@@ -204,6 +210,12 @@ class PrefixCache:
         """How many entries :meth:`evict` could free right now."""
         return sum(1 for bid in self._map.values()
                    if self.alloc.refcount(bid) == 1)
+
+    def registered_blocks(self) -> set[int]:
+        """The block ids currently pinned by the map (the scheduler's
+        preemption pre-check asks which victim blocks would become
+        map-only — i.e. evictable — rather than free)."""
+        return set(self._map.values())
 
     def evict(self, n_blocks: int) -> int:
         """Free up to ``n_blocks`` idle entries (LRU first). Returns the

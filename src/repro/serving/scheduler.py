@@ -1,0 +1,493 @@
+"""Scheduling policy for the serving engine: priority admission, block
+placement and block-level preemption, carved out of ``ServingEngine``.
+
+The engine (:mod:`repro.serving.engine`) keeps only the device-facing
+machinery — the jitted step, the sharding env, metrics aggregation. Every
+*decision* about which request runs where, and which blocks it holds,
+lives here, host-side and layout-blind: block ids mean the same thing on
+every tensor-parallel shard, so a ``tp=N`` engine constructs exactly the
+same scheduler as ``tp=1`` and the policy never sees the mesh.
+
+Queue policy
+------------
+``policy="priority"`` (default): a priority queue over
+``Request.priority`` classes (higher = more urgent), FIFO within a class
+by submit order. With every request at the default priority 0 the queue
+degenerates to the exact FIFO of PRs 1–4 — the default engine behavior is
+unchanged. ``policy="fifo"`` ignores the priority field entirely (and
+disables preemption): the literal pre-scheduler queue.
+
+Anti-starvation aging: with ``aging_s > 0``, a queued request's
+*effective* priority grows by one class per ``aging_s`` seconds of queue
+wait, so a bulk request can only be starved for a bounded time by a
+steady interactive stream. ``aging_s = 0`` (default) disables aging.
+Aging never reorders requests within a class — equal static priorities
+age at the same rate from monotone submit times, preserving FIFO. Aging
+affects **admission order only**: preemption eligibility always compares
+*static* classes, so an aged bulk request gains precedence for the next
+free slot but never the right to evict running work of its own class —
+and a long-running active cannot age itself un-preemptible.
+
+Admission is head-of-line blocking in queue order: if the best-ranked
+request cannot be placed (even after eviction and preemption), nothing
+behind it is tried. Skip-ahead would let a stream of small requests
+starve a large one forever; head-of-line keeps the bound from aging
+meaningful.
+
+Placement (paged)
+-----------------
+Two-phase, per request: ``peek`` the prefix cache for reusable leading
+prompt blocks (pure read), compute the fresh-block need, and only then
+``acquire``/``alloc``/``commit`` — a *failed* attempt mutates nothing, so
+per-step retries of a blocked admission are free of refcount churn and
+LRU skew. Under pool pressure the shortfall is covered in escalating
+order:
+
+1. **prefix eviction** — LRU idle entries of the prefix map are freed
+   (only when eviction actually covers the shortfall; flushing hot
+   prefixes that still leave the request unplaceable buys nothing);
+2. **preemption** — if eviction cannot cover it, the lowest-effective-
+   priority active request is preempted, but only when its priority is
+   *strictly below* the candidate's (equal-priority workloads — e.g. the
+   all-default FIFO case — never preempt, so there is no thrash cycle).
+   Victims are chosen lowest priority first, most-recently-admitted on
+   ties (least work lost). A cheap reclaimable-blocks pre-check runs
+   first: if even preempting every eligible victim cannot cover the
+   need, no victim is disturbed.
+
+Preemption fires for *slot* contention as well as block shortage: when
+every slot is busy and the queue head strictly outranks some active
+request, the cheapest such victim yields its slot (and with it, its
+blocks) — a high-priority arrival never waits out a full bulk decode.
+
+Preemption = requeue-as-prefill
+-------------------------------
+A preempted victim's blocks are decref'd straight back to the free list
+(its prefix-registered blocks survive in the map — the map holds its own
+reference — and become evictable like any idle entry). The victim itself
+is re-queued with its generated-so-far tokens **folded into the resume
+prompt**, so resuming is a plain re-prefill of ``prompt + generated``
+that can ride its own prefix hits (including blocks the victim itself
+registered before being preempted).
+
+Why requeue-as-prefill rather than snapshotting KV state: a snapshot
+would have to spill ``O(len · layers)`` KV bytes somewhere off-pool —
+exactly the memory we are reclaiming — or pin the blocks it is supposed
+to free. Recomputing the prefix is pure compute on data we still have
+(the tokens), costs no pool memory while the victim waits, and reuses
+the chunked-prefill path that already exists; with the prefix cache on,
+the victim's own published blocks often make the re-prefill partial.
+The PRNG sampling stream is keyed by ``(seed, len(generated))``, so a
+resumed request continues sampling exactly where it left off.
+
+Bookkeeping owned here: the queue, the :class:`~repro.serving.paged.
+BlockAllocator` and :class:`~repro.serving.paged.PrefixCache` handles,
+per-slot block lists / prefix keys / hit counts / prompt lengths, the
+``(B, max_blocks)`` page-table rows, and the prompt-key memo (keyed by
+``Request.uid`` — never ``id(req)``, which can alias after GC — and
+dropped whenever a request leaves the queue for any reason).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.serving.paged import (BlockAllocator, PrefixCache,
+                                 blocks_for_tokens, prefix_keys)
+
+if TYPE_CHECKING:   # pragma: no cover - typing only, no engine import cycle
+    from repro.serving.engine import Request
+
+POLICIES = ("priority", "fifo")
+
+
+@dataclass
+class _Entry:
+    """One queued request plus its scheduling state.
+
+    ``prompt`` is the *effective* prompt — the (truncated) original at
+    first submit, ``original + generated`` after a preemption — so
+    placement and prefill never need to know whether this is a resume.
+    ``seq`` is the submit ticket used for FIFO tie-breaks; a preempted
+    request keeps its original ticket and so resumes at its old FIFO
+    position within its class.
+    """
+    req: "Request"
+    seq: int
+    prompt: list[int]
+    resumed: bool = field(default=False)
+
+
+class Scheduler:
+    """Owns every scheduling decision and all host-side slot bookkeeping.
+
+    The engine calls, in order, per step: :meth:`admit` (fills free slots,
+    possibly evicting/preempting), reads ``active`` / ``pending_prompt``
+    / ``pages`` / ``pos`` to build the batch, then :meth:`advance` per
+    stepped slot, :meth:`register_prompt_blocks` when a slot's prompt is
+    fully absorbed, and :meth:`release` when a request completes.
+    """
+
+    def __init__(self, *, max_batch: int, max_seq: int, chunk: int,
+                 paged: bool, block_size: int = 16,
+                 num_blocks: int | None = None, prefix_cache: bool = True,
+                 policy: str = "priority", aging_s: float = 0.0,
+                 preemption: bool = True):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown scheduler policy {policy!r}; "
+                             f"one of {POLICIES}")
+        self.B = max_batch
+        self.max_seq = max_seq
+        self.policy = policy
+        self.aging_s = float(aging_s)
+        # "fifo" is the literal pre-scheduler queue: priorities ignored,
+        # nothing ever preempted
+        self.preemption = bool(preemption) and policy == "priority"
+        self.paged = paged
+
+        self._queue: list[_Entry] = []
+        self._seq = 0                     # submit ticket counter
+        # uid -> ticket, held while the request is anywhere inside the
+        # scheduler (queued OR active) so a preempted victim requeues at
+        # its original FIFO position; dropped at finish(). In-flight uids
+        # must be unique — the ticket and key memos key on them.
+        self._ticket: dict[int, int] = {}
+        self.active: list["Request" | None] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)       # next write index
+        self.pending_prompt: list[deque[int]] = [
+            deque() for _ in range(max_batch)]
+        self.preemptions = 0              # victims evicted mid-flight
+        self.requeues = 0                 # preempted requests re-admitted
+        self._placing: list[int] = []     # slots filled by the live admit
+
+        if paged:
+            self.block_size = int(block_size)
+            # tables must cover every write of a padded chunk starting at
+            # pos <= max_seq - 1 (pads past that spill into garbage blk 0)
+            self.max_blocks = -(-(max_seq + chunk) // self.block_size)
+            # default pool: every slot can hold a max-length request, + the
+            # garbage block; size it down to oversubscribe slots on memory
+            self.num_blocks = (num_blocks if num_blocks is not None
+                               else max_batch * self.max_blocks + 1)
+            self.alloc = BlockAllocator(self.num_blocks, self.block_size)
+            self.prefix = PrefixCache(self.alloc) if prefix_cache else None
+            self.pages = np.zeros((max_batch, self.max_blocks), np.int32)
+            self._prompt_keys: dict[int, list[bytes]] = {}  # req.uid -> keys
+            self._slot_blocks: list[list[int]] = [[] for _ in range(max_batch)]
+            self._slot_keys: list[list[bytes]] = [[] for _ in range(max_batch)]
+            self._slot_hits = np.zeros(max_batch, np.int32)
+            self._slot_plen = np.zeros(max_batch, np.int32)
+        else:
+            self.block_size = 0
+            self.max_blocks = 0
+            self.num_blocks = 0
+            self.alloc = None
+            self.prefix = None
+            self.pages = None
+
+    # ------------------------------------------------------------------ #
+    # queue
+    # ------------------------------------------------------------------ #
+    @property
+    def queue(self) -> list["Request"]:
+        """Queued requests in current scheduling order (head admits first)."""
+        self._sort(time.monotonic())
+        return [e.req for e in self._queue]
+
+    def effective_priority(self, req: "Request", now: float) -> int:
+        """Static class + aging boost (one class per ``aging_s`` waited)."""
+        if self.policy == "fifo":
+            return 0
+        boost = 0
+        if self.aging_s > 0:
+            boost = int(max(0.0, now - req.metrics.submit_t) / self.aging_s)
+        return req.priority + boost
+
+    def _sort(self, now: float) -> None:
+        self._queue.sort(
+            key=lambda e: (-self.effective_priority(e.req, now), e.seq))
+
+    def submit(self, req: "Request", now: float | None = None) -> None:
+        """Validate, memoize prefix keys, and enqueue. Raises when the
+        request can never fit the pool (a mid-scheduling failure would
+        wedge the head-of-line queue forever)."""
+        now = time.monotonic() if now is None else now
+        if req.uid in self._ticket:
+            # the ticket and prompt-key memos key on uid: a duplicate
+            # would alias this request onto the other's prefix keys and
+            # could license prefix hits on the wrong prompt's KV blocks
+            raise ValueError(
+                f"request uid {req.uid} is already in flight — uids must "
+                f"be unique among queued/active requests")
+        prompt = req.prompt[: self.max_seq - 1]
+        if self.paged:
+            need = self._entry_blocks(prompt, req)
+            if need > self.num_blocks - 1:
+                raise ValueError(
+                    f"request {req.uid} needs {need} blocks; pool has "
+                    f"{self.num_blocks - 1} usable — raise num_blocks or "
+                    f"lower max_seq/max_new_tokens")
+        req.metrics.submit_t = now
+        self._ticket[req.uid] = self._seq
+        self._enqueue(_Entry(req, self._seq, prompt))
+        self._seq += 1
+
+    def _enqueue(self, entry: _Entry) -> None:
+        if self.paged and self.prefix is not None:
+            # memoize: admission may retry every step while the pool is
+            # short; the O(plen) key build must not repeat. Keyed by uid —
+            # id(req) can alias a recycled object onto stale keys.
+            self._prompt_keys[entry.req.uid] = prefix_keys(
+                entry.prompt, self.block_size)
+        self._queue.append(entry)
+
+    def _dequeue(self, entry: _Entry) -> None:
+        """A request leaves the queue for any reason: drop its key memo."""
+        self._queue.remove(entry)
+        if self.paged:
+            self._prompt_keys.pop(entry.req.uid, None)
+
+    # ------------------------------------------------------------------ #
+    # placement
+    # ------------------------------------------------------------------ #
+    def _entry_blocks(self, prompt: list[int], req: "Request") -> int:
+        """Total block footprint: what the slot will actually write
+        (truncated effective prompt + remaining generation), NOT max_seq.
+        Prefix hits reduce *fresh* allocation, never this total (hit
+        blocks occupy the pool and stay pinned for the whole request)."""
+        remaining = max(1, req.max_new_tokens - len(req.generated))
+        return min(blocks_for_tokens(len(prompt) + remaining,
+                                     self.block_size), self.max_blocks)
+
+    def _try_place(self, slot: int, entry: _Entry) -> bool:
+        """Two-phase paged placement: prefix peek, then block-based
+        admission control. Returns False when the pool is short even
+        after prefix eviction; a failed attempt mutates nothing."""
+        req, prompt = entry.req, entry.prompt
+        plen = len(prompt)
+        keys = (self._prompt_keys.get(req.uid, [])
+                if self.prefix is not None else [])
+        hits = self.prefix.peek(keys) if self.prefix is not None else []
+        peeked = len(hits)     # pre-pop count: stats/LRU credit ALL hits
+        # never skip the whole prompt: >= 1 token must still run through
+        # prefill so the step has logits to sample the next token from
+        while hits and len(hits) * self.block_size >= plen:
+            hits.pop()
+        need = self._entry_blocks(prompt, req)
+        fresh = need - len(hits)
+        if self.prefix is not None:
+            # incref hits before any eviction so it can't reclaim them
+            self.prefix.acquire(hits)
+        short = fresh - self.alloc.free_blocks
+        if short > 0:
+            # evict only when it actually covers the shortfall — otherwise
+            # admission is doomed until an active request completes, and
+            # flushing hot prefixes would buy nothing
+            if self.prefix is None or self.prefix.evictable() < short:
+                if self.prefix is not None:
+                    self.prefix.release(hits)
+                return False
+            self.prefix.evict(short)
+        blocks = hits + self.alloc.alloc(fresh)
+        if self.prefix is not None:
+            # peeked, not len(hits): a full-prompt repeat still touched its
+            # deepest block — keep its LRU recency hot and count the hit
+            self.prefix.commit(keys, peeked)
+        self.active[slot] = req
+        self._slot_blocks[slot] = blocks
+        self._slot_keys[slot] = keys
+        self._slot_hits[slot] = len(hits)
+        self._slot_plen[slot] = plen
+        self.pages[slot, :] = 0
+        self.pages[slot, :len(blocks)] = blocks
+        skip = len(hits) * self.block_size
+        self.pos[slot] = skip
+        self.pending_prompt[slot] = deque(prompt[skip:])
+        req.metrics.prefix_hit_tokens = skip
+        return True
+
+    def _place_dense(self, slot: int, entry: _Entry) -> None:
+        self.active[slot] = entry.req
+        self.pos[slot] = 0
+        self.pending_prompt[slot] = deque(entry.prompt)
+
+    # ------------------------------------------------------------------ #
+    # preemption
+    # ------------------------------------------------------------------ #
+    def _victims(self, pri: int) -> list[int]:
+        """Active slots preemptible for a candidate of STATIC priority
+        class ``pri``: strictly lower class, cheapest first (lowest
+        class, most recently admitted — least work lost). Preemption
+        rights deliberately ignore aging: aging grants a starved request
+        admission *precedence*, not the right to evict running work of
+        its own class — and an old active must not age itself into
+        un-preemptibility either. Slots placed in the CURRENT admit pass
+        are off-limits: admitting an aged request and evicting it before
+        it runs a single step would be pure churn."""
+        cand = [s for s, r in enumerate(self.active)
+                if r is not None and r.priority < pri
+                and s not in self._placing]
+        cand.sort(key=lambda s: (self.active[s].priority,
+                                 -self.active[s].metrics.admit_t))
+        return cand
+
+    def preempt(self, slot: int, now: float | None = None) -> "Request":
+        """Evict ``slot``'s request mid-flight: every block it holds is
+        decref'd back toward the free list (prefix-registered blocks stay
+        pinned by the map only, i.e. become evictable), and the request is
+        re-queued with ``generated`` folded into its resume prompt so the
+        next admission re-prefills it — possibly riding prefix hits on its
+        own previously registered blocks. Public so tests and drivers can
+        force a deterministic preemption trace."""
+        now = time.monotonic() if now is None else now
+        req = self.active[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is idle — nothing to preempt")
+        self._clear_slot(slot)
+        resume = (req.prompt[: self.max_seq - 1]
+                  + req.generated)[: self.max_seq - 1]
+        req.metrics.preemptions += 1
+        self.preemptions += 1
+        # the original ticket: the victim resumes at its old FIFO
+        # position within its class, ahead of later arrivals
+        self._enqueue(_Entry(req, self._ticket[req.uid], resume,
+                             resumed=True))
+        return req
+
+    def _reclaimable(self, pri: int) -> int:
+        """Blocks a full eviction + preemption pass could actually free
+        for a candidate of static priority class ``pri``. A victim block
+        counts only if dropping every eligible victim's references would
+        leave it free (refcount 0) or map-only (evictable); a block a
+        non-victim peer slot still shares frees nothing."""
+        out = self.alloc.free_blocks
+        registered: set[int] = set()
+        if self.prefix is not None:
+            out += self.prefix.evictable()
+            registered = self.prefix.registered_blocks()
+        drops: dict[int, int] = {}
+        for s in self._victims(pri):
+            for bid in self._slot_blocks[s]:
+                drops[bid] = drops.get(bid, 0) + 1
+        for bid, d in drops.items():
+            rc = self.alloc.refcount(bid) - d
+            # rc == 1 map-only entries are NOT in evictable() yet (their
+            # current refcount is > 1), so this never double-counts
+            if rc == 0 or (rc == 1 and bid in registered):
+                out += 1
+        return out
+
+    def _preempt_for(self, slot: int, entry: _Entry, now: float) -> bool:
+        """Eviction fell short: preempt strictly-lower-class victims one
+        at a time until ``entry`` places or no victim remains. The
+        reclaimable pre-check keeps a doomed candidate from evicting
+        victims it cannot benefit from."""
+        pri = entry.req.priority
+        if self._entry_blocks(entry.prompt, entry.req) \
+                > self._reclaimable(pri):
+            return False
+        while True:
+            victims = self._victims(pri)
+            if not victims:
+                return False
+            self.preempt(victims[0], now)
+            if self._try_place(slot, entry):
+                return True
+
+    # ------------------------------------------------------------------ #
+    # the engine-facing step surface
+    # ------------------------------------------------------------------ #
+    def admit(self, now: float) -> list[int]:
+        """Fill slots from the queue in priority order; returns the
+        freshly admitted slot ids (the engine zeroes their recurrent
+        state rows). Head-of-line blocking: the first unplaceable request
+        stops admission for this step. When every slot is busy, a
+        strictly-higher-priority head may take a victim's slot (the
+        preempted victim's blocks come with it); equal priorities — the
+        all-FIFO default — never preempt."""
+        fresh: list[int] = []
+        self._placing = fresh             # aliased: grows as slots fill
+        while self._queue:
+            self._sort(now)   # re-rank each fill: preemption can requeue
+            entry = self._queue[0]
+            slot = next((s for s in range(self.B)
+                         if self.active[s] is None), None)
+            if slot is None:
+                if not self.preemption:
+                    break
+                pri = entry.req.priority   # static class: aging grants
+                victims = self._victims(pri)  # no eviction rights
+                # no slot worth taking, or taking one still leaves the
+                # request unplaceable block-wise: disturb nobody
+                if not victims or (self.paged and self._entry_blocks(
+                        entry.prompt, entry.req) > self._reclaimable(pri)):
+                    break
+                slot = victims[0]
+                self.preempt(slot, now)
+            if self.paged:
+                if not self._try_place(slot, entry) and not (
+                        self.preemption
+                        and self._preempt_for(slot, entry, now)):
+                    break   # pool short: hold queue order, wait for frees
+            else:
+                self._place_dense(slot, entry)
+            self._dequeue(entry)
+            entry.req.metrics.admit_t = now
+            if entry.resumed:
+                self.requeues += 1
+            fresh.append(slot)
+        return fresh
+
+    def advance(self, slot: int, n: int) -> None:
+        """The jitted step absorbed ``n`` tokens for this slot."""
+        self.pos[slot] += n
+
+    def register_prompt_blocks(self, slot: int) -> None:
+        """Prompt fully absorbed: publish its full, exclusively-written
+        blocks to the prefix map so later requests can share them."""
+        if self.prefix is None:
+            return
+        plen = int(self._slot_plen[slot])
+        keys = self._slot_keys[slot]
+        blocks = self._slot_blocks[slot]
+        for j in range(int(self._slot_hits[slot]),
+                       plen // self.block_size):
+            self.prefix.register(keys[j], blocks[j])
+
+    def finish(self, slot: int) -> None:
+        """The slot's request completed: return its blocks, clear the
+        bookkeeping and its ticket. Slot refills on the next
+        :meth:`admit`."""
+        req = self.active[slot]
+        if req is not None:
+            self._ticket.pop(req.uid, None)
+        self._clear_slot(slot)
+
+    def _clear_slot(self, slot: int) -> None:
+        self.active[slot] = None
+        self.pos[slot] = 0
+        self.pending_prompt[slot] = deque()
+        if self.paged:
+            for bid in self._slot_blocks[slot]:
+                self.alloc.decref(bid)
+            self._slot_blocks[slot] = []
+            self._slot_keys[slot] = []
+            self._slot_hits[slot] = 0
+            self._slot_plen[slot] = 0
+            self.pages[slot, :] = 0
+
+    # ------------------------------------------------------------------ #
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(r is not None for r in self.active)
+
+    def stats(self) -> dict[str, float]:
+        out = {"preemptions": float(self.preemptions),
+               "requeues": float(self.requeues)}
+        if self.paged:
+            out["free_blocks"] = float(self.alloc.free_blocks)
+        return out

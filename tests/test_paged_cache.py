@@ -150,6 +150,31 @@ def test_prefix_cache_peek_mutates_nothing():
     assert pc.hits == 2 and pc.misses == 0
 
 
+def test_prefix_cache_commit_survives_evicted_peeked_key():
+    """The deepest peeked hit is popped by the never-skip-the-whole-
+    prompt rule and therefore NOT acquired — the admission's own eviction
+    pass can free it between peek and commit. commit must refresh the
+    surviving keys instead of KeyError-ing on the evicted one (found by
+    the scheduler interleaving property tests)."""
+    a = BlockAllocator(8, 4)
+    pc = PrefixCache(a)
+    keys = prefix_keys(list(range(8)), 4)
+    blocks = a.alloc(2)
+    for k, b in zip(keys, blocks):
+        pc.register(k, b)
+    for b in blocks:
+        a.decref(b)                    # only the map holds them now
+    hits = pc.peek(keys)
+    peeked = len(hits)
+    hits.pop()                         # whole-prompt hit: drop the deepest
+    pc.acquire(hits)
+    assert pc.evict(1) == 1            # frees the unacquired deepest entry
+    pc.commit(keys, peeked)            # must not raise
+    assert pc.hits == peeked
+    pc.release(hits)
+    assert a.check_conservation()
+
+
 def test_prefix_key_sensitivity():
     # same block content after a different prefix must key differently
     # (the digest chain commits to the whole prefix, not just the block)

@@ -1,0 +1,156 @@
+"""Property tests for the scheduler: random submit / preempt / resume /
+complete interleavings against the real :class:`~repro.serving.scheduler.
+Scheduler` (host-side only — no jitted step involved), checking the
+invariants the serving engine's correctness rests on:
+
+* zero leaked references, always: every live block's refcount equals the
+  number of slot page tables holding it plus one if the prefix map pins
+  it — and after a full drain + prefix flush the pool is fully free;
+* a preempted victim's *private* (unregistered) blocks go straight back
+  to the free list and are never pinned by the prefix cache;
+* pool conservation after every operation.
+
+The driver is a plain seeded function so a couple of fixed seeds run
+even without hypothesis (the deterministic smoke below); with hypothesis
+installed, the sibling ``@given`` test explores the interleaving space.
+Companion to ``test_paged_allocator_props.py``, which drives the raw
+allocator.
+"""
+
+import random
+from collections import Counter
+
+import pytest
+
+from repro.serving.engine import Request
+from repro.serving.scheduler import Scheduler
+
+
+def assert_no_leaks(sched: Scheduler) -> None:
+    """Every allocator reference is accounted for by exactly one owner:
+    a slot's page-table block list, or the prefix map (one ref each)."""
+    want = Counter()
+    for blocks in sched._slot_blocks:
+        want.update(blocks)
+    if sched.prefix is not None:
+        want.update(sched.prefix._map.values())
+    assert sched.alloc.live_blocks == len(want), \
+        f"live {sched.alloc.live_blocks} != owned {len(want)}"
+    for bid, n in want.items():
+        assert sched.alloc.refcount(bid) == n, \
+            f"block {bid}: refcount {sched.alloc.refcount(bid)} != {n} owners"
+    assert sched.alloc.check_conservation()
+
+
+def preempt_checked(sched: Scheduler, slot: int, now: float) -> None:
+    """Preempt ``slot`` and assert its private blocks are immediately
+    free and unpinned by the prefix map."""
+    registered = (set(sched.prefix._map.values())
+                  if sched.prefix is not None else set())
+    private = [b for b in sched._slot_blocks[slot] if b not in registered]
+    sched.preempt(slot, now)
+    for b in private:
+        assert sched.alloc.refcount(b) == 0, \
+            f"preempted victim's private block {b} still referenced"
+    if sched.prefix is not None:
+        assert not (set(private) & set(sched.prefix._map.values())), \
+            "prefix cache pinned a preempted victim's private block"
+
+
+def drive(seed: int, num_blocks: int, max_batch: int = 3,
+          n_ops: int = 120) -> None:
+    """Random interleaving of submit / step / preempt / finish against a
+    tight pool, with the leak invariants checked after every operation."""
+    rng = random.Random(seed)
+    sched = Scheduler(max_batch=max_batch, max_seq=64, chunk=8,
+                      paged=True, block_size=4, num_blocks=num_blocks,
+                      prefix_cache=bool(seed % 2), aging_s=0.25)
+    uid = 0
+    reqs: list[Request] = []
+    usable = num_blocks - 1
+
+    def active_slots():
+        return [s for s, r in enumerate(sched.active) if r is not None]
+
+    def host_step(now):
+        sched.admit(now)
+        for s in active_slots():
+            req = sched.active[s]
+            pend = sched.pending_prompt[s]
+            if pend:
+                k = min(8, len(pend))
+                for _ in range(k):
+                    pend.popleft()
+                sched.advance(s, k)
+                if pend:
+                    continue
+                sched.register_prompt_blocks(s)
+            else:
+                sched.advance(s, 1)
+            req.generated.append(rng.randrange(50))
+            if (len(req.generated) >= req.max_new_tokens
+                    or sched.pos[s] >= sched.max_seq - 1):
+                req.done = True
+                sched.finish(s)
+
+    now = 0.0
+    for _ in range(n_ops):
+        now += rng.random()
+        op = rng.random()
+        if op < 0.35:
+            # shared short prefixes so the prefix map actually gets hits
+            plen = rng.choice([4, 6, 8, 8, 12, 16])
+            prompt = [1 + (j % 5) for j in range(plen)] if rng.random() < .5 \
+                else [rng.randrange(1, 90) for _ in range(plen)]
+            req = Request(uid=uid, prompt=prompt,
+                          max_new_tokens=rng.randrange(1, 9),
+                          priority=rng.randrange(0, 3))
+            try:
+                sched.submit(req, now)
+                reqs.append(req)
+                uid += 1
+            except ValueError:
+                pass                    # oversized for this pool: fine
+        elif op < 0.75:
+            host_step(now)
+        elif op < 0.9 and active_slots():
+            preempt_checked(sched, rng.choice(active_slots()), now)
+        elif sched.prefix is not None:
+            sched.prefix.evict(rng.randrange(0, 4))
+        assert_no_leaks(sched)
+
+    # drain everything; the scheduler must terminate and leak nothing
+    for _ in range(2000):
+        if not sched.has_work():
+            break
+        now += 1.0
+        host_step(now)
+        assert_no_leaks(sched)
+    assert not sched.has_work(), "scheduler failed to drain"
+    assert all(r.done for r in reqs)
+    assert sched._prompt_keys == {} and sched._ticket == {}
+    # every live block is now prefix-pinned only; flushing the map must
+    # return the pool to fully free — the zero-leak end state
+    if sched.prefix is not None:
+        sched.prefix.evict(len(sched.prefix))
+    assert sched.alloc.free_blocks == usable
+    assert sched.alloc.check_conservation()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7])
+@pytest.mark.parametrize("num_blocks", [8, 14, 40])
+def test_scheduler_interleavings_smoke(seed, num_blocks):
+    """Deterministic seeds — runs everywhere, no hypothesis needed."""
+    drive(seed, num_blocks)
+
+
+try:                                   # the smoke above must still run
+    from hypothesis import given, settings, strategies as st
+except ImportError:                    # pragma: no cover - CI installs it
+    st = None
+
+if st is not None:
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), num_blocks=st.integers(6, 48))
+    def test_scheduler_interleavings(seed, num_blocks):
+        drive(seed, num_blocks)

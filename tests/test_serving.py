@@ -294,6 +294,22 @@ def test_metrics_recorded():
     assert summary["requests"] == 1 and summary["mean_ttft_s"] > 0
 
 
+def test_run_until_drained_raises_on_step_exhaustion():
+    """Hitting max_steps with requests still queued/active must raise,
+    not silently return a partial drain — a wedged pool would otherwise
+    masquerade as a clean one."""
+    eng = make_engine(max_batch=1, chunk=4)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=8))
+    eng.submit(Request(uid=1, prompt=[4, 5, 6], max_new_tokens=8))
+    with pytest.raises(RuntimeError, match="queued requests undrained"):
+        eng.run_until_drained(max_steps=2)
+    # the workload is fine, just longer than 2 steps: a real drain works
+    done = eng.run_until_drained()
+    assert {r.uid for r in done} == {0, 1}
+    # and an already-drained engine returns immediately, even max_steps=0
+    assert eng.run_until_drained(max_steps=0) is done
+
+
 # ---------------------------------------------------------------------- #
 # sampling
 # ---------------------------------------------------------------------- #
