@@ -25,6 +25,18 @@ ssd_decode_step            jnp             jnp             jnp (elementwise)
    contiguous cache reshapes to a block pool for free).
 .. [#f2] stateful continuation (``h0``) always takes the chunked-jnp path.
 
+Speculative verify steps (PR 6) add **no rows**: a ``(B, 1 + k)`` draft
+window is just another chunk width through ``attention_prefill_paged``
+and ``paged_cache_write``. Two properties of the existing rows make this
+sound in every mode:
+
+* chunk-causal masking is by *position* (``kpos <= qpos``), so K/V
+  written at positions ``>= pos + length`` — pad columns then, rejected
+  drafts now — are invisible to every real query of this and of any
+  later step until the positions are legitimately rewritten;
+* the scatter path is a plain last-writer-wins overwrite, so re-writing
+  a rejected draft's slot position next step needs no clearing pass.
+
 Tensor parallelism (serving mesh with a ``model`` axis active in the
 ambient :class:`repro.distributed.sharding.ShardingEnv` at trace time):
 

@@ -39,9 +39,16 @@ Flags:
                    high-priority); higher = more urgent. Default "0".
   --sched-aging S  anti-starvation: a queued request gains one priority
                    class per S seconds of wait (0 = off)
+  --spec-k K       speculative decoding: verify up to K n-gram draft
+                   tokens per slot per decode step (paged pure-KV
+                   families only). The output stream is bitwise the
+                   --spec-k 0 stream — drafts change step count, never
+                   tokens. 0 (default) = off.
+  --spec-ngram N   longest history suffix the proposer matches (default 3)
+  --no-spec        force speculative decoding off (overrides --spec-k)
 
-Per-request metrics (TTFT, queue wait, decode tok/s, prefix-hit tokens)
-print at the end.
+Per-request metrics (TTFT, queue wait, decode tok/s, prefix-hit tokens,
+speculative acceptance rate when --spec-k is on) print at the end.
 """
 
 from __future__ import annotations
@@ -88,6 +95,13 @@ def main(argv=None) -> int:
     ap.add_argument("--sched-aging", type=float, default=0.0,
                     help="seconds of queue wait per aged priority class "
                          "(0 = no aging)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="max speculative draft tokens per decode step "
+                         "(0 = off)")
+    ap.add_argument("--spec-ngram", type=int, default=3,
+                    help="longest n-gram the draft proposer matches")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="force speculative decoding off")
     kernel_modes = ["xla", "xla_chunked", "pallas", "pallas_interpret"]
     ap.add_argument("--kernels",
                     default=os.environ.get("REPRO_KERNELS") or None,
@@ -138,7 +152,13 @@ def main(argv=None) -> int:
                            prefix_cache=not args.no_prefix_cache,
                            kernels=args.kernels, tp=args.tp,
                            scheduler=args.scheduler,
-                           aging_s=args.sched_aging)
+                           aging_s=args.sched_aging,
+                           spec_k=0 if args.no_spec else args.spec_k,
+                           spec_ngram=args.spec_ngram)
+    if engine.spec is not None:
+        print(f"speculative: k={engine.spec.k} n-gram drafts "
+              f"(<= {engine.spec.max_ngram}-token suffix match)",
+              flush=True)
     if args.scheduler != "priority" or len(priorities) > 1 \
             or args.sched_aging:
         print(f"scheduler: {args.scheduler}, priority cycle {priorities}, "
@@ -186,6 +206,9 @@ def main(argv=None) -> int:
         if m.get("preemptions"):
             line += (f" | {m['preemptions']:.0f} preemptions, "
                      f"{m['requeues']:.0f} requeues")
+        if "spec_accept_rate" in m:
+            line += (f" | spec accept {m['spec_accept_rate'] * 100:.0f}% "
+                     f"({m['spec_accepted']:.0f}/{m['spec_proposed']:.0f})")
         print(line, flush=True)
     return 0
 

@@ -39,6 +39,12 @@ class CacheSpec:
     true only when the cache captures the full effect of the skipped tokens
     (pure KV). Recurrent/hybrid families must re-run every prompt token
     through the SSM even when their KV blocks could be shared.
+    ``spec_decode``: speculative multi-token decoding is *sound* — the
+    verify step writes K/V for draft tokens that may be rejected, and
+    rollback is pure position arithmetic only when state is positional
+    (pure KV, entries overwritten in place). Recurrent/hybrid state is an
+    accumulated recurrence: absorbing a rejected draft poisons ``h`` with
+    no way to rewind, so those families must decode one token at a time.
     ``tp_note``: how the family's state lays out on a tensor-parallel
     serving mesh, including the recorded reason whenever a leaf replicates
     instead of sharding (``repro.launch.serve_shardings`` applies the
@@ -47,6 +53,7 @@ class CacheSpec:
     kind: str
     paged: bool = False
     prefix_reuse: bool = False
+    spec_decode: bool = False
     tp_note: str = ""
 
 
@@ -62,7 +69,9 @@ class ModelApi:
     prefill: Callable | None = None
     cache_spec: CacheSpec = CacheSpec(kind="kv")
     # (tokens (B,C), state, pages (B,MB), pos (B,), length (B,))
-    #   -> (logits (B,1,V), state); C=1 doubles as the paged decode step
+    #   -> (logits (B,1,V), state); C=1 doubles as the paged decode step.
+    # kw last_only=False (spec_decode families) returns (B,C,V) chunk
+    # logits so one call verifies a whole speculative draft window
     prefill_paged: Callable | None = None
     # (batch, num_blocks, block_size, dtype) -> paged state pytree
     paged_state_init: Callable | None = None
@@ -111,7 +120,7 @@ def _lm_api(cfg: ModelConfig) -> ModelApi:
         prefill=lambda tokens, state, pos, length, **kw:
             transformer.prefill(cfg, tokens, state, pos, length, **kw),
         cache_spec=CacheSpec(
-            kind="kv", paged=True, prefix_reuse=True,
+            kind="kv", paged=True, prefix_reuse=True, spec_decode=True,
             tp_note="KV pools shard on the kv-head axis; GQA with "
                     "Hkv % tp != 0 replicates the pools (head slices "
                     "can't split evenly) while query heads stay sharded"),

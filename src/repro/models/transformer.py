@@ -590,11 +590,19 @@ def prefill(cfg: ModelConfig, tokens, cache: dict[str, Any],
 
 def prefill_paged(cfg: ModelConfig, tokens, cache: dict[str, Any],
                   pages: jax.Array, pos: jax.Array, length: jax.Array,
-                  positions=None):
+                  positions=None, last_only: bool = True):
     """Chunked prefill against the block-paged cache (see :func:`prefill`
     for chunk semantics). ``cache`` from :func:`init_paged_kv_cache`;
     ``pages`` (B, max_blocks) int32 per-row page tables. A C = 1 call is a
     paged decode step — the engine uses this one entry for both shapes.
+
+    ``last_only=False`` returns logits at *every* chunk position,
+    (B, C, V) instead of the gathered (B, 1, V): the chunk-causal mask
+    means position ``i``'s logits condition on exactly ``tokens[:, :i+1]``
+    plus the cache, which is what speculative verification needs — one
+    ``(B, 1 + k)`` decode-prefill call scores all ``k`` draft tokens for
+    free. The extra cost is skipping the gather (the ``C`` lm_head columns
+    were computed either way).
     """
     B, C = tokens.shape
     pos = jnp.asarray(pos, jnp.int32)
@@ -616,6 +624,7 @@ def prefill_paged(cfg: ModelConfig, tokens, cache: dict[str, Any],
     x, new_cache = nn.layer_stack_with_output(
         "layers", cfg.n_layers, block, x,
         xs={"k": cache["k"], "v": cache["v"]}, unroll=cfg.scan_unroll)
-    x = gather_last_valid(x, length)
+    if last_only:
+        x = gather_last_valid(x, length)
     x = norm(cfg, x, "ln_final")
     return lm_head(cfg, x), new_cache

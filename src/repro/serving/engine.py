@@ -66,6 +66,23 @@ Sampling: per-request temperature, top-k, top-p and PRNG seed (see
 :mod:`repro.serving.sampling`), fused into the jitted step;
 ``temperature=0`` (default) is greedy argmax.
 
+Speculative decoding (PR 6, ``spec_k > 0``): pure-decode steps widen
+into ``(B, 1 + spec_k)`` *verify* steps. A zero-parameter n-gram
+proposer (:mod:`repro.serving.speculative`) drafts tokens from each
+request's own history; the drafts ride the existing chunked prefill
+path with ``last_only=False``, whose chunk-causal logits verify every
+draft position in one call; the host accepts the longest prefix of
+drafts matching the per-position targets and emits them plus the
+first-divergence target. Acceptance is exact-match against the tokens
+the non-speculative engine would emit — greedy argmax, or the
+per-``(seed, len(generated))`` PRNG draw — so the output stream is
+**bitwise identical** to a ``spec_k=0`` run, always; drafts only change
+how many steps it takes. Rejected drafts cost nothing to undo: their
+K/V writes sit at positions ``>= pos`` that chunk-causal attention
+never reads and the next step overwrites (``CacheSpec.spec_decode``
+gates this on positional pure-KV state). Default ``spec_k=0`` — the
+engine is byte-for-byte the PR-5 engine unless asked.
+
 Per-request metrics on ``Request.metrics``: queue wait, time-to-first-
 token, decode tokens/s, prefill/decode step counts, prefix-hit tokens.
 Accessors are NaN-safe — reading ``ttft`` before the first token lands or
@@ -97,17 +114,28 @@ from repro.serving.scheduler import Scheduler
 @dataclasses.dataclass
 class RequestMetrics:
     submit_t: float = 0.0       # time.monotonic at submit()
-    admit_t: float = 0.0        # first scheduled into a slot
+    admit_t: float = 0.0        # latest admission into a slot
     first_token_t: float = 0.0  # first sampled token appended
     done_t: float = 0.0
     prefill_steps: int = 0
     decode_steps: int = 0
     prefix_hit_tokens: int = 0  # prompt tokens skipped via the prefix cache
     preemptions: int = 0        # times this request was evicted mid-flight
+    # sum of per-stint queue waits (submit->admit plus every re-admit gap),
+    # maintained by Scheduler.admit; NaN until first admitted
+    queued_s: float = float("nan")
+    spec_proposed: int = 0      # draft tokens this request verified
+    spec_accepted: int = 0      # ... of which matched the token stream
 
     @property
     def queue_wait(self) -> float:
-        """Submit -> admission; NaN until the request is admitted."""
+        """Total time spent queued, summed over stints — a preempted
+        request's time *running* between stints is service, not wait.
+        NaN until the request is admitted. Falls back to the single-stint
+        ``admit_t - submit_t`` when the stint accumulator never ran (e.g.
+        metrics objects populated by hand)."""
+        if not math.isnan(self.queued_s):
+            return self.queued_s
         if self.admit_t == 0.0 or self.submit_t == 0.0:
             return float("nan")
         return self.admit_t - self.submit_t
@@ -148,6 +176,9 @@ class Request:
     # filled by the engine
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # set by Scheduler.submit when the prompt was clipped to max_seq - 1:
+    # the response continues a truncated prompt, not the one submitted
+    truncated: bool = False
     metrics: RequestMetrics = dataclasses.field(default_factory=RequestMetrics)
 
 
@@ -160,7 +191,8 @@ class ServingEngine:
                  kernels: _ctx.KernelMode | None = None,
                  mesh=None, tp: int | None = None,
                  scheduler: str = "priority", aging_s: float = 0.0,
-                 preemption: bool = True):
+                 preemption: bool = True,
+                 spec_k: int = 0, spec_ngram: int = 3):
         self.api = api
         self.params = params
         # tensor parallelism: tp=N builds a (1, N) (data, model) host mesh
@@ -220,6 +252,22 @@ class ServingEngine:
             paged=self.paged, block_size=block_size, num_blocks=num_blocks,
             prefix_cache=prefix_cache and api.cache_spec.prefix_reuse,
             policy=scheduler, aging_s=aging_s, preemption=preemption)
+        # speculative decoding: spec_k > 0 turns pure-decode steps into
+        # (B, 1 + spec_k) verify steps over n-gram drafts. Sound only for
+        # positional pure-KV state (CacheSpec.spec_decode) on the paged
+        # path — rejecting here beats silently decoding a corrupt stream.
+        if spec_k:
+            if not (self.paged and api.cache_spec.spec_decode):
+                raise ValueError(
+                    f"spec_k={spec_k} needs a paged pure-KV cache: family "
+                    f"{api.cfg.family!r} has paged={self.paged}, "
+                    f"spec_decode={api.cache_spec.spec_decode} — "
+                    f"speculative rollback cannot rewind recurrent state")
+            from repro.serving.speculative import NgramProposer
+            self.spec = NgramProposer(k=int(spec_k),
+                                      max_ngram=int(spec_ngram))
+        else:
+            self.spec = None
         if self.paged:
             with self._env_scope():
                 self.state = api.paged_state_init(
@@ -227,6 +275,9 @@ class ServingEngine:
                     self.scheduler.block_size, cache_dtype)
             # 8 replicated metadata args: pages, pos, length + 5 sampling
             self._step = self._jit_step(self._step_paged_fn, n_meta=8)
+            if self.spec is not None:
+                self._step_spec = self._jit_step(self._step_spec_fn,
+                                                 n_meta=8)
         else:
             # dense fallback: one (max_seq + chunk)-deep region per slot.
             # chunk-1 headroom: a C-wide cache write starting at pos <=
@@ -363,6 +414,29 @@ class ServingEngine:
                                           seeds, counts, do_sample)
         return next_tok, new_state
 
+    def _step_spec_fn(self, params, tokens, state, pages, pos, length,
+                      temps, top_k, top_p, seeds, cnt0, *, do_sample):
+        """Speculative verify step: the same chunked paged prefill, but
+        keeping the FULL (B, C, V) chunk-causal logits (``last_only=
+        False``) and turning every position into a target token — the
+        token non-speculative decoding would emit at that stream index
+        (position i of row b draws with PRNG coordinate ``cnt0[b] + i``).
+        The host compares drafts against targets and accepts the longest
+        matching prefix; pad positions compute garbage targets nobody
+        reads."""
+        with self._kernel_scope():
+            logits, new_state = nn.apply(
+                lambda t, s, g, p, l: self.api.prefill_paged(
+                    t, s, g, p, l, last_only=False),
+                params, tokens, state, pages, pos, length)
+        logits = logits.astype(jnp.float32)
+        if do_sample:
+            targets = sampling.sample_chunk(logits, temps, top_k, top_p,
+                                            seeds, cnt0)
+        else:
+            targets = sampling.greedy_chunk(logits)
+        return targets, new_state
+
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
         """Enqueue a request (may raise when it can never fit the pool —
@@ -396,6 +470,11 @@ class ServingEngine:
             return 0
         prefilling = any(len(sched.pending_prompt[s]) > 1
                          for s in active_slots)
+        if self.spec is not None and not prefilling:
+            # no slot is mid-prompt: run the (B, 1 + spec_k) verify step
+            # instead of a (B, 1) decode step. Prefill steps stay on the
+            # plain path — bitwise identical to the non-speculative engine.
+            return self._step_speculative(active_slots)
         C = self.chunk if prefilling else 1
         B = self.B
         tokens = np.zeros((B, C), np.int32)
@@ -453,6 +532,114 @@ class ServingEngine:
             if not emits[s]:
                 continue  # still absorbing prompt
             req.generated.append(int(next_tok[s]))
+            if req.metrics.first_token_t == 0.0:
+                req.metrics.first_token_t = now
+            hit_eos = (req.eos_id is not None
+                       and req.generated[-1] == req.eos_id)
+            if (len(req.generated) >= req.max_new_tokens or hit_eos
+                    or sched.pos[s] >= self.max_seq - 1):
+                req.done = True
+                req.metrics.done_t = now
+                self.completed.append(req)
+                sched.finish(s)
+        return sum(1 for r in sched.active if r is not None)
+
+    def _step_speculative(self, active_slots: list[int]) -> int:
+        """One (B, 1 + spec_k) speculative verify step over pure-decode
+        slots.
+
+        Per decoding slot the n-gram proposer drafts up to ``k_s`` tokens
+        from the request's own ``prompt + generated`` history, where
+        ``k_s = min(spec_k, remaining - 1, max_seq - 2 - pos)`` caps the
+        window so acceptance can never overshoot the request's token
+        budget or the ``max_seq`` finish boundary (the emitted stream
+        truncates at exactly the same length a token-at-a-time run
+        would). The step feeds ``[t0, d_1 .. d_k]`` as a chunk — the KV
+        writes land at ``pos .. pos + k``, the chunk-causal kernels give
+        verification logits for every position in ONE call — and the
+        host accepts the longest prefix of drafts matching the
+        per-position targets, then emits the accepted drafts plus the
+        first-divergence target (the "bonus" token the verify logits
+        already paid for). ``pos`` advances by the number of emitted
+        tokens; the rejected tail needs no cleanup because positions
+        ``>= pos`` are invisible to chunk-causal attention and the next
+        step overwrites them.
+
+        A slot holding exactly one pending prompt token rides the step
+        draft-free (its target at position 0 IS its first sampled token);
+        idle rows write into the garbage block as always.
+        """
+        sched = self.scheduler
+        C = 1 + self.spec.k
+        B = self.B
+        tokens = np.zeros((B, C), np.int32)
+        length = np.ones(B, np.int32)
+        temps = np.zeros(B, np.float32)
+        top_k = np.zeros(B, np.int32)
+        top_p = np.ones(B, np.float32)
+        seeds = np.zeros(B, np.int32)
+        cnt0 = np.zeros(B, np.int32)
+        drafts: dict[int, list[int]] = {}
+        prompt_done = []
+        for s in active_slots:
+            req = sched.active[s]
+            pend = sched.pending_prompt[s]
+            if pend:   # single leftover prompt token: absorb, no drafts
+                tokens[s, 0] = pend.popleft()
+                drafts[s] = []
+                prompt_done.append(s)
+                req.metrics.prefill_steps += 1
+            else:
+                g = len(req.generated)
+                cap = min(self.spec.k, req.max_new_tokens - g - 1,
+                          self.max_seq - 2 - int(sched.pos[s]))
+                d = (self.spec.propose(
+                        req.prompt[: self.max_seq - 1] + req.generated, cap)
+                     if cap > 0 else [])
+                drafts[s] = d
+                tokens[s, 0] = (req.generated[-1] if req.generated
+                                else (req.prompt[-1] if req.prompt else 0))
+                for i, tok in enumerate(d):
+                    tokens[s, 1 + i] = tok
+                length[s] = 1 + len(d)
+                req.metrics.decode_steps += 1
+            temps[s] = req.temperature
+            top_k[s] = req.top_k
+            top_p[s] = req.top_p
+            seeds[s] = (req.seed if req.seed is not None
+                        else req.uid) & 0x7FFFFFFF
+            # PRNG coordinate base: position i of this row draws with
+            # count = len(generated) + i, exactly the coordinates a
+            # token-at-a-time run would use for those stream indices
+            cnt0[s] = len(req.generated)
+        do_sample = any(temps[s] > 0.0 for s in active_slots)
+        targets, self.state = self._step_spec(
+            self.params, jnp.asarray(tokens), self.state,
+            jnp.asarray(sched.pages), jnp.asarray(sched.pos),
+            jnp.asarray(length), jnp.asarray(temps), jnp.asarray(top_k),
+            jnp.asarray(top_p), jnp.asarray(seeds), jnp.asarray(cnt0),
+            do_sample=do_sample)
+        targets = np.asarray(targets)
+        now = time.monotonic()
+        for s in prompt_done:
+            sched.register_prompt_blocks(s)
+        for s in active_slots:
+            req = sched.active[s]
+            d = drafts[s]
+            t = targets[s]
+            a = 0
+            while a < len(d) and d[a] == int(t[a]):
+                a += 1
+            # accepted drafts + the target at the first divergence (when
+            # every draft matched, that's the position-after-the-last one)
+            emitted = d[:a] + [int(t[a])]
+            if req.eos_id is not None and req.eos_id in emitted:
+                emitted = emitted[: emitted.index(req.eos_id) + 1]
+            req.generated.extend(emitted)
+            kept = len(emitted) - 1
+            sched.commit_spec(s, len(d), kept)   # pos += len(emitted)
+            req.metrics.spec_proposed += len(d)
+            req.metrics.spec_accepted += kept
             if req.metrics.first_token_t == 0.0:
                 req.metrics.first_token_t = now
             hit_eos = (req.eos_id is not None

@@ -3,7 +3,11 @@
 One fused (B, V) -> (B,) op: temperature scaling, top-k and top-p (nucleus)
 filtering, and a categorical draw — all per row, so one batched call serves
 requests with heterogeneous sampling settings. Runs inside the engine's
-jitted step.
+jitted step. :func:`sample_chunk` is the (B, C, V) extension used by
+speculative verification: position ``i`` of row ``b`` draws with the PRNG
+coordinate ``(seed[b], count0[b] + i)``, so the per-position targets are
+exactly the tokens non-speculative decoding would have drawn one step at a
+time.
 
 Determinism: the key for row b is ``fold_in(key(seed[b]), count[b])`` where
 ``count`` is the request's generated-token index. A request therefore samples
@@ -22,15 +26,25 @@ def sample(logits: jax.Array, temperature: jax.Array, top_k: jax.Array,
     """Sample one token per row.
 
     logits (B, V); temperature (B,) — ``0`` selects greedy argmax;
-    top_k (B,) int32 — ``<= 0`` disables; top_p (B,) — ``<= 0`` or ``>= 1``
-    disables; seed / count (B,) int32 per-request PRNG coordinates.
-    Returns (B,) int32 token ids.
+    top_k (B,) int32 — ``<= 0`` disables; top_p (B,) — ``>= 1`` disables
+    (the canonical off value the serve CLI documents), and ``<= 0`` is
+    treated identically — never as "keep nothing"; seed / count (B,) int32
+    per-request PRNG coordinates. Returns (B,) int32 token ids.
+
+    A ``temperature = 0`` row inside a sampled batch is *bitwise* the
+    greedy argmax an all-greedy batch computes: scaling is applied only to
+    rows with ``temp > 0`` (no ``logits / 1e-6`` blow-up feeding inf/nan
+    through the sort pipeline), and the final select reads the untouched
+    argmax.
     """
     logits = logits.astype(jnp.float32)
     B, V = logits.shape
     greedy = jnp.argmax(logits, axis=-1)
 
-    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    # scale only rows that actually sample: greedy rows divide by 1 so the
+    # filter pipeline sees finite values (their output is discarded anyway)
+    temp = jnp.where(temperature > 0.0, temperature, 1.0)
+    scaled = logits / temp[:, None]
 
     # one descending sort serves both filters; everything below is O(V)
     k = jnp.where(top_k <= 0, V, jnp.minimum(top_k, V))   # <= 0 disables
@@ -55,3 +69,36 @@ def sample(logits: jax.Array, temperature: jax.Array, top_k: jax.Array,
     sampled = jax.vmap(draw)(seed.astype(jnp.uint32),
                              count.astype(jnp.uint32), scaled)
     return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)
+
+
+def sample_chunk(logits: jax.Array, temperature: jax.Array,
+                 top_k: jax.Array, top_p: jax.Array, seed: jax.Array,
+                 count0: jax.Array) -> jax.Array:
+    """Per-position targets over a chunk: (B, C, V) -> (B, C) int32.
+
+    Row ``b``, position ``i`` is sampled exactly as :func:`sample` would
+    sample it with ``count = count0[b] + i`` — the flattened (B*C, V) call
+    IS :func:`sample`, so a C = 1 chunk is bitwise the single-token path
+    and every position of a wider chunk reproduces the token the
+    non-speculative engine would have drawn at that stream index. The
+    speculative verify step compares drafts against these targets;
+    positions whose coordinate is meaningless for a row (pad columns,
+    prefill positions before the row's emit point) compute garbage targets
+    that the engine never reads.
+    """
+    B, C, V = logits.shape
+
+    def rep(a):
+        return jnp.repeat(a, C)
+
+    counts = (count0[:, None]
+              + jnp.arange(C, dtype=count0.dtype)[None, :]).reshape(-1)
+    flat = sample(logits.reshape(B * C, V), rep(temperature), rep(top_k),
+                  rep(top_p), rep(seed), counts)
+    return flat.reshape(B, C)
+
+
+def greedy_chunk(logits: jax.Array) -> jax.Array:
+    """All-greedy per-position targets: (B, C, V) -> (B, C) argmax (the
+    sampled pipeline skipped entirely, as in the single-token step)."""
+    return jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)

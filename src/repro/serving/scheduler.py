@@ -21,12 +21,17 @@ Anti-starvation aging: with ``aging_s > 0``, a queued request's
 *effective* priority grows by one class per ``aging_s`` seconds of queue
 wait, so a bulk request can only be starved for a bounded time by a
 steady interactive stream. ``aging_s = 0`` (default) disables aging.
-Aging never reorders requests within a class — equal static priorities
-age at the same rate from monotone submit times, preserving FIFO. Aging
-affects **admission order only**: preemption eligibility always compares
-*static* classes, so an aged bulk request gains precedence for the next
-free slot but never the right to evict running work of its own class —
-and a long-running active cannot age itself un-preemptible.
+Wait is measured from the **current stint's** enqueue time — submit, or
+requeue after a preemption — never from ``submit_t``: time spent
+*running* between stints is not starvation, and counting it would let a
+preempted bulk request carry an inflated aged class back into the queue.
+Within a class, never-preempted requests age from monotone submit times
+and keep exact FIFO; a requeued victim restarts its aging clock (its
+FIFO *ticket* is still the original). Aging affects **admission order
+only**: preemption eligibility always compares *static* classes, so an
+aged bulk request gains precedence for the next free slot but never the
+right to evict running work of its own class — and a long-running
+active cannot age itself un-preemptible.
 
 Admission is head-of-line blocking in queue order: if the best-ranked
 request cannot be placed (even after eviction and preemption), nothing
@@ -90,7 +95,9 @@ dropped whenever a request leaves the queue for any reason).
 
 from __future__ import annotations
 
+import math
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
@@ -110,16 +117,20 @@ POLICIES = ("priority", "fifo")
 class _Entry:
     """One queued request plus its scheduling state.
 
-    ``prompt`` is the *effective* prompt — the (truncated) original at
-    first submit, ``original + generated`` after a preemption — so
-    placement and prefill never need to know whether this is a resume.
-    ``seq`` is the submit ticket used for FIFO tie-breaks; a preempted
-    request keeps its original ticket and so resumes at its old FIFO
-    position within its class.
+    ``prompt`` is the *effective* prompt — the original at first submit,
+    ``original + generated`` after a preemption — so placement and
+    prefill never need to know whether this is a resume. ``seq`` is the
+    submit ticket used for FIFO tie-breaks; a preempted request keeps its
+    original ticket and so resumes at its old FIFO position within its
+    class. ``enq_t`` is when THIS queue stint began (submit, or requeue
+    after a preemption): aging and queue-wait accounting read it, never
+    ``metrics.submit_t`` — a victim's *running* time is not queue wait
+    and must not inflate its aged class.
     """
     req: "Request"
     seq: int
     prompt: list[int]
+    enq_t: float = field(default=0.0)
     resumed: bool = field(default=False)
 
 
@@ -163,6 +174,8 @@ class Scheduler:
             deque() for _ in range(max_batch)]
         self.preemptions = 0              # victims evicted mid-flight
         self.requeues = 0                 # preempted requests re-admitted
+        self.spec_proposed = 0            # speculative draft tokens verified
+        self.spec_accepted = 0            # ... of which matched the stream
         self._placing: list[int] = []     # slots filled by the live admit
 
         if paged:
@@ -199,23 +212,28 @@ class Scheduler:
         self._sort(time.monotonic())
         return [e.req for e in self._queue]
 
-    def effective_priority(self, req: "Request", now: float) -> int:
-        """Static class + aging boost (one class per ``aging_s`` waited)."""
+    def effective_priority(self, entry: _Entry, now: float) -> int:
+        """Static class + aging boost (one class per ``aging_s`` of the
+        current queue stint — measured from ``entry.enq_t``, so a
+        preempted request's time spent running never counts as wait)."""
         if self.policy == "fifo":
             return 0
         boost = 0
         if self.aging_s > 0:
-            boost = int(max(0.0, now - req.metrics.submit_t) / self.aging_s)
-        return req.priority + boost
+            boost = int(max(0.0, now - entry.enq_t) / self.aging_s)
+        return entry.req.priority + boost
 
     def _sort(self, now: float) -> None:
         self._queue.sort(
-            key=lambda e: (-self.effective_priority(e.req, now), e.seq))
+            key=lambda e: (-self.effective_priority(e, now), e.seq))
 
     def submit(self, req: "Request", now: float | None = None) -> None:
         """Validate, memoize prefix keys, and enqueue. Raises when the
         request can never fit the pool (a mid-scheduling failure would
-        wedge the head-of-line queue forever)."""
+        wedge the head-of-line queue forever). An over-long prompt is
+        truncated to ``max_seq - 1`` tokens — loudly: a warning fires and
+        ``req.truncated`` is set so callers can tell the response
+        continues a clipped prompt, not the one they sent."""
         now = time.monotonic() if now is None else now
         if req.uid in self._ticket:
             # the ticket and prompt-key memos key on uid: a duplicate
@@ -225,6 +243,13 @@ class Scheduler:
                 f"request uid {req.uid} is already in flight — uids must "
                 f"be unique among queued/active requests")
         prompt = req.prompt[: self.max_seq - 1]
+        if len(prompt) < len(req.prompt):
+            req.truncated = True
+            warnings.warn(
+                f"request {req.uid}: prompt of {len(req.prompt)} tokens "
+                f"truncated to {len(prompt)} (max_seq={self.max_seq} "
+                f"keeps one position for generation)",
+                RuntimeWarning, stacklevel=2)
         if self.paged:
             need = self._entry_blocks(prompt, req)
             if need > self.num_blocks - 1:
@@ -234,7 +259,7 @@ class Scheduler:
                     f"lower max_seq/max_new_tokens")
         req.metrics.submit_t = now
         self._ticket[req.uid] = self._seq
-        self._enqueue(_Entry(req, self._seq, prompt))
+        self._enqueue(_Entry(req, self._seq, prompt, enq_t=now))
         self._seq += 1
 
     def _enqueue(self, entry: _Entry) -> None:
@@ -319,6 +344,17 @@ class Scheduler:
     # ------------------------------------------------------------------ #
     # preemption
     # ------------------------------------------------------------------ #
+    def _resumable(self, req: "Request") -> bool:
+        """Whether preempting ``req`` loses nothing: its resume prompt
+        ``prompt + generated`` must fit in ``max_seq - 1`` positions.
+        Past that boundary the old requeue path silently sliced off the
+        request's most recent *generated* tokens — the resumed request
+        would re-decode from a truncated history and emit a stream that
+        never matches an unpreempted run. Such requests are close to the
+        ``pos >= max_seq - 1`` finish anyway: finish-over-evict."""
+        return (len(req.prompt[: self.max_seq - 1]) + len(req.generated)
+                <= self.max_seq - 1)
+
     def _victims(self, pri: int) -> list[int]:
         """Active slots preemptible for a candidate of STATIC priority
         class ``pri``: strictly lower class, cheapest first (lowest
@@ -328,10 +364,13 @@ class Scheduler:
         its own class — and an old active must not age itself into
         un-preemptibility either. Slots placed in the CURRENT admit pass
         are off-limits: admitting an aged request and evicting it before
-        it runs a single step would be pure churn."""
+        it runs a single step would be pure churn. Slots whose resume
+        prompt would no longer fit (:meth:`_resumable`) are off-limits
+        too — evicting them would corrupt their token stream, and they
+        are about to free their blocks by finishing anyway."""
         cand = [s for s, r in enumerate(self.active)
                 if r is not None and r.priority < pri
-                and s not in self._placing]
+                and s not in self._placing and self._resumable(r)]
         cand.sort(key=lambda s: (self.active[s].priority,
                                  -self.active[s].metrics.admit_t))
         return cand
@@ -348,15 +387,25 @@ class Scheduler:
         req = self.active[slot]
         if req is None:
             raise ValueError(f"slot {slot} is idle — nothing to preempt")
+        if not self._resumable(req):
+            # the resume prompt would have to drop trailing GENERATED
+            # tokens to fit max_seq - 1 — the resumed stream would diverge
+            # from an unpreempted run. _victims() never offers such slots;
+            # a direct caller gets the loud version of the same rule.
+            raise ValueError(
+                f"slot {slot} (request {req.uid}) is not preemptible: "
+                f"prompt + {len(req.generated)} generated tokens exceed "
+                f"max_seq - 1 = {self.max_seq - 1}; resuming would drop "
+                f"generated tokens. Let it finish instead")
         self._clear_slot(slot)
-        resume = (req.prompt[: self.max_seq - 1]
-                  + req.generated)[: self.max_seq - 1]
+        resume = req.prompt[: self.max_seq - 1] + req.generated
         req.metrics.preemptions += 1
         self.preemptions += 1
         # the original ticket: the victim resumes at its old FIFO
-        # position within its class, ahead of later arrivals
+        # position within its class, ahead of later arrivals. Fresh
+        # enq_t: aging and queue-wait meter this stint only.
         self._enqueue(_Entry(req, self._ticket[req.uid], resume,
-                             resumed=True))
+                             enq_t=now, resumed=True))
         return req
 
     def _reclaimable(self, pri: int) -> int:
@@ -437,7 +486,13 @@ class Scheduler:
             else:
                 self._place_dense(slot, entry)
             self._dequeue(entry)
-            entry.req.metrics.admit_t = now
+            m = entry.req.metrics
+            m.admit_t = now
+            # queue wait is the SUM of stints: submit->first admit plus
+            # every preempt->re-admit gap (time running in between is
+            # service, not wait). NaN means "never admitted yet".
+            wait = max(0.0, now - entry.enq_t)
+            m.queued_s = wait if math.isnan(m.queued_s) else m.queued_s + wait
             if entry.resumed:
                 self.requeues += 1
             fresh.append(slot)
@@ -446,6 +501,19 @@ class Scheduler:
     def advance(self, slot: int, n: int) -> None:
         """The jitted step absorbed ``n`` tokens for this slot."""
         self.pos[slot] += n
+
+    def commit_spec(self, slot: int, proposed: int, accepted: int) -> None:
+        """A speculative verify step resolved for this slot: ``proposed``
+        draft tokens went in, the longest stream-matching prefix of
+        ``accepted`` of them survived, and the verify logits contributed
+        one ordinary token on top. ``pos`` advances by ``1 + accepted`` —
+        rolling back the rejected tail IS this arithmetic: the rejected
+        drafts' K/V entries sit at positions ``>= pos`` where the
+        chunk-causal kernels never look, and the next write at ``pos``
+        overwrites them."""
+        self.pos[slot] += 1 + accepted
+        self.spec_proposed += proposed
+        self.spec_accepted += accepted
 
     def register_prompt_blocks(self, slot: int) -> None:
         """Prompt fully absorbed: publish its full, exclusively-written
@@ -490,4 +558,8 @@ class Scheduler:
                "requeues": float(self.requeues)}
         if self.paged:
             out["free_blocks"] = float(self.alloc.free_blocks)
+        if self.spec_proposed:
+            out["spec_proposed"] = float(self.spec_proposed)
+            out["spec_accepted"] = float(self.spec_accepted)
+            out["spec_accept_rate"] = self.spec_accepted / self.spec_proposed
         return out

@@ -1,0 +1,92 @@
+"""Zero-parameter n-gram draft proposer for speculative decoding.
+
+Speculative decoding splits a decode step into *propose* (cheap guesses
+for the next ``k`` tokens) and *verify* (one model call over all ``k``
+drafts at once). The proposer here is the cheapest one that works: it
+guesses that the stream will repeat itself. For each decoding slot it
+matches the longest recent suffix of ``prompt + generated`` against an
+earlier occurrence in the same request's history and proposes the tokens
+that followed that occurrence — no draft model, no extra parameters, no
+device work. On repetitive or structured outputs (code, JSON, quoted
+context, the short cycles tiny greedy models fall into) acceptance rates
+are high enough to multiply decode throughput; on incompressible text it
+degrades to proposing nothing, which costs one O(history) host-side scan
+and nothing on device.
+
+Correctness never depends on the proposer: every draft is verified by the
+engine's chunk-causal ``(B, 1 + k)`` decode-prefill, and only the longest
+prefix of drafts that *exactly matches* what non-speculative decoding
+would have emitted (greedy argmax, or the per-``(seed, len(generated))``
+PRNG draw) is accepted. A bad proposal wastes a little compute; it can
+never change the token stream.
+
+The proposer is a plain function over a token list, deliberately
+stateless: the engine's per-request history IS the state, so preemption /
+requeue-as-prefill (which rebuilds ``prompt + generated``) needs no extra
+bookkeeping here.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+def propose_ngram(history: list[int], k: int, *, max_ngram: int = 3,
+                  min_ngram: int = 1) -> list[int]:
+    """Propose up to ``k`` draft tokens continuing ``history``.
+
+    Matches the longest suffix n-gram (``max_ngram`` down to
+    ``min_ngram`` tokens) of ``history`` against an earlier occurrence
+    and returns the tokens that followed it, capped at ``k``. Longer
+    n-grams are tried first (more context, higher acceptance); among
+    matches, the most recent occurrence with a FULL ``k``-token
+    continuation wins — recency makes local repetition beat stale
+    repetition, but a match flush against the end of history proposes
+    almost nothing (inside a constant run the nearest match yields a
+    1-token continuation; the full-window match a few positions left
+    yields ``k``). When no match has ``k`` tokens of continuation the
+    longest one found is returned. Returns ``[]`` when nothing matches —
+    the engine then falls back to a plain one-token decode step for
+    that slot.
+    """
+    if k <= 0:
+        return []
+    L = len(history)
+    best: list[int] = []
+    for n in range(min(max_ngram, L - 1), min_ngram - 1, -1):
+        pattern = history[L - n:]
+        # scan candidate start positions right-to-left: the match must end
+        # strictly before the suffix itself so the continuation is real
+        for i in range(L - n - 1, -1, -1):
+            if history[i:i + n] == pattern:
+                cont = history[i + n:i + n + k]
+                if len(cont) == k:
+                    return cont
+                if len(cont) > len(best):
+                    best = cont
+    return best
+
+
+@dataclass
+class NgramProposer:
+    """Configured proposer handle the engine holds: ``k`` drafts per slot
+    from (``min_ngram`` .. ``max_ngram``)-token suffix matches. ``k`` is
+    the *ceiling* — the engine further caps per-slot drafts by the chunk
+    width, the request's remaining token budget and the ``max_seq``
+    boundary so acceptance can never overrun either."""
+    k: int = 4
+    max_ngram: int = 3
+    min_ngram: int = 1
+
+    def __post_init__(self):
+        if self.k < 0:
+            raise ValueError(f"spec k must be >= 0, got {self.k}")
+        if not 1 <= self.min_ngram <= self.max_ngram:
+            raise ValueError(
+                f"need 1 <= min_ngram <= max_ngram, got "
+                f"{self.min_ngram}..{self.max_ngram}")
+
+    def propose(self, history: list[int], k: int | None = None) -> list[int]:
+        k = self.k if k is None else min(k, self.k)
+        return propose_ngram(history, k, max_ngram=self.max_ngram,
+                             min_ngram=self.min_ngram)

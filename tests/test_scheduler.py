@@ -439,3 +439,113 @@ def test_engine_preemption_under_pool_pressure_end_to_end():
     assert all(hi.metrics.ttft < r.metrics.ttft for r in bulk_unstarted)
     assert eng.alloc.free_blocks == eng.num_blocks - 1
     assert eng.alloc.check_conservation()
+
+
+# ---------------------------------------------------------------------- #
+# finish-over-evict, per-stint wait accounting, submit truncation (PR 6)
+# ---------------------------------------------------------------------- #
+
+def test_preempt_refused_near_max_seq_boundary():
+    """Regression: a victim whose resume prompt (prompt + generated) no
+    longer fits ``max_seq - 1`` used to be silently sliced on requeue,
+    dropping its newest GENERATED tokens — the resumed stream diverged
+    from an unpreempted run. Such slots must be refused by ``preempt()``
+    and never offered as victims; they are about to finish anyway."""
+    sched = make_sched(max_batch=1, max_seq=16, num_blocks=8,
+                       prefix_cache=False)
+    bulk = Request(uid=0, prompt=[1] * 12, max_new_tokens=8)
+    sched.submit(bulk, now=0.0)
+    host_step(sched, 1.0)               # absorb chunk 1 of the prompt
+    host_step(sched, 2.0)               # finish prompt, emit 1st token
+    assert sched.active[0] is bulk
+    # emulate a multi-token verify step landing the slot right at the
+    # finish boundary: 12 prompt + 4 generated = 16 > max_seq - 1 = 15
+    bulk.generated.extend([0, 0, 0])
+    assert not sched._resumable(bulk)
+    with pytest.raises(ValueError, match="not preemptible"):
+        sched.preempt(0, now=3.0)
+    assert sched.active[0] is bulk and sched.preemptions == 0
+    # pool-pressure admission must route around it too: hi outranks bulk
+    # but the only victim is non-resumable -> nobody is evicted
+    assert sched._victims(5) == []
+    hi = Request(uid=1, prompt=[50] * 8, max_new_tokens=4, priority=5)
+    sched.submit(hi, now=4.0)
+    sched.admit(5.0)
+    assert sched.active[0] is bulk and sched.preemptions == 0
+    # the boundary itself is still preemptible: one token less fits
+    bulk.generated.pop()
+    assert sched._resumable(bulk)
+    assert sched._victims(5) == [0]
+
+
+def test_preempt_at_exact_boundary_keeps_full_stream():
+    """prompt + generated == max_seq - 1 exactly: still resumable, and
+    the resume prompt keeps every generated token (the old requeue path
+    applied an outer ``[:max_seq - 1]`` slice that this state tickles)."""
+    sched = make_sched(max_batch=1, max_seq=16, num_blocks=8,
+                       prefix_cache=False)
+    bulk = Request(uid=0, prompt=[1] * 12, max_new_tokens=8)
+    sched.submit(bulk, now=0.0)
+    host_step(sched, 1.0)
+    host_step(sched, 2.0)
+    bulk.generated.extend([7, 8])       # 12 + 3 = 15 == max_seq - 1
+    sched.preempt(0, now=3.0)
+    assert sched._queue[0].prompt == bulk.prompt + bulk.generated
+    assert len(sched._queue[0].prompt) == sched.max_seq - 1
+
+
+def test_queue_wait_sums_stints_not_wall_clock():
+    """A preempted request's time RUNNING between stints is service, not
+    wait: queue_wait must be the sum of per-stint waits, not last-admit
+    minus first-submit."""
+    sched = make_sched(max_batch=1, num_blocks=16, prefix_cache=False)
+    bulk = Request(uid=0, prompt=[1] * 12, max_new_tokens=8)
+    sched.submit(bulk, now=0.0)
+    sched.admit(2.0)                    # stint 1 wait: 2s
+    host_step(sched, 3.0)
+    host_step(sched, 4.0)               # running 2..100 is service time
+    sched.preempt(0, now=100.0)
+    sched.admit(110.0)                  # stint 2 wait: 10s
+    assert sched.active[0] is bulk
+    assert bulk.metrics.queue_wait == pytest.approx(12.0)
+    assert bulk.metrics.queued_s == pytest.approx(12.0)
+
+
+def test_aging_meters_current_stint_only():
+    """Regression: aging used to boost a requeued victim by its ORIGINAL
+    submit time, so a fresh preemptee instantly outranked every class
+    above it and thrashed the slot it was just evicted from. The clock
+    must reset on requeue: a higher-class arrival beats a victim that
+    has waited only seconds in its current stint."""
+    sched = make_sched(max_batch=1, num_blocks=16, prefix_cache=False,
+                       aging_s=10.0)
+    bulk = Request(uid=0, prompt=[1] * 12, max_new_tokens=8)
+    sched.submit(bulk, now=0.0)
+    host_step(sched, 1.0)
+    host_step(sched, 2.0)
+    sched.preempt(0, now=100.0)         # requeued with enq_t=100
+    mid = Request(uid=1, prompt=[50] * 8, max_new_tokens=4, priority=1)
+    sched.submit(mid, now=100.0)
+    # at now=105 the victim's CURRENT stint is 5s = 0 aged classes; under
+    # the old accounting it had "waited" 105s = +10 classes and would win
+    sched.admit(105.0)
+    assert sched.active[0] is mid
+    e = next(e for e in sched._queue if e.req is bulk)
+    assert e.enq_t == 100.0
+    host_drain(sched, now=106.0)
+    assert bulk.done and mid.done
+
+
+def test_submit_truncation_warns_and_marks_request():
+    sched = make_sched(max_batch=1, max_seq=16)
+    long_req = Request(uid=0, prompt=[1] * 40, max_new_tokens=4)
+    with pytest.warns(RuntimeWarning, match=r"40 tokens truncated to 15"):
+        sched.submit(long_req, now=0.0)
+    assert long_req.truncated
+    assert len(sched._queue[0].prompt) == 15
+    import warnings as _warnings
+    short = Request(uid=1, prompt=[2] * 8, max_new_tokens=4)
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")     # any warning -> test failure
+        sched.submit(short, now=1.0)
+    assert not short.truncated

@@ -1,7 +1,8 @@
 """Property tests for the scheduler: random submit / preempt / resume /
-complete interleavings against the real :class:`~repro.serving.scheduler.
-Scheduler` (host-side only — no jitted step involved), checking the
-invariants the serving engine's correctness rests on:
+speculative-commit / complete interleavings against the real
+:class:`~repro.serving.scheduler.Scheduler` (host-side only — no jitted
+step involved), checking the invariants the serving engine's correctness
+rests on:
 
 * zero leaked references, always: every live block's refcount equals the
   number of slot page tables holding it plus one if the prefix map pins
@@ -85,9 +86,21 @@ def drive(seed: int, num_blocks: int, max_batch: int = 3,
                 if pend:
                     continue
                 sched.register_prompt_blocks(s)
+                req.generated.append(rng.randrange(50))
             else:
-                sched.advance(s, 1)
-            req.generated.append(rng.randrange(50))
+                # decode — about half the steps resolve as a speculative
+                # verify window (engine cap arithmetic, random accepted
+                # prefix) instead of a single token: accept/reject
+                # bookkeeping is pure pos arithmetic and must be
+                # invisible to every block/refcount invariant
+                cap = min(3, req.max_new_tokens - len(req.generated) - 1,
+                          sched.max_seq - 2 - int(sched.pos[s]))
+                k = rng.randrange(0, cap + 1) \
+                    if cap > 0 and rng.random() < 0.5 else 0
+                kept = rng.randrange(0, k + 1)
+                sched.commit_spec(s, k, kept)
+                req.generated.extend(
+                    rng.randrange(50) for _ in range(1 + kept))
             if (len(req.generated) >= req.max_new_tokens
                     or sched.pos[s] >= sched.max_seq - 1):
                 req.done = True

@@ -1,0 +1,266 @@
+"""Speculative decoding: n-gram proposer units, and engine-level
+stream identity — the accepted path must be BITWISE the non-speculative
+stream, greedy and sampled, across kernel modes and tensor-parallel
+widths (the CI pallas-interpret and tp legs re-run this file under
+``REPRO_KERNELS=pallas_interpret`` / ``REPRO_HOST_DEVICES=8``).
+
+Speculation may only ever change how many steps a generation takes;
+these tests pin the contract that it never changes a single token.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as nn
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.speculative import NgramProposer, propose_ngram
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  head_dim=16, remat="none")
+SSM_CFG = ModelConfig(name="ssm", family="ssm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                      head_dim=16, ssm_state=16, ssm_head_dim=32,
+                      ssm_chunk=4, remat="none")
+
+_PARAMS_CACHE: dict[str, dict] = {}
+
+
+def init_params(cfg=CFG):
+    if cfg.name not in _PARAMS_CACHE:
+        api = get_model(cfg)
+        _PARAMS_CACHE[cfg.name] = nn.init(
+            lambda t: api.forward(t), jax.random.key(0),
+            jnp.zeros((1, 8), jnp.int32))
+    return _PARAMS_CACHE[cfg.name]
+
+
+def make_engine(cfg=CFG, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("chunk", 8)
+    return ServingEngine(get_model(cfg), init_params(cfg), **kw)
+
+
+def _needs_devices(n: int) -> None:
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} host devices, have {len(jax.devices())} — "
+                    "set XLA_FLAGS=--xla_force_host_platform_device_count")
+
+
+def drain_streams(reqs, **engine_kw):
+    eng = make_engine(**engine_kw)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    return {r.uid: list(r.generated) for r in done}, eng
+
+
+# ---------------------------------------------------------------------- #
+# proposer units (pure host-side)
+# ---------------------------------------------------------------------- #
+
+def test_propose_constant_run_fills_window():
+    # inside a constant run the proposer must offer the FULL window, not
+    # the 1-token continuation of the nearest (suffix-adjacent) match
+    assert propose_ngram([7] * 20, 4) == [7, 7, 7, 7]
+
+
+def test_propose_cycle_continuation():
+    hist = [1, 2, 3, 4] * 5
+    assert propose_ngram(hist, 4) == [1, 2, 3, 4]
+    assert propose_ngram(hist + [1, 2], 4) == [3, 4, 1, 2]
+
+
+def test_propose_prefers_recent_full_continuation():
+    # suffix [9, 9] occurs twice with a full 2-token continuation; the
+    # most recent one (followed by 5, 6) must win over the stale (3, 4)
+    hist = [9, 9, 3, 4, 0, 9, 9, 5, 6, 0, 9, 9]
+    assert propose_ngram(hist, 2) == [5, 6]
+
+
+def test_propose_falls_back_to_partial_continuation():
+    # the only match's continuation runs into the suffix itself — no
+    # full-k continuation exists, so best effort beats proposing nothing
+    assert propose_ngram([9, 9, 9, 1, 2, 3, 1, 2], 4) == [3, 1, 2]
+
+
+def test_propose_no_match_returns_empty():
+    assert propose_ngram([1, 2, 3, 4, 5, 6], 4) == []
+    assert propose_ngram([], 4) == []
+    assert propose_ngram([1], 4) == []
+    assert propose_ngram([1, 1, 1], 0) == []
+
+
+def test_proposer_handle_validates():
+    with pytest.raises(ValueError, match="spec k"):
+        NgramProposer(k=-1)
+    with pytest.raises(ValueError, match="min_ngram"):
+        NgramProposer(k=4, max_ngram=2, min_ngram=3)
+    p = NgramProposer(k=4)
+    assert p.propose([3] * 10, 2) == [3, 3]      # per-call cap wins
+    assert p.propose([3] * 10) == [3, 3, 3, 3]
+
+
+# ---------------------------------------------------------------------- #
+# engine: stream identity (the tentpole contract)
+# ---------------------------------------------------------------------- #
+
+def _greedy_reqs():
+    # a mix the proposer loves (repetitive) and one it can't help with
+    reqs = [Request(uid=i, prompt=[1 + i, 2, 3, 2, 3, 2, 3],
+                    max_new_tokens=12) for i in range(4)]
+    reqs.append(Request(uid=9, prompt=[11, 23, 37, 41], max_new_tokens=12))
+    return reqs
+
+
+def _sampled_reqs():
+    return [Request(uid=i, prompt=[1 + i, 2, 3, 2, 3], max_new_tokens=10,
+                    temperature=0.8, top_k=20, top_p=0.9, seed=42 + i)
+            for i in range(4)]
+
+
+def test_spec_greedy_streams_identical():
+    base, _ = drain_streams(_greedy_reqs(), prefix_cache=False)
+    spec, eng = drain_streams(_greedy_reqs(), prefix_cache=False, spec_k=4)
+    assert spec == base
+    assert eng.scheduler.spec_proposed > 0
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+    assert eng.alloc.check_conservation()
+
+
+def test_spec_sampled_streams_identical():
+    base, _ = drain_streams(_sampled_reqs())
+    spec, _ = drain_streams(_sampled_reqs(), spec_k=4)
+    assert spec == base
+
+
+def test_spec_mixed_greedy_sampled_batch_identical():
+    def reqs():
+        return [Request(uid=i, prompt=[1 + i, 2, 3, 2, 3], max_new_tokens=8,
+                        temperature=0.0 if i % 2 == 0 else 0.9, seed=7 + i)
+                for i in range(4)]
+    base, _ = drain_streams(reqs())
+    spec, _ = drain_streams(reqs(), spec_k=4)
+    assert spec == base
+
+
+@pytest.mark.parametrize("spec_k", [1, 3, 8])
+def test_spec_width_never_changes_streams(spec_k):
+    base, _ = drain_streams(_greedy_reqs())
+    spec, _ = drain_streams(_greedy_reqs(), spec_k=spec_k)
+    assert spec == base
+
+
+def test_spec_eos_inside_draft_window():
+    """EOS emitted mid-window must cut the stream exactly where the
+    token-at-a-time engine stops — accepted drafts past EOS are dropped."""
+    probe, _ = drain_streams([Request(uid=0, prompt=[5, 2, 3, 2, 3, 2, 3],
+                                      max_new_tokens=16)])
+    stream = probe[0]
+    # pick an eos that the stream actually emits mid-way
+    eos = stream[len(stream) // 2]
+
+    def reqs():
+        return [Request(uid=0, prompt=[5, 2, 3, 2, 3, 2, 3],
+                        max_new_tokens=16, eos_id=eos)]
+    base, _ = drain_streams(reqs())
+    spec, _ = drain_streams(reqs(), spec_k=4)
+    assert spec == base
+    assert base[0][-1] == eos and len(base[0]) < 16
+
+
+def test_spec_max_seq_boundary_identical():
+    """Acceptance must not overshoot the max_seq finish boundary: the
+    speculative run stops at exactly the token count of the plain run."""
+    def reqs():
+        return [Request(uid=0, prompt=[3, 2, 3, 2, 3, 2], max_new_tokens=64)]
+    base, _ = drain_streams(reqs(), max_seq=24, max_batch=1,
+                            prefix_cache=False)
+    spec, eng = drain_streams(reqs(), max_seq=24, max_batch=1,
+                              prefix_cache=False, spec_k=4)
+    assert spec == base
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+    assert eng.alloc.check_conservation()
+
+
+def test_spec_with_prefix_cache_and_requeue_pressure():
+    """Spec decoding composed with prefix hits and slot churn: two waves
+    over a shared prefix, tiny batch, streams still bitwise equal."""
+    shared = [4, 2, 3, 2, 3, 2, 3, 2, 3, 5]
+
+    def reqs():
+        return [Request(uid=i, prompt=shared + [10 + i], max_new_tokens=8)
+                for i in range(6)]
+    base, _ = drain_streams(reqs(), max_batch=2)
+    spec, _ = drain_streams(reqs(), max_batch=2, spec_k=4)
+    assert spec == base
+
+
+# ---------------------------------------------------------------------- #
+# metrics / gating
+# ---------------------------------------------------------------------- #
+
+def test_spec_metrics_and_acceptance_reported():
+    spec, eng = drain_streams(_greedy_reqs(), spec_k=4)
+    m = eng.metrics_summary()
+    assert m["spec_proposed"] > 0
+    assert 0.0 < m["spec_accept_rate"] <= 1.0
+    assert m["spec_accepted"] == pytest.approx(
+        m["spec_accept_rate"] * m["spec_proposed"])
+    per_req = [r.metrics for r in eng.completed]
+    assert sum(x.spec_proposed for x in per_req) == m["spec_proposed"]
+    assert sum(x.spec_accepted for x in per_req) == m["spec_accepted"]
+    # a repetitive greedy workload must actually save steps
+    base, beng = drain_streams(_greedy_reqs())
+    spec_steps = sum(r.metrics.decode_steps for r in eng.completed)
+    base_steps = sum(r.metrics.decode_steps for r in beng.completed)
+    assert spec_steps < base_steps
+
+
+def test_non_spec_engine_reports_no_spec_metrics():
+    _, eng = drain_streams(_greedy_reqs())
+    m = eng.metrics_summary()
+    assert "spec_accept_rate" not in m and "spec_proposed" not in m
+
+
+def test_spec_rejected_for_recurrent_state():
+    with pytest.raises(ValueError, match="spec_k"):
+        make_engine(cfg=SSM_CFG, spec_k=4)
+
+
+def test_spec_rejected_on_dense_layout():
+    with pytest.raises(ValueError, match="spec_k"):
+        make_engine(spec_k=4, paged=False)
+
+
+def test_spec_default_off():
+    eng = make_engine()
+    assert eng.spec is None
+
+
+# ---------------------------------------------------------------------- #
+# tensor parallel: spec streams identical across mesh widths
+# ---------------------------------------------------------------------- #
+
+TP_CFG = dataclasses.replace(CFG, name="tp-spec")
+
+
+def test_spec_tp2_streams_match_tp1():
+    _needs_devices(2)
+    base, _ = drain_streams(_greedy_reqs(), cfg=TP_CFG)
+    for tp in (1, 2):
+        spec, _ = drain_streams(_greedy_reqs(), cfg=TP_CFG, spec_k=4, tp=tp)
+        assert spec == base, f"tp={tp} speculative stream diverged"
+
+
+def test_spec_tp2_sampled_streams_match():
+    _needs_devices(2)
+    base, _ = drain_streams(_sampled_reqs(), cfg=TP_CFG)
+    spec, _ = drain_streams(_sampled_reqs(), cfg=TP_CFG, spec_k=4, tp=2)
+    assert spec == base
