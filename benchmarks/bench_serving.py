@@ -282,6 +282,131 @@ def main_spec(args) -> None:
 
 
 # ---------------------------------------------------------------------- #
+# multi-replica router: prefix-affinity vs random placement on a
+# shared-prefix workload (per-replica caches make placement = hit rate)
+# ---------------------------------------------------------------------- #
+
+def router_families(n_families: int, prefix_len: int = 64):
+    """Prefix families: each family shares a ``prefix_len``-token leading
+    block run; members differ only in a short unique tail."""
+    fams = []
+    for f in range(n_families):
+        prefix = [1 + (7 * f + j) % (CFG.vocab_size - 1)
+                  for j in range(prefix_len)]
+        fams.append(prefix)
+    return fams
+
+
+def run_router(policy: str, n_families: int = 4, waves: int = 3,
+               prefix_len: int = 64, new_tokens: int = 8):
+    """Drive ``waves`` arrival waves (one request per family per wave,
+    drained between waves — a steady shared-prefix stream) through 2
+    replicas under the given routing policy. Returns (router, engines,
+    streams {uid: tokens}, summary dict)."""
+    from repro.serving.router import Router, make_replica_engines
+    engines = make_replica_engines(
+        get_model(CFG), get_params(), replicas=2, use_meshes=False,
+        max_batch=2, max_seq=128, chunk=16)
+    # warm both replicas' compiled shapes with a throwaway family, then
+    # flush its prefix entries so measurement starts with cold caches
+    fams = router_families(n_families, prefix_len)
+    warm = [1 + (7 * n_families + j) % (CFG.vocab_size - 1)
+            for j in range(prefix_len)]
+    for r, eng in enumerate(engines):
+        eng.submit(Request(uid=-1 - r, prompt=warm, max_new_tokens=2))
+        eng.run_until_drained()
+        eng.completed.clear()
+        eng.prefix.evict(eng.num_blocks)
+    router = Router(engines, policy=policy, seed=7)
+    uid = 0
+    for w in range(waves):
+        for f, prefix in enumerate(fams):
+            tail = [11 + (13 * f + 5 * w + j) % 97 for j in range(4)]
+            router.submit(Request(uid=uid, prompt=prefix + tail,
+                                  max_new_tokens=new_tokens))
+            uid += 1
+        router.run_until_drained()
+    streams = {r.uid: list(r.generated) for r in router.completed}
+    return router, engines, streams, router.metrics_summary()
+
+
+def main_router(args) -> None:
+    """--router suite: prefix-affinity routing vs random placement over 2
+    replicas. Asserts the acceptance criteria: affinity's replica
+    prefix-hit tokens strictly beat random routing, token streams are
+    bitwise identical to a single-replica run, and every replica drains
+    with zero leaked blocks (all live blocks map-pinned, pool fully free
+    after a full prefix flush)."""
+    n_fam = 3 if args.smoke else 4
+    waves = 3 if args.smoke else 4
+    # median of 3 drains for the gated timings (routing/streams/hit stats
+    # are deterministic across drains; only wall-clock is noisy)
+    aff_runs = [run_router("affinity", n_families=n_fam, waves=waves)
+                for _ in range(3)]
+    aff_router, aff_eng, aff_streams, aff = aff_runs[0]
+    aff = dict(aff)
+    for key in ("mean_ttft_s", "mean_decode_tok_per_s"):
+        aff[key] = sorted(r[3][key] for r in aff_runs)[1]
+    rnd_router, rnd_eng, rnd_streams, rnd = run_router(
+        "random", n_families=n_fam, waves=waves)
+
+    # single-replica reference: same requests through one engine
+    ref_eng = make_engine(2, 128, 16)
+    uid = 0
+    for w in range(waves):
+        for f, prefix in enumerate(router_families(n_fam)):
+            tail = [11 + (13 * f + 5 * w + j) % 97 for j in range(4)]
+            ref_eng.submit(Request(uid=uid, prompt=prefix + tail,
+                                   max_new_tokens=8))
+            uid += 1
+        ref_eng.run_until_drained()
+    ref_streams = {r.uid: list(r.generated) for r in ref_eng.completed}
+
+    assert aff_streams == ref_streams, \
+        "affinity routing changed a token stream vs single-replica"
+    assert all(r[2] == aff_streams for r in aff_runs), \
+        "token streams must not depend on the drain"
+    assert rnd_streams == ref_streams, \
+        "random routing changed a token stream vs single-replica"
+    aff_hit = aff.get("mean_prefix_hit_tokens", 0.0)
+    rnd_hit = rnd.get("mean_prefix_hit_tokens", 0.0)
+    assert aff_hit > rnd_hit, (
+        f"prefix-affinity routing must strictly beat random placement on "
+        f"shared-prefix traffic: {aff_hit:.1f} vs {rnd_hit:.1f} hit "
+        f"tokens/request")
+    assert aff.get("affinity_hit_rate", 0.0) > 0.0, \
+        "no request was routed onto a live cached prefix"
+    for eng in (*(e for r in aff_runs for e in r[1]), *rnd_eng):
+        assert eng.alloc.check_conservation()
+        live = {b for b in range(1, eng.num_blocks)
+                if eng.alloc.refcount(b) > 0}
+        pinned = eng.prefix.registered_blocks()
+        assert live <= pinned, f"leaked blocks: {sorted(live - pinned)}"
+        eng.prefix.evict(eng.num_blocks)   # full flush -> all blocks free
+        assert eng.alloc.free_blocks == eng.num_blocks - 1, \
+            "blocks leaked after drain + prefix flush"
+
+    emit("serving_router/affinity_ttft_s", aff["mean_ttft_s"] * 1e6,
+         f"TTFT {aff['mean_ttft_s'] * 1e3:.1f}ms, 2 replicas, "
+         f"prefix-affinity routing")
+    emit("serving_router/affinity_decode_tok_per_s",
+         1e6 / max(aff["mean_decode_tok_per_s"], 1e-9),
+         f"{aff['mean_decode_tok_per_s']:.1f} tok/s decode")
+    emit("serving_router/affinity_hit_tokens_per_req",
+         1e6 / max(aff_hit, 1e-9),
+         f"{aff_hit:.1f} prefix-hit tok/req vs {rnd_hit:.1f} random "
+         f"(x{aff_hit / max(rnd_hit, 1e-9):.2f})")
+    keyed = (aff_router.affinity_hits + aff_router.cold_affinity
+             + aff_router.load_fallbacks)
+    emit("serving_router/affinity_hit_rate",
+         aff["affinity_hit_rate"] * 1e6,
+         f"{aff['affinity_hit_rate'] * 100:.0f}% of keyed requests "
+         f"routed onto a live cached prefix "
+         f"({aff_router.affinity_hits}/{keyed}); random baseline spreads "
+         f"{max(rnd_router.routed)}/{min(rnd_router.routed)}")
+
+
+# ---------------------------------------------------------------------- #
 # tensor-parallel serving: TTFT / decode rate / per-device cache bytes
 # ---------------------------------------------------------------------- #
 
@@ -335,8 +460,13 @@ def main_tp(args) -> None:
             print(f"serving_tp/tp{tp}: skipped ({n_dev} devices)",
                   flush=True)
             continue
-        ttft, dec, dev_bytes = run_tp(tp, n_requests=n_req,
-                                      new_tokens=new_tok)
+        # median of 3 drains per width: single-shot TTFT on forced host
+        # devices is noisy enough to trip the CI bench-compare gate
+        runs = [run_tp(tp, n_requests=n_req, new_tokens=new_tok)
+                for _ in range(3)]
+        ttft = sorted(r[0] for r in runs)[1]
+        dec = sorted(r[1] for r in runs)[1]
+        dev_bytes = runs[0][2]
         emit(f"serving_tp/tp{tp}_ttft_s", ttft * 1e6,
              f"TTFT {ttft * 1e3:.1f}ms at tp={tp}")
         emit(f"serving_tp/tp{tp}_decode_tok_per_s", 1e6 / max(dec, 1e-9),
@@ -362,7 +492,16 @@ def main(argv=()) -> None:
                     help="run the speculative-decoding suite instead "
                          "(asserts bitwise-equal streams and >= 2x decode "
                          "tok/s on a repetitive workload)")
+    ap.add_argument("--router", action="store_true",
+                    help="run the multi-replica router suite instead "
+                         "(asserts prefix-affinity beats random placement "
+                         "and streams match a single-replica run)")
     args = ap.parse_args(list(argv))
+    if args.router:
+        main_router(args)
+        if args.json:
+            write_json(args.json)
+        return
     if args.tp:
         main_tp(args)
         if args.json:

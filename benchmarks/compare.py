@@ -1,0 +1,118 @@
+"""Bench-regression gate: diff produced bench JSONs against committed
+baselines and fail on meaningful regressions.
+
+Usage (what the CI bench-smoke job runs)::
+
+    python benchmarks/compare.py BASELINE.json NEW.json [BASELINE2 NEW2 ...]
+        [--threshold 1.20]
+
+Every ``us`` value :func:`benchmarks.common.emit` records is
+lower-is-better by construction (rates are stored as ``1e6 / rate``), so
+one rule covers throughputs, latencies and footprints alike: a metric
+regresses when ``new.us > baseline.us * threshold``.
+
+Only metrics whose names match the GATED patterns — decode tok/s, TTFT,
+and per-device bytes — can fail the gate; everything else in the
+baseline is printed for context but never fails (hit rates, preemption
+counts and drain times are workload diagnostics, not regression
+signals). A gated metric that *disappears* from the new results fails
+too: silently dropping a measurement must not read as "no regression".
+
+Baselines are committed as ``BENCH_*.json``, seeded by running the exact
+CI command (same ``--smoke`` sizes) — see the bench-smoke job in
+``.github/workflows/ci.yml``. After an intentional perf change, reseed
+the affected baseline the same way and commit it with the change.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+# the gate covers exactly the regression surface the serving tier promises:
+# time-to-first-token, steady-state decode rate, and memory per device
+GATED = (
+    re.compile(r"ttft"),
+    re.compile(r"decode_tok_per_s"),
+    re.compile(r"bytes_per_device"),
+)
+
+DEFAULT_THRESHOLD = 1.20
+
+
+def load(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data["results"]}
+
+
+def is_gated(name: str) -> bool:
+    return any(p.search(name) for p in GATED)
+
+
+def compare_pair(base_path: str, new_path: str,
+                 threshold: float) -> list[str]:
+    """Print a comparison table for one baseline/new pair; return the
+    list of gate failures (empty = pass)."""
+    base, new = load(base_path), load(new_path)
+    failures: list[str] = []
+    print(f"\n{base_path} -> {new_path} (fail if gated ratio > "
+          f"{threshold:.2f}x)")
+    for name, b in base.items():
+        gated = is_gated(name)
+        n = new.get(name)
+        if n is None:
+            if gated:
+                failures.append(f"{name}: gated metric missing from "
+                                f"{new_path}")
+                print(f"  FAIL {name}: missing from new results")
+            else:
+                print(f"  ---- {name}: missing (ungated, ignored)")
+            continue
+        if b["us"] <= 0:
+            print(f"  ---- {name}: baseline us={b['us']} (unratioable, "
+                  f"ignored)")
+            continue
+        ratio = n["us"] / b["us"]
+        bad = gated and ratio > threshold
+        tag = "FAIL" if bad else ("gate" if gated else "info")
+        print(f"  {tag} {name}: {b['us']:.1f} -> {n['us']:.1f} us "
+              f"({ratio:.2f}x)")
+        if bad:
+            failures.append(
+                f"{name}: {b['us']:.1f} -> {n['us']:.1f} us "
+                f"({ratio:.2f}x > {threshold:.2f}x) — {n.get('derived', '')}")
+    for name in new:
+        if name not in base:
+            print(f"  new  {name}: {new[name]['us']:.1f} us (no baseline, "
+                  f"not gated)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on >threshold regressions vs committed baselines")
+    ap.add_argument("pairs", nargs="+",
+                    help="alternating BASELINE.json NEW.json paths")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max allowed new/baseline us ratio on gated "
+                         "metrics (default 1.20 = 20%% regression)")
+    args = ap.parse_args(argv)
+    if len(args.pairs) % 2:
+        ap.error("need an even number of paths (baseline/new pairs)")
+    failures: list[str] = []
+    for i in range(0, len(args.pairs), 2):
+        failures += compare_pair(args.pairs[i], args.pairs[i + 1],
+                                 args.threshold)
+    if failures:
+        print(f"\nbench-compare: {len(failures)} regression(s):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nbench-compare: all gated metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -64,3 +64,36 @@ def make_serving_mesh(tp: int, *, data: int = 1):
     if tp < 1:
         raise ValueError(f"tp must be >= 1, got {tp}")
     return make_host_mesh((data, tp), ("data", "model"))
+
+
+def make_replica_meshes(replicas: int, tp: int = 1):
+    """Carve the device set into ``replicas`` disjoint (1, tp) serving
+    meshes — the realized form of the ``data`` axis for multi-replica
+    serving.
+
+    A single engine's mesh always has ``data = 1`` (continuous batching
+    fills its batch axis); *replica* parallelism is R independent engines
+    on disjoint device slices, each with its own params copy, KV pool and
+    scheduler, fronted by :class:`repro.serving.router.Router`. Device
+    ``r*tp .. (r+1)*tp - 1`` belongs to replica ``r`` — contiguous slices
+    so each replica's tp shards stay ICI-adjacent on real hardware.
+    Raises (never silently overlaps) when ``replicas * tp`` exceeds the
+    device count.
+    """
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    n = replicas * tp
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"{replicas} replicas x tp={tp} need {n} devices, have "
+            f"{len(devices)} — set XLA_FLAGS="
+            "--xla_force_host_platform_device_count before importing jax, "
+            "or lower --replicas/--tp")
+    return [
+        jax.make_mesh((1, tp), ("data", "model"),
+                      devices=devices[r * tp:(r + 1) * tp])
+        for r in range(replicas)
+    ]

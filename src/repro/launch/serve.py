@@ -1,8 +1,23 @@
 """Serving driver: continuous batching + chunked prefill for any LM arch.
 
+Batch mode (default) drives a synthetic workload through the engine and
+prints per-request metrics:
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 8 --max-new 16 --prompt-len 64 --chunk 16 \
       --temperature 0.8 --top-k 40 --top-p 0.95
+
+Server mode (``--port``) serves an actual HTTP/SSE port instead: the
+asyncio frontend (:mod:`repro.serving.frontend`) streams tokens per
+request over Server-Sent Events while engine worker threads run the step
+loop continuously; ``--replicas R`` runs R engine replicas behind the
+prefix-affinity router (:mod:`repro.serving.router`), carving the device
+set into R disjoint (1, tp) meshes when the devices are there:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --port 8080 --replicas 2 --max-queue 64
+  curl -N localhost:8080/generate -d '{"prompt": [3, 1, 4], "max_new_tokens": 8}'
+  curl localhost:8080/health; curl localhost:8080/metrics
 
 Flags:
   --chunk N        prompt tokens absorbed per slot per prefill step (one
@@ -46,6 +61,14 @@ Flags:
                    tokens. 0 (default) = off.
   --spec-ngram N   longest history suffix the proposer matches (default 3)
   --no-spec        force speculative decoding off (overrides --spec-k)
+  --port P         serve HTTP/SSE on port P (0 = ephemeral, printed at
+                   startup) instead of running the batch workload
+  --host H         bind address for --port (default 127.0.0.1)
+  --replicas R     engine replicas behind the prefix-affinity router
+                   (server mode; needs R*tp devices for per-replica
+                   meshes, else replicas share the default device)
+  --max-queue N    per-replica admission backpressure: POSTs get 503
+                   once a replica's queue holds N requests (default 32)
 
 Per-request metrics (TTFT, queue wait, decode tok/s, prefix-hit tokens,
 speculative acceptance rate when --spec-k is on) print at the end.
@@ -102,6 +125,17 @@ def main(argv=None) -> int:
                     help="longest n-gram the draft proposer matches")
     ap.add_argument("--no-spec", action="store_true",
                     help="force speculative decoding off")
+    ap.add_argument("--port", type=int, default=None,
+                    help="serve HTTP/SSE on this port (0 = ephemeral) "
+                         "instead of running the batch workload")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --port")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the prefix-affinity "
+                         "router (server mode)")
+    ap.add_argument("--max-queue", type=int, default=32,
+                    help="per-replica queue depth that triggers 503 "
+                         "backpressure in server mode")
     kernel_modes = ["xla", "xla_chunked", "pallas", "pallas_interpret"]
     ap.add_argument("--kernels",
                     default=os.environ.get("REPRO_KERNELS") or None,
@@ -144,17 +178,39 @@ def main(argv=None) -> int:
     params = nn.init(lambda t: api.forward(t), jax.random.key(0),
                      jnp.zeros((1, S0), jnp.int32))
 
-    engine = ServingEngine(api, params, max_batch=args.max_batch,
-                           max_seq=args.max_seq, chunk=args.chunk,
-                           paged=(None if not args.no_paged else False),
-                           block_size=args.block_size,
-                           num_blocks=args.num_blocks or None,
-                           prefix_cache=not args.no_prefix_cache,
-                           kernels=args.kernels, tp=args.tp,
-                           scheduler=args.scheduler,
-                           aging_s=args.sched_aging,
-                           spec_k=0 if args.no_spec else args.spec_k,
-                           spec_ngram=args.spec_ngram)
+    engine_kw = dict(max_batch=args.max_batch,
+                     max_seq=args.max_seq, chunk=args.chunk,
+                     paged=(None if not args.no_paged else False),
+                     block_size=args.block_size,
+                     num_blocks=args.num_blocks or None,
+                     prefix_cache=not args.no_prefix_cache,
+                     kernels=args.kernels,
+                     scheduler=args.scheduler,
+                     aging_s=args.sched_aging,
+                     spec_k=0 if args.no_spec else args.spec_k,
+                     spec_ngram=args.spec_ngram)
+
+    if args.port is not None:
+        # server mode: HTTP/SSE frontend, optional multi-replica router
+        from repro.serving.frontend import AsyncFrontend
+        from repro.serving.router import Router, make_replica_engines
+        if args.replicas < 1:
+            ap.error(f"--replicas must be >= 1, got {args.replicas}")
+        if args.replicas > 1:
+            engines = make_replica_engines(
+                api, params, replicas=args.replicas, tp=args.tp,
+                **engine_kw)
+            target = Router(engines)
+            print(f"router: {args.replicas} replicas, prefix-affinity "
+                  f"routing, tp={args.tp} each", flush=True)
+        else:
+            target = ServingEngine(api, params, tp=args.tp, **engine_kw)
+        fe = AsyncFrontend(target, host=args.host, port=args.port,
+                           max_queue=args.max_queue)
+        fe.run_forever()
+        return 0
+
+    engine = ServingEngine(api, params, tp=args.tp, **engine_kw)
     if engine.spec is not None:
         print(f"speculative: k={engine.spec.k} n-gram drafts "
               f"(<= {engine.spec.max_ngram}-token suffix match)",
@@ -206,6 +262,9 @@ def main(argv=None) -> int:
         if m.get("preemptions"):
             line += (f" | {m['preemptions']:.0f} preemptions, "
                      f"{m['requeues']:.0f} requeues")
+        if m.get("truncated_requests"):
+            line += (f" | {m['truncated_requests']:.0f} truncated "
+                     f"prompt{'s' if m['truncated_requests'] != 1 else ''}")
         if "spec_accept_rate" in m:
             line += (f" | spec accept {m['spec_accept_rate'] * 100:.0f}% "
                      f"({m['spec_accepted']:.0f}/{m['spec_proposed']:.0f})")

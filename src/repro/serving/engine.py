@@ -173,6 +173,14 @@ class Request:
     top_k: int = 0
     top_p: float = 1.0
     seed: int | None = None     # None -> uid; PRNG is per (seed, token index)
+    # streaming hook: called from inside the step loop every time this
+    # request emits tokens — ``on_tokens(req, new_tokens, done)`` with the
+    # tokens appended THIS step (>= 1; a speculative verify step can emit
+    # several) and whether the request just completed. The callback runs
+    # on whichever thread drives the engine (the frontend's worker thread
+    # wraps it in call_soon_threadsafe to reach asyncio consumers); it
+    # must be cheap and must not touch the engine. None = no streaming.
+    on_tokens: Any = dataclasses.field(default=None, repr=False)
     # filled by the engine
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -542,6 +550,8 @@ class ServingEngine:
                 req.metrics.done_t = now
                 self.completed.append(req)
                 sched.finish(s)
+            if req.on_tokens is not None:
+                req.on_tokens(req, [req.generated[-1]], req.done)
         return sum(1 for r in sched.active if r is not None)
 
     def _step_speculative(self, active_slots: list[int]) -> int:
@@ -650,7 +660,15 @@ class ServingEngine:
                 req.metrics.done_t = now
                 self.completed.append(req)
                 sched.finish(s)
+            if req.on_tokens is not None:
+                req.on_tokens(req, emitted, req.done)
         return sum(1 for r in sched.active if r is not None)
+
+    def has_work(self) -> bool:
+        """Anything queued or active? (Delegates to the scheduler; the
+        frontend's worker thread polls this to decide whether to step or
+        sleep.)"""
+        return self.scheduler.has_work()
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         for _ in range(max_steps):
@@ -689,6 +707,11 @@ class ServingEngine:
                 r.metrics.queue_wait for r in done),
             "mean_decode_tok_per_s": finite_mean(
                 r.metrics.decode_tok_per_s(len(r.generated)) for r in done),
+            # responses that continue a CLIPPED prompt (Scheduler.submit
+            # truncated it to max_seq - 1): callers watching this summary
+            # must be able to see that without scanning every request
+            "truncated_requests": float(
+                sum(1 for r in done if r.truncated)),
         }
         out.update(self.scheduler.stats())  # preemptions/requeues[/blocks]
         if self.paged:

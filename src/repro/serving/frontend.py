@@ -1,0 +1,604 @@
+"""Async streaming frontend: an HTTP/SSE server over the serving engine.
+
+Pure-stdlib asyncio (no framework dependency — the CI container installs
+only jax + numpy): a hand-rolled HTTP/1.1 parser over
+``asyncio.start_server``, Server-Sent Events for token streaming. The
+design decouples *submission* from *computation* from *streaming*:
+
+* **Worker threads** (:class:`EngineWorker`, one per replica) drive the
+  blocking jitted step loop continuously — the asyncio event loop never
+  blocks on device compute. Each worker is the ONLY thread that touches
+  its engine: HTTP handlers hand requests over through a thread-safe
+  inbox the worker drains before every step, so the engine and scheduler
+  stay single-threaded with zero locks in the hot path.
+* **Per-request asyncio queues** carry tokens out: the engine's
+  ``Request.on_tokens`` callback fires inside the step loop and posts
+  ``(tokens, done, t)`` onto the request's queue via
+  ``loop.call_soon_threadsafe`` — the one safe thread boundary — and the
+  HTTP handler awaits the queue and writes SSE events as they land.
+  A slow client therefore never stalls the step loop (tokens buffer in
+  its queue) and a fast engine never waits for the network.
+* **Backpressure** comes from scheduler admission: a POST is rejected
+  with 503 (+ ``Retry-After``) when the target replica's queue depth
+  reaches ``max_queue``, or — queue empty but the pool hopeless — when
+  the scheduler's pure :meth:`~repro.serving.scheduler.Scheduler.
+  would_admit` probe says the request could not be placed even at the
+  head of the line. Trial-submitting and catching the rejection would
+  skew admission stats and wedge head-of-line order; the probe mutates
+  nothing.
+* **Graceful drain**: :meth:`AsyncFrontend.shutdown` with ``drain=True``
+  (the default) stops accepting new work (503), lets every in-flight
+  stream run to completion, then stops the workers and closes the
+  listener. ``drain=False`` abandons active requests (their streams get
+  a final ``error`` event).
+
+Streaming protocol (Server-Sent Events)
+---------------------------------------
+``POST /generate`` with a JSON body::
+
+    {"prompt": [1, 2, 3], "max_new_tokens": 16, "temperature": 0.0,
+     "top_k": 0, "top_p": 1.0, "seed": null, "priority": 0,
+     "eos_id": null, "stream": true}
+
+With ``stream`` true (default) the response is ``text/event-stream``:
+one ``data:`` event per engine emission (a speculative verify step can
+carry several tokens), then a final summary event, then ``[DONE]``::
+
+    data: {"tokens": [17], "index": 0}
+    data: {"tokens": [4, 9], "index": 1}
+    data: {"done": true, "uid": 3, "replica": 0, "n": 3,
+           "tokens": [17, 4, 9], "ttft_s": 0.01, "truncated": false}
+    data: [DONE]
+
+With ``stream`` false the same summary object comes back as one
+``application/json`` response. ``GET /health`` reports liveness and load;
+``GET /metrics`` the engine/router ``metrics_summary()`` plus frontend
+stream metrics (tokens streamed, mean per-token latency = mean gap
+between consecutive SSE emissions of a stream, rejects).
+
+Multi-replica mode: construct with a :class:`~repro.serving.router.
+Router` — the handler calls ``router.route(req)`` on the asyncio thread
+(reads are racy-but-safe; see the router docstring) and submits to the
+chosen replica's worker, feeding first-token latencies back into the
+router's EWMA-TTFT load signal.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import queue as _queue
+import threading
+import time
+
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import Router
+
+
+class EngineWorker(threading.Thread):
+    """Background thread driving one engine's step loop continuously.
+
+    The only thread that touches the engine after start(). Submissions
+    arrive through :meth:`submit` (thread-safe inbox, drained before each
+    step); a submit the engine rejects (over-long prompt that can never
+    fit the pool) sets ``req.error`` and fires the request's callback
+    with ``done=True`` so the waiting stream fails loudly instead of
+    hanging. ``idle_wait`` bounds the sleep while there is no work.
+    """
+
+    def __init__(self, engine: ServingEngine, *, idle_wait: float = 0.01,
+                 name: str | None = None):
+        super().__init__(name=name or "engine-worker", daemon=True)
+        self.engine = engine
+        self.idle_wait = float(idle_wait)
+        self._inbox: _queue.Queue[Request] = _queue.Queue()
+        self._wake = threading.Event()
+        self._stopping = False
+        self._drain = True
+        self._closed = False          # refuse submits after stop()
+        self.steps = 0
+
+    def submit(self, req: Request) -> None:
+        """Thread-safe: hand a request to the step loop."""
+        if self._closed:
+            raise RuntimeError("worker is shutting down")
+        self._inbox.put(req)
+        self._wake.set()
+
+    def stop(self, *, drain: bool = True, timeout: float | None = 30.0
+             ) -> None:
+        """Stop the loop: ``drain=True`` finishes all queued/active work
+        first; ``drain=False`` abandons it (active requests' callbacks
+        fire once with ``req.error`` set)."""
+        self._closed = True
+        self._drain = drain
+        self._stopping = True
+        self._wake.set()
+        self.join(timeout)
+
+    def _drain_inbox(self) -> None:
+        while True:
+            try:
+                req = self._inbox.get_nowait()
+            except _queue.Empty:
+                return
+            try:
+                self.engine.submit(req)
+            except (ValueError, MemoryError) as e:
+                req.error = str(e)          # type: ignore[attr-defined]
+                if req.on_tokens is not None:
+                    req.on_tokens(req, [], True)
+
+    def run(self) -> None:   # pragma: no cover - exercised via frontend
+        eng = self.engine
+        while True:
+            self._drain_inbox()
+            if self._stopping and not self._drain:
+                break
+            if eng.has_work():
+                eng.step()
+                self.steps += 1
+            elif self._stopping and self._inbox.empty():
+                break
+            else:
+                self._wake.wait(self.idle_wait)
+                self._wake.clear()
+        if self._stopping and not self._drain:
+            # abandoned requests: fail their streams, free their blocks
+            for slot, req in enumerate(eng.scheduler.active):
+                if req is None:
+                    continue
+                eng.scheduler.finish(slot)
+                self._abort(req)
+            for req in list(eng.scheduler.queue):
+                self._abort(req)
+
+    @staticmethod
+    def _abort(req: Request) -> None:
+        req.error = "aborted: frontend shut down without drain"  # type: ignore[attr-defined]
+        if req.on_tokens is not None:
+            req.on_tokens(req, [], True)
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    """Stream-level metrics the engine cannot see (it has no notion of a
+    connection): acceptance/rejection counts and per-token SSE latency —
+    the gap between consecutive emissions of one stream, aggregated over
+    all streams. ``mean_inter_token_s`` is the serving-side analogue of
+    decode tok/s as a *client* experiences it."""
+    requests_accepted: int = 0
+    requests_rejected: int = 0
+    requests_completed: int = 0
+    requests_failed: int = 0
+    tokens_streamed: int = 0
+    inter_token_sum_s: float = 0.0
+    inter_token_n: int = 0
+
+    @property
+    def mean_inter_token_s(self) -> float:
+        if self.inter_token_n == 0:
+            return float("nan")
+        return self.inter_token_sum_s / self.inter_token_n
+
+    def as_dict(self) -> dict[str, float]:
+        out = {
+            "frontend_requests_accepted": float(self.requests_accepted),
+            "frontend_requests_rejected": float(self.requests_rejected),
+            "frontend_requests_completed": float(self.requests_completed),
+            "frontend_requests_failed": float(self.requests_failed),
+            "frontend_tokens_streamed": float(self.tokens_streamed),
+        }
+        if self.inter_token_n:
+            out["frontend_mean_inter_token_s"] = self.mean_inter_token_s
+        return out
+
+
+class AsyncFrontend:
+    """HTTP/SSE server over one engine or a multi-replica router.
+
+    Lifecycle::
+
+        fe = AsyncFrontend(engine_or_router, port=0)
+        await fe.start()          # workers spin up, socket listens
+        ...                       # fe.port is the bound port
+        await fe.shutdown()       # drain in-flight streams, stop workers
+
+    or from sync code, ``fe.run_forever()`` (Ctrl-C drains and exits).
+    """
+
+    def __init__(self, target: ServingEngine | Router, *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 max_queue: int = 32, idle_wait: float = 0.01):
+        if isinstance(target, Router):
+            self.router: Router | None = target
+            engines = target.engines
+        else:
+            self.router = None
+            engines = [target]
+        self.engines = engines
+        self.workers = [
+            EngineWorker(e, idle_wait=idle_wait, name=f"engine-worker-{i}")
+            for i, e in enumerate(engines)
+        ]
+        self.host = host
+        self.port = port              # 0 = ephemeral; real port after start
+        self.max_queue = int(max_queue)
+        self.stats = FrontendStats()
+        self.accepting = False
+        self._server: asyncio.AbstractServer | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._uid = 0
+        self._inflight = 0
+        self._idle = asyncio.Event()
+        self._idle.set()
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    async def start(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        for w in self.workers:
+            w.start()
+        self._server = await asyncio.start_server(
+            self._handle_conn, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self.accepting = True
+
+    async def shutdown(self, *, drain: bool = True,
+                       timeout: float = 60.0) -> None:
+        """Stop accepting (new POSTs get 503); with ``drain`` wait for
+        every in-flight stream to finish before stopping the workers and
+        closing the listener."""
+        self.accepting = False
+        if drain:
+            try:
+                await asyncio.wait_for(self._idle.wait(), timeout)
+            except asyncio.TimeoutError:   # pragma: no cover - safety net
+                pass
+        for w in self.workers:
+            # stop() joins the worker thread: run it off the event loop
+            await asyncio.get_running_loop().run_in_executor(
+                None, lambda w=w: w.stop(drain=drain))
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    def run_forever(self) -> None:   # pragma: no cover - CLI convenience
+        async def _main():
+            await self.start()
+            print(f"serving on http://{self.host}:{self.port} "
+                  f"({len(self.engines)} replica"
+                  f"{'s' if len(self.engines) > 1 else ''})", flush=True)
+            try:
+                await asyncio.Event().wait()
+            finally:
+                await self.shutdown()
+        try:
+            asyncio.run(_main())
+        except KeyboardInterrupt:
+            pass
+
+    # ------------------------------------------------------------------ #
+    # request plumbing
+    # ------------------------------------------------------------------ #
+    def _total_depth(self) -> int:
+        return sum(w._inbox.qsize() + e.scheduler.queue_depth
+                   for w, e in zip(self.workers, self.engines))
+
+    def _make_request(self, body: dict) -> Request:
+        uid = self._uid
+        self._uid += 1
+        prompt = body.get("prompt")
+        if (not isinstance(prompt, list) or not prompt
+                or not all(isinstance(t, int) for t in prompt)):
+            raise ValueError("'prompt' must be a non-empty list of ints")
+        return Request(
+            uid=uid, prompt=prompt,
+            max_new_tokens=int(body.get("max_new_tokens", 16)),
+            eos_id=body.get("eos_id"),
+            priority=int(body.get("priority", 0)),
+            temperature=float(body.get("temperature", 0.0)),
+            top_k=int(body.get("top_k", 0)),
+            top_p=float(body.get("top_p", 1.0)),
+            seed=body.get("seed"))
+
+    def _admission_check(self, req: Request, rid: int) -> str | None:
+        """Returns a rejection reason, or None to admit. Queue depth is
+        the primary backpressure signal; an *empty* queue with a pool
+        that could never place the request (would_admit probe) rejects
+        immediately rather than parking the request at the head of the
+        line to starve everything behind it."""
+        sched = self.engines[rid].scheduler
+        depth = self.workers[rid]._inbox.qsize() + sched.queue_depth
+        if depth >= self.max_queue:
+            return (f"replica {rid} queue is full "
+                    f"({depth}/{self.max_queue})")
+        if depth == 0 and not sched.would_admit(req) \
+                and not sched.has_work():
+            # nothing running, nothing queued, still unplaceable: the
+            # request can never fit (too many blocks) — reject now
+            return (f"request needs more KV blocks than replica {rid}'s "
+                    f"pool can ever free")
+        return None
+
+    # ------------------------------------------------------------------ #
+    # HTTP layer
+    # ------------------------------------------------------------------ #
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            await self._handle_one(reader, writer)
+        except (asyncio.IncompleteReadError, ConnectionResetError,
+                asyncio.TimeoutError):
+            pass                       # client went away mid-request
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, OSError):  # pragma: no cover
+                pass
+
+    async def _handle_one(self, reader, writer) -> None:
+        request_line = await asyncio.wait_for(reader.readline(), 30.0)
+        if not request_line:
+            return
+        try:
+            method, path, _ = request_line.decode("ascii").split()
+        except ValueError:
+            await self._respond(writer, 400, {"error": "bad request line"})
+            return
+        headers: dict[str, str] = {}
+        while True:
+            line = await asyncio.wait_for(reader.readline(), 30.0)
+            if line in (b"\r\n", b"\n", b""):
+                break
+            key, _, val = line.decode("latin1").partition(":")
+            headers[key.strip().lower()] = val.strip()
+        body = b""
+        clen = int(headers.get("content-length", "0") or 0)
+        if clen:
+            body = await asyncio.wait_for(reader.readexactly(clen), 30.0)
+
+        if method == "GET" and path == "/health":
+            await self._respond(writer, 200, self._health())
+        elif method == "GET" and path == "/metrics":
+            await self._respond(writer, 200, self._metrics())
+        elif method == "POST" and path == "/generate":
+            await self._handle_generate(writer, body)
+        else:
+            await self._respond(writer, 404,
+                                {"error": f"no route {method} {path}"})
+
+    def _health(self) -> dict:
+        active = sum(sum(1 for r in e.scheduler.active if r is not None)
+                     for e in self.engines)
+        return {"status": "ok" if self.accepting else "draining",
+                "replicas": len(self.engines),
+                "queued": self._total_depth(), "active": active}
+
+    def _metrics(self) -> dict:
+        src = self.router if self.router is not None else self.engines[0]
+        out = dict(src.metrics_summary())
+        out.update(self.stats.as_dict())
+        # JSON has no NaN: drop undefined aggregates rather than emitting
+        # the non-standard token json.dumps would produce
+        return {k: v for k, v in out.items()
+                if not (isinstance(v, float) and v != v)}
+
+    async def _respond(self, writer, status: int, obj: dict) -> None:
+        reasons = {200: "OK", 400: "Bad Request", 404: "Not Found",
+                   503: "Service Unavailable"}
+        payload = json.dumps(obj).encode()
+        head = (f"HTTP/1.1 {status} {reasons.get(status, 'OK')}\r\n"
+                "Content-Type: application/json\r\n"
+                f"Content-Length: {len(payload)}\r\n"
+                + ("Retry-After: 1\r\n" if status == 503 else "")
+                + "Connection: close\r\n\r\n").encode()
+        writer.write(head + payload)
+        await writer.drain()
+
+    # ------------------------------------------------------------------ #
+    # /generate
+    # ------------------------------------------------------------------ #
+    async def _handle_generate(self, writer, raw: bytes) -> None:
+        if not self.accepting:
+            self.stats.requests_rejected += 1
+            await self._respond(writer, 503, {"error": "shutting down"})
+            return
+        try:
+            body = json.loads(raw.decode() or "{}")
+            req = self._make_request(body)
+        except (ValueError, UnicodeDecodeError) as e:
+            await self._respond(writer, 400, {"error": str(e)})
+            return
+        rid = self.router.route(req) if self.router is not None else 0
+        reason = self._admission_check(req, rid)
+        if reason is not None:
+            self.stats.requests_rejected += 1
+            await self._respond(writer, 503, {"error": reason})
+            return
+
+        loop = self._loop
+        q: asyncio.Queue = asyncio.Queue()
+
+        def on_tokens(r: Request, toks: list[int], done: bool) -> None:
+            # runs on the worker thread, inside the step loop: the queue
+            # put is marshalled onto the event loop — the only thread
+            # crossing. time.monotonic here stamps true emission time so
+            # per-token latency excludes event-loop scheduling delay.
+            loop.call_soon_threadsafe(
+                q.put_nowait, (list(toks), done, time.monotonic()))
+
+        req.on_tokens = on_tokens
+        stream = bool(body.get("stream", True))
+        self.stats.requests_accepted += 1
+        self._inflight += 1
+        self._idle.clear()
+        try:
+            self.workers[rid].submit(req)
+            if stream:
+                await self._stream_sse(writer, req, rid, q)
+            else:
+                await self._collect_json(writer, req, rid, q)
+        finally:
+            self._inflight -= 1
+            if self._inflight == 0:
+                self._idle.set()
+
+    def _summary_obj(self, req: Request, rid: int) -> dict:
+        err = getattr(req, "error", None)
+        out = {"done": True, "uid": req.uid, "replica": rid,
+               "n": len(req.generated), "tokens": list(req.generated),
+               "truncated": req.truncated}
+        ttft = req.metrics.ttft
+        if ttft == ttft:               # NaN-safe: omit when undefined
+            out["ttft_s"] = round(ttft, 6)
+        if err is not None:
+            out["error"] = err
+        return out
+
+    async def _consume(self, req: Request, rid: int, q: asyncio.Queue,
+                       per_event) -> None:
+        """Drain the request's token queue to completion, maintaining
+        stream metrics; ``per_event(toks, index)`` runs for every
+        emission (the SSE writer, or a no-op for non-streaming)."""
+        index = 0
+        last_t: float | None = None
+        first = True
+        while True:
+            toks, done, t = await q.get()
+            if toks:
+                if first and self.router is not None:
+                    self.router.observe_ttft(
+                        rid, t - req.metrics.submit_t)
+                first = False
+                self.stats.tokens_streamed += len(toks)
+                if last_t is not None:
+                    # one emission = one step: the gap amortizes over the
+                    # tokens it carried (speculative steps emit several)
+                    self.stats.inter_token_sum_s += t - last_t
+                    self.stats.inter_token_n += len(toks)
+                last_t = t
+                await per_event(toks, index)
+                index += 1
+            if done:
+                if getattr(req, "error", None) is None:
+                    self.stats.requests_completed += 1
+                else:
+                    self.stats.requests_failed += 1
+                return
+
+    async def _stream_sse(self, writer, req, rid, q) -> None:
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: text/event-stream\r\n"
+                     b"Cache-Control: no-store\r\n"
+                     b"Connection: close\r\n\r\n")
+        await writer.drain()
+
+        async def emit(toks: list[int], index: int) -> None:
+            ev = json.dumps({"tokens": toks, "index": index})
+            writer.write(f"data: {ev}\n\n".encode())
+            await writer.drain()
+
+        await self._consume(req, rid, q, emit)
+        summary = json.dumps(self._summary_obj(req, rid))
+        writer.write(f"data: {summary}\n\ndata: [DONE]\n\n".encode())
+        await writer.drain()
+
+    async def _collect_json(self, writer, req, rid, q) -> None:
+        async def emit(toks: list[int], index: int) -> None:
+            pass
+        await self._consume(req, rid, q, emit)
+        obj = self._summary_obj(req, rid)
+        status = 200 if "error" not in obj else 400
+        await self._respond(writer, status, obj)
+
+
+# ---------------------------------------------------------------------- #
+# minimal client (tests + benchmarks; avoids an HTTP-library dependency)
+# ---------------------------------------------------------------------- #
+
+async def client_generate(host: str, port: int, *, stream: bool = True,
+                          timeout: float = 120.0, **payload) -> dict:
+    """POST /generate and consume the response; returns the final summary
+    object with ``events`` = the streamed SSE event list prepended. The
+    token-level test client: asserts nothing, decodes everything."""
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        body = json.dumps(dict(payload, stream=stream)).encode()
+        writer.write(
+            (f"POST /generate HTTP/1.1\r\nHost: {host}\r\n"
+             "Content-Type: application/json\r\n"
+             f"Content-Length: {len(body)}\r\n"
+             "Connection: close\r\n\r\n").encode() + body)
+        await writer.drain()
+        status_line = await asyncio.wait_for(reader.readline(), timeout)
+        status = int(status_line.split()[1])
+        while True:   # headers
+            line = await asyncio.wait_for(reader.readline(), timeout)
+            if line in (b"\r\n", b"\n", b""):
+                break
+        if not stream or status != 200:
+            raw = await asyncio.wait_for(reader.read(), timeout)
+            return dict(json.loads(raw.decode() or "{}"),
+                        http_status=status, events=[])
+        events: list[dict] = []
+        summary: dict = {}
+        buf = b""
+        while True:
+            chunk = await asyncio.wait_for(reader.readline(), timeout)
+            if not chunk:
+                break
+            buf += chunk
+            if not buf.endswith(b"\n\n") and chunk not in (b"\n", b"\r\n"):
+                continue
+            text = buf.decode().strip()
+            buf = b""
+            if not text.startswith("data:"):
+                continue
+            data = text[len("data:"):].strip()
+            if data == "[DONE]":
+                break
+            obj = json.loads(data)
+            if obj.get("done"):
+                summary = obj
+            else:
+                events.append(obj)
+        return dict(summary, http_status=status, events=events)
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, OSError):   # pragma: no cover
+            pass
+
+
+async def client_get(host: str, port: int, path: str,
+                     timeout: float = 30.0) -> dict:
+    """GET a JSON endpoint (/health, /metrics)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write((f"GET {path} HTTP/1.1\r\nHost: {host}\r\n"
+                      "Connection: close\r\n\r\n").encode())
+        await writer.drain()
+        status_line = await asyncio.wait_for(reader.readline(), timeout)
+        status = int(status_line.split()[1])
+        clen = 0
+        while True:
+            line = await asyncio.wait_for(reader.readline(), timeout)
+            if line in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = line.decode("latin1").partition(":")
+            if k.strip().lower() == "content-length":
+                clen = int(v)
+        raw = await asyncio.wait_for(reader.readexactly(clen), timeout) \
+            if clen else b"{}"
+        return dict(json.loads(raw.decode()), http_status=status)
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, OSError):   # pragma: no cover
+            pass

@@ -1,0 +1,319 @@
+"""Multi-replica request router: prefix-affinity placement over R engines.
+
+One :class:`~repro.serving.engine.ServingEngine` is one replica — its own
+params copy, KV block pool, prefix cache and scheduler, optionally pinned
+to its own device slice (:func:`repro.launch.mesh.make_replica_meshes`
+carves the device set into R disjoint ``(1, tp)`` meshes — the realized
+``data`` axis of the production mesh). The :class:`Router` owns R such
+replicas and decides, per request, which one serves it.
+
+Routing policy (``policy="affinity"``, the default)
+---------------------------------------------------
+Prefix caches are per-replica, so *where* a request lands decides whether
+its prompt prefix is a cache hit or a cold re-prefill. The router reuses
+the exact key chain the :class:`~repro.serving.paged.PrefixCache` already
+computes (:func:`repro.serving.paged.prefix_keys` — chained 128-bit
+blake2b digests, one per full prompt block) as its affinity signal, in
+escalating order:
+
+1. **Live-cache affinity** — ``peek`` every replica's prefix map with the
+   request's key chain (a pure read; no refcount/LRU/stat skew). If any
+   replica holds cached blocks for this prompt, route to the replica with
+   the *deepest* hit run (ties broken by load): the request rides blocks
+   that already exist and skips prefill over them.
+2. **Cold-hash affinity** — no replica holds the prefix yet: route by a
+   stable hash of the chain's *first* key (``keys[0]`` commits to the
+   whole first prompt block, so every request sharing a leading block
+   hashes to the same replica). The first arrival of a prefix family
+   warms exactly the replica its siblings will hash to — sticky sessions
+   without any shared state between router and replicas. A load escape
+   hatch overrides the hash when the target is clearly overloaded
+   (queue+active depth exceeds the lightest replica's by more than
+   ``imbalance``, or it cannot admit while another replica can — the
+   :meth:`~repro.serving.scheduler.Scheduler.would_admit` probe): a hot
+   replica must not absorb unbounded traffic just because a popular
+   prefix hashes to it.
+3. **Pure load** — prompts shorter than one block have no keys: route to
+   the least-loaded replica (queue+active depth, then the EWMA-TTFT
+   signal fed back by :meth:`Router.observe_ttft`, then replica id).
+
+``policy="random"`` (seeded) and ``policy="round_robin"`` ignore affinity
+entirely — they are the control arms the router benchmark compares
+against (affinity must strictly beat them on shared-prefix traffic).
+
+Correctness note: routing NEVER changes a request's token stream. Every
+replica computes the same function (same params, same per-``(seed,
+len(generated))`` PRNG coordinates, batch-composition-independent steps),
+so placement affects latency and cache hits only — the router benchmark
+asserts streams are bitwise identical to a single-replica run.
+
+Concurrency note: the sync driver (:meth:`step` / :meth:`run_until_
+drained`) steps replicas in-process. Under the async frontend each
+replica is stepped by its own worker thread and :meth:`route` runs on the
+asyncio thread — its reads of replica state (``peek``, queue depth,
+``would_admit``) are racy-but-safe: single dict/list reads under the GIL
+that can only yield a slightly stale *placement*, never corrupt state.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.paged import prefix_keys
+
+POLICIES = ("affinity", "random", "round_robin")
+
+
+class Router:
+    """Route requests across homogeneous serving-engine replicas.
+
+    ``engines`` must be interchangeable — same model, ``max_seq``, paged
+    layout and block size — because routing must never change what a
+    request computes, only where. Heterogeneous pools would also break
+    key-chain affinity (keys are per-``block_size``).
+    """
+
+    def __init__(self, engines: list[ServingEngine], *,
+                 policy: str = "affinity", imbalance: int = 2,
+                 seed: int = 0):
+        if not engines:
+            raise ValueError("need at least one engine replica")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; "
+                             f"one of {POLICIES}")
+        e0 = engines[0]
+        for i, e in enumerate(engines[1:], 1):
+            if (e.max_seq, e.paged, e.block_size) != (
+                    e0.max_seq, e0.paged, e0.block_size):
+                raise ValueError(
+                    f"replica {i} differs from replica 0: "
+                    f"(max_seq, paged, block_size) = "
+                    f"{(e.max_seq, e.paged, e.block_size)} vs "
+                    f"{(e0.max_seq, e0.paged, e0.block_size)} — replicas "
+                    f"must be interchangeable")
+        self.engines = engines
+        self.policy = policy
+        self.imbalance = int(imbalance)
+        self.max_seq = e0.max_seq
+        self.block_size = e0.block_size
+        # affinity needs per-replica prefix caches to aim at
+        self._affine = (policy == "affinity" and e0.paged
+                        and e0.scheduler.prefix is not None)
+        self._rng = random.Random(seed)
+        self._rr = 0
+        # routing stats (the bench and /metrics read these)
+        self.routed = [0] * len(engines)       # per-replica request count
+        self.affinity_hits = 0    # routed onto a live cached prefix
+        self.affinity_hit_blocks = 0   # ... total peeked depth
+        self.cold_affinity = 0    # cold prefix, routed by key hash
+        self.load_fallbacks = 0   # hash target overloaded -> least-load
+        self.load_routed = 0      # no keys: pure load routing
+        # per-replica EWMA of observed TTFT (s): a soft load signal the
+        # driver feeds back via observe_ttft; NaN until first observation
+        self.ewma_ttft = [float("nan")] * len(engines)
+        # sync-driver bookkeeping: completed-list watermark per replica
+        # (step() scans the tail for fresh completions to feed the EWMA)
+        self._done_seen = [0] * len(engines)
+
+    # ------------------------------------------------------------------ #
+    # load signals
+    # ------------------------------------------------------------------ #
+    def depth(self, rid: int) -> int:
+        """Queue + active depth of one replica (the primary load signal)."""
+        sched = self.engines[rid].scheduler
+        return sched.queue_depth + sum(
+            1 for r in sched.active if r is not None)
+
+    def _load_key(self, rid: int):
+        t = self.ewma_ttft[rid]
+        return (self.depth(rid), 0.0 if math.isnan(t) else t, rid)
+
+    def observe_ttft(self, rid: int, ttft_s: float,
+                     alpha: float = 0.2) -> None:
+        """Fold one observed TTFT into replica ``rid``'s EWMA load signal
+        (the async frontend calls this from its first-token events; the
+        sync driver from completion scans)."""
+        if math.isnan(ttft_s):
+            return
+        prev = self.ewma_ttft[rid]
+        self.ewma_ttft[rid] = (ttft_s if math.isnan(prev)
+                               else (1 - alpha) * prev + alpha * ttft_s)
+
+    def _overloaded(self, rid: int, req: Request) -> bool:
+        """Is the hash-affine target a bad idea right now? True when its
+        depth exceeds the lightest replica's by more than ``imbalance``,
+        or when it cannot admit the request while some other replica can
+        (the scheduler's pure would_admit probe)."""
+        depths = [self.depth(r) for r in range(len(self.engines))]
+        if depths[rid] > min(depths) + self.imbalance:
+            return True
+        if not self.engines[rid].scheduler.would_admit(req):
+            return any(e.scheduler.would_admit(req)
+                       for r, e in enumerate(self.engines) if r != rid)
+        return False
+
+    # ------------------------------------------------------------------ #
+    # routing
+    # ------------------------------------------------------------------ #
+    def route(self, req: Request) -> int:
+        """Pick the replica for ``req`` (records stats, mutates no
+        replica state). The frontend calls this then submits to the
+        chosen replica's worker; :meth:`submit` does both for sync use."""
+        n = len(self.engines)
+        if self.policy == "random":
+            rid = self._rng.randrange(n)
+        elif self.policy == "round_robin":
+            rid = self._rr % n
+            self._rr += 1
+        else:
+            rid = self._route_affinity(req)
+        self.routed[rid] += 1
+        return rid
+
+    def _route_affinity(self, req: Request) -> int:
+        n = len(self.engines)
+        keys = (prefix_keys(req.prompt[: self.max_seq - 1],
+                            self.block_size) if self._affine else [])
+        if keys:
+            depths = [
+                len(e.scheduler.prefix.peek(keys))
+                if e.scheduler.prefix is not None else 0
+                for e in self.engines
+            ]
+            best = max(depths)
+            if best > 0:
+                # a replica already holds this prefix: deepest hit wins,
+                # load breaks ties
+                rid = min((r for r in range(n) if depths[r] == best),
+                          key=self._load_key)
+                self.affinity_hits += 1
+                self.affinity_hit_blocks += best
+                return rid
+            # cold prefix: stable hash of the first block's key, so the
+            # whole prefix family converges on one replica
+            rid = int.from_bytes(keys[0][:8], "little") % n
+            if n > 1 and self._overloaded(rid, req):
+                self.load_fallbacks += 1
+                return min(range(n), key=self._load_key)
+            self.cold_affinity += 1
+            return rid
+        self.load_routed += 1
+        return min(range(n), key=self._load_key)
+
+    def submit(self, req: Request) -> int:
+        """Route and enqueue; returns the chosen replica id."""
+        rid = self.route(req)
+        self.engines[rid].submit(req)
+        return rid
+
+    # ------------------------------------------------------------------ #
+    # sync driver (benchmarks/tests; the async frontend threads replicas)
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        """One step on every replica that has work; returns total active.
+        Also harvests fresh completions into the TTFT EWMA."""
+        total = 0
+        for rid, eng in enumerate(self.engines):
+            if eng.has_work():
+                total += eng.step()
+            done = eng.completed
+            for req in done[self._done_seen[rid]:]:
+                self.observe_ttft(rid, req.metrics.ttft)
+            self._done_seen[rid] = len(done)
+        return total
+
+    def has_work(self) -> bool:
+        return any(e.has_work() for e in self.engines)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            self.step()
+            if not self.has_work():
+                return self.completed
+        raise RuntimeError(
+            f"router drain: {max_steps} steps exhausted with work left on "
+            f"{sum(1 for e in self.engines if e.has_work())} replicas")
+
+    @property
+    def completed(self) -> list[Request]:
+        out: list[Request] = []
+        for e in self.engines:
+            out.extend(e.completed)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict[str, float]:
+        """Routing-layer counters (per-replica spread + affinity mix)."""
+        total = sum(self.routed)
+        keyed = self.affinity_hits + self.cold_affinity + self.load_fallbacks
+        out = {
+            "replicas": float(len(self.engines)),
+            "routed_total": float(total),
+            "affinity_hits": float(self.affinity_hits),
+            "affinity_hit_blocks": float(self.affinity_hit_blocks),
+            "cold_affinity": float(self.cold_affinity),
+            "load_fallbacks": float(self.load_fallbacks),
+            "load_routed": float(self.load_routed),
+        }
+        if keyed:
+            out["affinity_hit_rate"] = self.affinity_hits / keyed
+        for rid, c in enumerate(self.routed):
+            out[f"replica{rid}_routed"] = float(c)
+        return out
+
+    def metrics_summary(self) -> dict[str, float]:
+        """Cross-replica aggregate of the engines' per-request summaries
+        (means weighted by completed-request count) plus routing stats."""
+        summaries = [(e.metrics_summary(), e) for e in self.engines]
+        summaries = [(m, e) for m, e in summaries if m]
+        out: dict[str, float] = {}
+        if summaries:
+            total = sum(m["requests"] for m, _ in summaries)
+            out["requests"] = total
+            for key in ("mean_ttft_s", "mean_queue_wait_s",
+                        "mean_decode_tok_per_s", "mean_prefix_hit_tokens"):
+                vals = [(m[key], m["requests"]) for m, _ in summaries
+                        if key in m and not math.isnan(m[key])]
+                if vals:
+                    w = sum(n for _, n in vals)
+                    out[key] = sum(v * n for v, n in vals) / w
+            for key in ("preemptions", "requeues", "truncated_requests",
+                        "spec_proposed", "spec_accepted"):
+                s = sum(m.get(key, 0.0) for m, _ in summaries)
+                if key in summaries[0][0] or s:
+                    out[key] = s
+        out.update(self.stats())
+        return out
+
+
+def make_replica_engines(api, params, *, replicas: int, tp: int = 1,
+                         use_meshes: bool | None = None,
+                         **engine_kw) -> list[ServingEngine]:
+    """Build ``replicas`` interchangeable engines for a :class:`Router`.
+
+    ``use_meshes=True`` pins each replica to its own device slice via
+    :func:`repro.launch.mesh.make_replica_meshes` (needs ``replicas * tp``
+    devices — the realized data axis); ``False`` co-locates every replica
+    on the default device (distinct pools and schedulers, shared compute —
+    fine for tests and CPU benches); ``None`` (default) uses meshes when
+    the devices are there. ``tp > 1`` always needs meshes.
+    """
+    import jax
+
+    if use_meshes is None:
+        use_meshes = tp > 1 or jax.device_count() >= replicas * tp
+    if tp > 1 and not use_meshes:
+        raise ValueError("tp > 1 replicas need per-replica meshes")
+    if use_meshes:
+        from repro.launch.mesh import make_replica_meshes
+        meshes = make_replica_meshes(replicas, tp)
+    else:
+        meshes = None
+    return [
+        ServingEngine(api, params,
+                      mesh=None if meshes is None else meshes[r],
+                      **engine_kw)
+        for r in range(replicas)
+    ]

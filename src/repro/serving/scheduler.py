@@ -496,7 +496,61 @@ class Scheduler:
             if entry.resumed:
                 self.requeues += 1
             fresh.append(slot)
+        # drop the aliased placement guard: slots placed THIS pass were
+        # off-limits to _victims only while the pass ran. Leaving the list
+        # populated would make the next would_admit() probe (which may run
+        # between steps, from another thread's routing decision) treat
+        # long-settled slots as untouchable.
+        self._placing = []
         return fresh
+
+    @property
+    def queue_depth(self) -> int:
+        """Number of queued (not active) requests. Unlike the ``queue``
+        property this never re-sorts — it is a load signal the router and
+        frontend poll from outside the step loop, possibly concurrently
+        with it, so it must be a single atomic read."""
+        return len(self._queue)
+
+    def would_admit(self, req: "Request") -> bool:
+        """Pure probe: could ``req`` be placed right now if it stood at
+        the head of the queue? Mutates nothing — no refcounts, no LRU
+        recency, no stats — so the router can poll it every request as a
+        per-replica load/backpressure signal without skewing admission.
+
+        The answer mirrors :meth:`admit`'s placement logic: a free slot
+        (or, with preemption on, a strictly-lower-class resumable victim)
+        must exist, and for paged engines the block shortfall must be
+        coverable by free + prefix-evictable blocks — or, through the
+        victim path, by :meth:`_reclaimable`. Queued requests are
+        deliberately ignored: head-of-line order is the *caller's*
+        concern (pair with :attr:`queue_depth`), this answers capacity.
+        """
+        prompt = req.prompt[: self.max_seq - 1]
+        slot_free = any(r is None for r in self.active)
+        victims = (self._victims(req.priority)
+                   if self.preemption else [])
+        if not slot_free and not victims:
+            return False
+        if not self.paged:
+            return True
+        need = self._entry_blocks(prompt, req)
+        if need > self.num_blocks - 1:
+            return False
+        keys = (prefix_keys(prompt, self.block_size)
+                if self.prefix is not None else [])
+        hits = self.prefix.peek(keys) if self.prefix is not None else []
+        while hits and len(hits) * self.block_size >= len(prompt):
+            hits.pop()
+        fresh = need - len(hits)
+        avail = self.alloc.free_blocks
+        if self.prefix is not None:
+            avail += self.prefix.evictable()
+        if slot_free and fresh <= avail:
+            return True
+        # no free slot, or blocks short even after eviction: the remaining
+        # route is preemption — same pre-check admit() runs
+        return bool(victims) and need <= self._reclaimable(req.priority)
 
     def advance(self, slot: int, n: int) -> None:
         """The jitted step absorbed ``n`` tokens for this slot."""

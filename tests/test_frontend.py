@@ -1,0 +1,270 @@
+"""Async HTTP/SSE frontend: concurrent streaming, backpressure, drain.
+
+Plain ``asyncio.run`` inside ordinary test functions (the CI environment
+has no pytest-asyncio). Each scenario starts a real server on an
+ephemeral port, drives it with the stdlib client helpers from
+:mod:`repro.serving.frontend`, and shuts it down — the worker threads,
+SSE framing, admission probe and drain paths all run for real.
+"""
+
+import asyncio
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as nn
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.frontend import (AsyncFrontend, client_generate,
+                                    client_get)
+from repro.serving.router import Router, make_replica_engines
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  head_dim=16, remat="none")
+
+_PARAMS_CACHE: dict[str, dict] = {}
+
+
+def init_params(cfg=CFG):
+    if cfg.name not in _PARAMS_CACHE:
+        api = get_model(cfg)
+        _PARAMS_CACHE[cfg.name] = nn.init(
+            lambda t: api.forward(t), jax.random.key(0),
+            jnp.zeros((1, 8), jnp.int32))
+    return _PARAMS_CACHE[cfg.name]
+
+
+def make_engine(**kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("chunk", 8)
+    return ServingEngine(get_model(CFG), init_params(), **kw)
+
+
+def serve(target, scenario, **fe_kw):
+    """Start a frontend on an ephemeral port, run ``await scenario(fe)``,
+    drain-shutdown, return (frontend, scenario result)."""
+    fe_kw.setdefault("idle_wait", 0.002)
+
+    async def _main():
+        fe = AsyncFrontend(target, port=0, **fe_kw)
+        await fe.start()
+        try:
+            return fe, await scenario(fe)
+        finally:
+            await fe.shutdown()
+
+    return asyncio.run(_main())
+
+
+def prompts(n=8):
+    """n distinct prompts; greedy decode makes the streams deterministic
+    regardless of arrival order or server-assigned uids."""
+    return [[1 + i, 2 + i, 3, 4 + i % 3] for i in range(n)]
+
+
+def reference_streams(ps, new=6):
+    eng = make_engine()
+    for i, p in enumerate(ps):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=new))
+    done = {r.uid: r.generated for r in eng.run_until_drained()}
+    return {tuple(p): done[i] for i, p in enumerate(ps)}
+
+
+# ---------------------------------------------------------------------- #
+# concurrent SSE streaming
+# ---------------------------------------------------------------------- #
+
+def test_eight_concurrent_sse_streams_match_direct_run():
+    ps = prompts(8)
+    ref = reference_streams(ps)
+
+    async def scenario(fe):
+        outs = await asyncio.gather(*[
+            client_generate("127.0.0.1", fe.port, prompt=p,
+                            max_new_tokens=6) for p in ps])
+        metrics = await client_get("127.0.0.1", fe.port, "/metrics")
+        return outs, metrics
+
+    fe, (outs, metrics) = serve(make_engine(), scenario)
+    for p, out in zip(ps, outs):
+        assert out["http_status"] == 200
+        assert out["done"] and out["n"] == 6
+        assert not out["truncated"]
+        assert out["tokens"] == ref[tuple(p)], \
+            "streamed tokens must match a direct engine run"
+        # SSE events carry exactly the summary's tokens, in order
+        assert [t for e in out["events"] for t in e["tokens"]] \
+            == out["tokens"]
+        assert [e["index"] for e in out["events"]] \
+            == list(range(len(out["events"])))
+        assert out["ttft_s"] > 0.0
+    assert fe.stats.requests_accepted == 8
+    assert fe.stats.requests_completed == 8
+    assert fe.stats.tokens_streamed == 48
+    # per-token stream latency: 8 streams x 6 emissions = 40 gaps
+    assert fe.stats.inter_token_n > 0
+    assert fe.stats.mean_inter_token_s > 0.0
+    assert metrics["http_status"] == 200
+    assert metrics["frontend_tokens_streamed"] == 48.0
+    assert metrics["frontend_mean_inter_token_s"] > 0.0
+    assert metrics["mean_ttft_s"] > 0.0      # engine summary merged in
+
+
+def test_non_streaming_json_response():
+    ps = prompts(2)
+    ref = reference_streams(ps)
+
+    async def scenario(fe):
+        return await asyncio.gather(*[
+            client_generate("127.0.0.1", fe.port, stream=False, prompt=p,
+                            max_new_tokens=6) for p in ps])
+
+    _, outs = serve(make_engine(), scenario)
+    for p, out in zip(ps, outs):
+        assert out["http_status"] == 200
+        assert out["events"] == []
+        assert out["tokens"] == ref[tuple(p)]
+
+
+def test_health_and_errors():
+    async def scenario(fe):
+        health = await client_get("127.0.0.1", fe.port, "/health")
+        missing = await client_generate("127.0.0.1", fe.port,
+                                        max_new_tokens=4)
+        bad = await client_generate("127.0.0.1", fe.port, prompt="nope")
+        lost = await client_get("127.0.0.1", fe.port, "/nope")
+        return health, missing, bad, lost
+
+    _, (health, missing, bad, lost) = serve(make_engine(), scenario)
+    assert health["http_status"] == 200
+    assert health["status"] == "ok"
+    assert health["replicas"] == 1
+    assert missing["http_status"] == 400
+    assert "prompt" in missing["error"]
+    assert bad["http_status"] == 400
+    assert lost["http_status"] == 404
+
+
+# ---------------------------------------------------------------------- #
+# backpressure
+# ---------------------------------------------------------------------- #
+
+def test_queue_full_rejects_with_503():
+    # max_queue=0: the depth check trips before any request is queued —
+    # the deterministic form of "the queue is full"
+    async def scenario(fe):
+        return await client_generate("127.0.0.1", fe.port, prompt=[1, 2],
+                                     max_new_tokens=4)
+
+    fe, out = serve(make_engine(), scenario, max_queue=0)
+    assert out["http_status"] == 503
+    assert "queue is full" in out["error"]
+    assert fe.stats.requests_rejected == 1
+    assert fe.stats.requests_accepted == 0
+
+
+def test_unplaceable_request_rejects_immediately():
+    # pool of 2 usable 4-token blocks: a request needing 6 blocks can
+    # never be placed — the would_admit probe rejects it at the door
+    # instead of parking it at the head of the queue forever
+    eng = make_engine(max_batch=1, block_size=4, num_blocks=3,
+                      prefix_cache=False)
+
+    async def scenario(fe):
+        return await client_generate("127.0.0.1", fe.port,
+                                     prompt=[1] * 8, max_new_tokens=16)
+
+    fe, out = serve(eng, scenario)
+    assert out["http_status"] == 503
+    assert "pool" in out["error"]
+    assert fe.stats.requests_rejected == 1
+
+
+# ---------------------------------------------------------------------- #
+# shutdown paths
+# ---------------------------------------------------------------------- #
+
+def test_graceful_drain_completes_inflight_streams():
+    async def scenario():
+        fe = AsyncFrontend(make_engine(), port=0, idle_wait=0.002)
+        await fe.start()
+        tasks = [asyncio.create_task(
+            client_generate("127.0.0.1", fe.port, prompt=p,
+                            max_new_tokens=8)) for p in prompts(4)]
+        await asyncio.sleep(0.05)        # streams in flight
+        await fe.shutdown(drain=True)
+        return fe, await asyncio.gather(*tasks)
+
+    fe, outs = asyncio.run(scenario())
+    for out in outs:
+        assert out["http_status"] == 200
+        assert out["n"] == 8
+        assert "error" not in out
+    assert fe.stats.requests_completed == 4
+    assert fe.stats.requests_failed == 0
+
+
+def test_shutdown_without_drain_fails_streams_loudly():
+    # long generations ensure the abort lands mid-flight: the streams
+    # must end with an error event, not hang or pretend completion
+    eng = make_engine(max_batch=2, max_seq=256, chunk=8)
+
+    async def scenario():
+        fe = AsyncFrontend(eng, port=0, idle_wait=0.002)
+        await fe.start()
+        tasks = [asyncio.create_task(
+            client_generate("127.0.0.1", fe.port, prompt=[1 + i, 2],
+                            max_new_tokens=500)) for i in range(2)]
+        await asyncio.sleep(0.05)
+        await fe.shutdown(drain=False)
+        return fe, await asyncio.gather(*tasks)
+
+    fe, outs = asyncio.run(scenario())
+    for out in outs:
+        assert out["http_status"] == 200      # stream started, then failed
+        assert "aborted" in out["error"]
+    assert fe.stats.requests_failed == 2
+    # abandoned actives were finished: their blocks are back in the pool
+    live = {b for b in range(1, eng.num_blocks)
+            if eng.alloc.refcount(b) > 0}
+    assert live <= eng.prefix.registered_blocks()
+
+
+# ---------------------------------------------------------------------- #
+# multi-replica: frontend over the router
+# ---------------------------------------------------------------------- #
+
+def test_frontend_over_router_streams_and_feeds_ttft():
+    ps = prompts(8)
+    ref = reference_streams(ps)
+    engines = make_replica_engines(get_model(CFG), init_params(),
+                                   replicas=2, use_meshes=False,
+                                   max_batch=3, max_seq=64, chunk=8)
+    router = Router(engines)
+
+    async def scenario(fe):
+        outs = await asyncio.gather(*[
+            client_generate("127.0.0.1", fe.port, prompt=p,
+                            max_new_tokens=6) for p in ps])
+        health = await client_get("127.0.0.1", fe.port, "/health")
+        metrics = await client_get("127.0.0.1", fe.port, "/metrics")
+        return outs, health, metrics
+
+    fe, (outs, health, metrics) = serve(router, scenario)
+    for p, out in zip(ps, outs):
+        assert out["http_status"] == 200
+        assert out["replica"] in (0, 1)
+        assert out["tokens"] == ref[tuple(p)], \
+            "routing must never change a token stream"
+    assert health["replicas"] == 2
+    assert metrics["replicas"] == 2.0
+    assert metrics["routed_total"] == 8.0
+    assert fe.stats.requests_completed == 8
+    # first-token events fed the router's EWMA load signal
+    used = [r for r, n in enumerate(router.routed) if n]
+    assert all(not math.isnan(router.ewma_ttft[r]) for r in used)

@@ -1,0 +1,281 @@
+"""Multi-replica router: prefix-affinity placement over R engine replicas.
+
+Three layers: routing-policy tests drive :class:`repro.serving.router.
+Router` decisions directly (cold-hash stickiness, live-cache affinity,
+load escape), end-to-end tests assert the serving contract (token streams
+bitwise identical to a single-replica run, affinity strictly beats random
+placement on shared-prefix traffic, zero leaked blocks), and mesh tests
+cover :func:`repro.launch.mesh.make_replica_meshes` device gating.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as nn
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import POLICIES, Router, make_replica_engines
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  head_dim=16, remat="none")
+
+_PARAMS_CACHE: dict[str, dict] = {}
+
+
+def init_params(cfg=CFG):
+    if cfg.name not in _PARAMS_CACHE:
+        api = get_model(cfg)
+        _PARAMS_CACHE[cfg.name] = nn.init(
+            lambda t: api.forward(t), jax.random.key(0),
+            jnp.zeros((1, 8), jnp.int32))
+    return _PARAMS_CACHE[cfg.name]
+
+
+def make_replicas(n=2, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("chunk", 8)
+    return make_replica_engines(get_model(CFG), init_params(), replicas=n,
+                                use_meshes=False, **kw)
+
+
+def family_prompt(f: int, plen: int = 32) -> list[int]:
+    """One shared prefix per family f (covers plen // block_size blocks)."""
+    return [1 + (7 * f + j) % (CFG.vocab_size - 1) for j in range(plen)]
+
+
+def wave(n_fam: int, w: int, uid0: int, new: int = 4) -> list[Request]:
+    """One request per family: shared family prefix + short unique tail."""
+    return [
+        Request(uid=uid0 + f,
+                prompt=family_prompt(f) + [11 + (13 * f + 5 * w + j) % 89
+                                           for j in range(3)],
+                max_new_tokens=new)
+        for f in range(n_fam)
+    ]
+
+
+def drive(router: Router, n_fam: int = 2, waves: int = 3) -> dict:
+    """Submit `waves` arrival waves, draining between them (so live-cache
+    affinity has warmed caches to aim at); returns {uid: tokens}."""
+    uid = 0
+    for w in range(waves):
+        for r in wave(n_fam, w, uid):
+            router.submit(r)
+        uid += n_fam
+        router.run_until_drained()
+    return {r.uid: list(r.generated) for r in router.completed}
+
+
+# ---------------------------------------------------------------------- #
+# construction and validation
+# ---------------------------------------------------------------------- #
+
+def test_empty_and_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="at least one"):
+        Router([])
+    with pytest.raises(ValueError, match="unknown router policy"):
+        Router(make_replicas(), policy="sticky")
+    assert "affinity" in POLICIES
+
+
+def test_heterogeneous_replicas_rejected():
+    a = ServingEngine(get_model(CFG), init_params(), max_batch=2,
+                      max_seq=64, chunk=8)
+    b = ServingEngine(get_model(CFG), init_params(), max_batch=2,
+                      max_seq=32, chunk=8)
+    with pytest.raises(ValueError, match="interchangeable"):
+        Router([a, b])
+
+
+def test_replica_engines_tp_needs_meshes():
+    with pytest.raises(ValueError, match="meshes"):
+        make_replica_engines(get_model(CFG), init_params(), replicas=2,
+                             tp=2, use_meshes=False)
+
+
+# ---------------------------------------------------------------------- #
+# routing decisions (no stepping needed)
+# ---------------------------------------------------------------------- #
+
+def test_cold_hash_keeps_a_prefix_family_together():
+    router = Router(make_replicas())
+    for r in wave(1, 0, 0) + wave(1, 1, 1) + wave(1, 2, 2):
+        router.submit(r)
+    # same family => same keys[0] => same replica, before any cache exists
+    assert sorted(router.routed) == [0, 3]
+    assert router.cold_affinity == 3
+    assert router.affinity_hits == 0
+
+
+def test_load_escape_overrides_cold_hash():
+    # imbalance=0: one queued request on the hash target is already
+    # "overloaded", so the second submission must take the load fallback
+    router = Router(make_replicas(), imbalance=0)
+    router.submit(wave(1, 0, 0)[0])
+    router.submit(wave(1, 1, 1)[0])
+    assert router.load_fallbacks >= 1
+    assert sorted(router.routed) == [1, 1]
+
+
+def test_short_prompts_route_by_load():
+    router = Router(make_replicas())
+    # shorter than one block (16 tokens): no prefix keys to hash
+    for i in range(4):
+        router.submit(Request(uid=i, prompt=[1 + i, 2, 3],
+                              max_new_tokens=2))
+    assert router.load_routed == 4
+    assert router.routed == [2, 2]      # least-load alternates
+
+
+def test_round_robin_and_seeded_random():
+    rr = Router(make_replicas(), policy="round_robin")
+    for i in range(4):
+        rr.submit(Request(uid=i, prompt=[1 + i], max_new_tokens=2))
+    assert rr.routed == [2, 2]
+    picks = []
+    for _ in range(2):
+        rnd = Router(make_replicas(), policy="random", seed=11)
+        picks.append([rnd.route(Request(uid=i, prompt=[1 + i],
+                                        max_new_tokens=2))
+                      for i in range(6)])
+    assert picks[0] == picks[1], "same seed must route identically"
+
+
+def test_observe_ttft_ewma():
+    router = Router(make_replicas())
+    assert all(math.isnan(t) for t in router.ewma_ttft)
+    router.observe_ttft(0, 0.10)
+    assert router.ewma_ttft[0] == pytest.approx(0.10)
+    router.observe_ttft(0, 0.20, alpha=0.5)
+    assert router.ewma_ttft[0] == pytest.approx(0.15)
+    assert math.isnan(router.ewma_ttft[1])
+    router.observe_ttft(1, float("nan"))    # undefined TTFTs are ignored
+    assert math.isnan(router.ewma_ttft[1])
+
+
+# ---------------------------------------------------------------------- #
+# end-to-end serving contract
+# ---------------------------------------------------------------------- #
+
+def test_live_cache_affinity_follows_warm_replica():
+    router = Router(make_replicas())
+    drive(router, n_fam=1, waves=3)
+    # wave 1 went cold-hash; waves 2 and 3 found the live cached prefix
+    assert router.affinity_hits == 2
+    assert router.affinity_hit_blocks > 0
+    assert max(router.routed) == 3, "the family must stay on one replica"
+
+
+def test_streams_bitwise_identical_to_single_replica():
+    streams = {}
+    for policy in ("affinity", "random"):
+        streams[policy] = drive(Router(make_replicas(), policy=policy,
+                                       seed=3))
+    ref_eng = ServingEngine(get_model(CFG), init_params(), max_batch=2,
+                            max_seq=64, chunk=8)
+    uid = 0
+    for w in range(3):
+        for r in wave(2, w, uid):
+            ref_eng.submit(r)
+        uid += 2
+        ref_eng.run_until_drained()
+    ref = {r.uid: list(r.generated) for r in ref_eng.completed}
+    assert streams["affinity"] == ref
+    assert streams["random"] == ref
+
+
+def test_affinity_beats_random_on_shared_prefix_traffic():
+    runs = {}
+    for policy in ("affinity", "random"):
+        router = Router(make_replicas(), policy=policy, seed=3)
+        drive(router)
+        runs[policy] = router.metrics_summary()
+    aff = runs["affinity"]["mean_prefix_hit_tokens"]
+    rnd = runs["random"]["mean_prefix_hit_tokens"]
+    assert aff > rnd, (
+        f"affinity routing must strictly beat random placement: "
+        f"{aff:.1f} vs {rnd:.1f} prefix-hit tokens/request")
+    assert runs["affinity"]["affinity_hit_rate"] > 0.0
+
+
+def test_zero_leaked_blocks_after_drain():
+    router = Router(make_replicas())
+    drive(router)
+    for eng in router.engines:
+        assert eng.alloc.check_conservation()
+        live = {b for b in range(1, eng.num_blocks)
+                if eng.alloc.refcount(b) > 0}
+        # every live block is pinned by the prefix map (refcount 1), not
+        # by a vanished request
+        assert live <= eng.prefix.registered_blocks(), \
+            f"leaked blocks: {sorted(live - eng.prefix.registered_blocks())}"
+        assert all(eng.alloc.refcount(b) == 1 for b in live)
+        eng.prefix.evict(eng.num_blocks)
+        assert eng.alloc.free_blocks == eng.num_blocks - 1
+
+
+def test_metrics_summary_aggregates_across_replicas():
+    router = Router(make_replicas())
+    drive(router)
+    m = router.metrics_summary()
+    assert m["requests"] == 6.0
+    assert m["routed_total"] == 6.0
+    assert m["replicas"] == 2.0
+    assert m["mean_ttft_s"] > 0.0
+    assert m["truncated_requests"] == 0.0
+    # the cross-replica mean is request-weighted over per-replica means
+    per = [e.metrics_summary() for e in router.engines if e.completed]
+    want = (sum(s["mean_ttft_s"] * s["requests"] for s in per)
+            / sum(s["requests"] for s in per))
+    assert m["mean_ttft_s"] == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------- #
+# replica meshes: the realized data axis
+# ---------------------------------------------------------------------- #
+
+def test_replica_meshes_validate_and_gate_on_devices():
+    from repro.launch.mesh import make_replica_meshes
+    with pytest.raises(ValueError):
+        make_replica_meshes(0)
+    with pytest.raises(ValueError):
+        make_replica_meshes(2, tp=0)
+    with pytest.raises(RuntimeError, match="devices"):
+        make_replica_meshes(jax.device_count() + 1)
+
+
+def test_replica_meshes_are_disjoint_slices():
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (REPRO_HOST_DEVICES)")
+    from repro.launch.mesh import make_replica_meshes
+    meshes = make_replica_meshes(2, tp=1)
+    assert len(meshes) == 2
+    devs = [set(m.devices.flat) for m in meshes]
+    assert not (devs[0] & devs[1]), "replica meshes must not share devices"
+    for m in meshes:
+        assert m.axis_names == ("data", "model")
+        assert m.devices.shape == (1, 1)
+
+
+def test_router_over_meshed_replicas_matches_single():
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (REPRO_HOST_DEVICES)")
+    engines = make_replica_engines(get_model(CFG), init_params(),
+                                   replicas=2, use_meshes=True,
+                                   max_batch=2, max_seq=64, chunk=8)
+    streams = drive(Router(engines), n_fam=2, waves=2)
+    ref = ServingEngine(get_model(CFG), init_params(), max_batch=2,
+                        max_seq=64, chunk=8)
+    uid = 0
+    for w in range(2):
+        for r in wave(2, w, uid):
+            ref.submit(r)
+        uid += 2
+        ref.run_until_drained()
+    assert streams == {r.uid: list(r.generated) for r in ref.completed}

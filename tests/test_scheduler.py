@@ -549,3 +549,92 @@ def test_submit_truncation_warns_and_marks_request():
         _warnings.simplefilter("error")     # any warning -> test failure
         sched.submit(short, now=1.0)
     assert not short.truncated
+
+# ---------------------------------------------------------------------- #
+# would_admit: the pure admission probe (frontend backpressure signal)
+# ---------------------------------------------------------------------- #
+
+def sched_snapshot(sched):
+    """Everything a pure probe must leave untouched."""
+    return (sched.alloc.free_blocks if sched.paged else None,
+            len(sched._queue), list(sched.active), list(sched._placing),
+            dict(sched._ticket),
+            sched.prefix.stats() if getattr(sched, "prefix", None) is not None
+            and hasattr(sched.prefix, "stats") else None)
+
+
+def test_would_admit_true_then_admit_places():
+    sched = make_sched(max_batch=1, num_blocks=12)
+    req = Request(uid=0, prompt=[1] * 8, max_new_tokens=4)
+    assert sched.would_admit(req)
+    sched.submit(req, now=0.0)
+    sched.admit(0.0)
+    assert sched.active[0] is req
+
+
+def test_would_admit_false_when_pool_can_never_fit():
+    # 3 usable 4-token blocks = 12 tokens; the request writes 24
+    sched = make_sched(max_batch=1, num_blocks=4)
+    req = Request(uid=0, prompt=[1] * 20, max_new_tokens=4)
+    assert not sched.would_admit(req)
+    with pytest.raises(ValueError, match="blocks"):
+        sched.submit(req, now=0.0)
+
+
+def test_would_admit_tracks_slot_occupancy():
+    sched = make_sched(max_batch=1, num_blocks=16)
+    a = Request(uid=0, prompt=[1] * 8, max_new_tokens=8)
+    sched.submit(a, now=0.0)
+    sched.admit(0.0)
+    b = Request(uid=1, prompt=[2] * 8, max_new_tokens=4)
+    # equal priority: no slot, no victims
+    assert not sched.would_admit(b)
+    sched.finish(0)
+    assert sched.would_admit(b)
+
+
+def test_would_admit_sees_preemption_headroom():
+    for preemption, want in ((True, True), (False, False)):
+        sched = make_sched(max_batch=1, num_blocks=12,
+                           preemption=preemption)
+        low = Request(uid=0, prompt=[1] * 8, max_new_tokens=8, priority=0)
+        sched.submit(low, now=0.0)
+        sched.admit(0.0)
+        hi = Request(uid=1, prompt=[2] * 8, max_new_tokens=4, priority=2)
+        assert sched.would_admit(hi) is want, \
+            f"preemption={preemption}: probe must mirror admit behavior"
+
+
+def test_would_admit_mutates_nothing():
+    sched = make_sched(max_batch=2, num_blocks=12)
+    a = Request(uid=0, prompt=[1] * 8, max_new_tokens=8)
+    sched.submit(a, now=0.0)
+    sched.admit(0.0)
+    before = sched_snapshot(sched)
+    # probe across the whole outcome space: admitted, queued-for-pool,
+    # flat-out impossible — none may leave a trace
+    sched.would_admit(Request(uid=1, prompt=[2] * 4, max_new_tokens=4))
+    sched.would_admit(Request(uid=2, prompt=[3] * 30, max_new_tokens=30))
+    sched.would_admit(Request(uid=3, prompt=[4] * 8, max_new_tokens=4,
+                              priority=3))
+    assert sched_snapshot(sched) == before
+
+
+def test_would_admit_probes_unsubmitted_requests():
+    # the frontend probes BEFORE submit: the request has no ticket, no
+    # key memo, no metrics — the probe must not require any of them
+    sched = make_sched(max_batch=1, num_blocks=12)
+    req = Request(uid=7, prompt=[1] * 8, max_new_tokens=4)
+    assert sched.would_admit(req)
+    assert req.uid not in sched._ticket
+    assert not req.truncated
+
+
+def test_queue_depth_property():
+    sched = make_sched(max_batch=1, num_blocks=16)
+    assert sched.queue_depth == 0
+    sched.submit(Request(uid=0, prompt=[1] * 4, max_new_tokens=2), now=0.0)
+    sched.submit(Request(uid=1, prompt=[2] * 4, max_new_tokens=2), now=0.0)
+    assert sched.queue_depth == 2
+    sched.admit(0.0)
+    assert sched.queue_depth == 1

@@ -395,3 +395,61 @@ def test_mixed_greedy_sampled_batch_bitwise():
     # and the sampled rows really sampled (same engine, same seeds)
     again = submit_all(make_engine(max_batch=4), [0.0, 0.9, 0.0, 0.9])
     assert again == mixed
+
+
+# ---------------------------------------------------------------------- #
+# request-level metrics surfaced through metrics_summary / the serve CLI
+# ---------------------------------------------------------------------- #
+
+def test_truncated_request_counted_in_metrics_summary():
+    eng = make_engine(max_batch=2, max_seq=16, chunk=8)
+    with pytest.warns(RuntimeWarning, match="truncated"):
+        eng.submit(Request(uid=0, prompt=[1 + j % 90 for j in range(40)],
+                           max_new_tokens=3))
+    eng.submit(Request(uid=1, prompt=[5, 6, 7], max_new_tokens=3))
+    done = {r.uid: r for r in eng.run_until_drained()}
+    assert done[0].truncated and not done[1].truncated
+    # the submitted prompt is preserved; only the engine's working copy
+    # was clipped to max_seq - 1
+    assert len(done[0].prompt) == 40
+    # clipping to max_seq - 1 leaves exactly one position to generate
+    assert len(done[0].generated) == 1
+    assert len(done[1].generated) == 3
+    m = eng.metrics_summary()
+    assert m["truncated_requests"] == 1.0
+
+
+def test_queue_wait_stints_surface_in_metrics_summary():
+    eng = make_engine(max_batch=1)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=[1 + i, 2], max_new_tokens=4))
+    done = eng.run_until_drained()
+    # the scheduler's per-stint accumulator ran for every admitted request
+    assert all(not math.isnan(r.metrics.queued_s) for r in done)
+    waits = {r.uid: r.metrics.queue_wait for r in done}
+    assert all(w >= 0.0 for w in waits.values())
+    # max_batch=1 serializes: each later request queues behind the
+    # previous one's full service time
+    assert waits[2] >= waits[1] >= waits[0]
+    m = eng.metrics_summary()
+    assert m["mean_queue_wait_s"] == pytest.approx(
+        sum(waits.values()) / 3, rel=1e-6, abs=1e-9)
+
+
+def test_serve_cli_metrics_line_reports_truncation(capsys):
+    """The batch-mode CLI must surface truncated prompts on its metrics
+    line — a clipped response that prints as healthy is a silent wrong
+    answer."""
+    import warnings as _warnings
+
+    from repro.launch import serve
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("ignore", RuntimeWarning)
+        rc = serve.main(["--smoke", "--requests", "2", "--max-new", "3",
+                         "--prompt-len", "40", "--max-seq", "32",
+                         "--max-batch", "2"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "mean TTFT" in out and "mean queue wait" in out
+    assert "2 truncated prompts" in out
