@@ -407,6 +407,158 @@ def main_router(args) -> None:
 
 
 # ---------------------------------------------------------------------- #
+# fault tolerance: kill a replica mid-drain, assert bitwise recovery and
+# measure recovery latency + surviving-replica decode throughput
+# ---------------------------------------------------------------------- #
+
+def faults_workload(n_requests: int = 6, prompt_len: int = 32,
+                    new_tokens: int = 24) -> list[dict]:
+    """Mixed greedy/sampled request kwargs. Sampled requests carry
+    explicit seeds: the per-``(seed, len(generated))`` decode PRNG makes
+    their streams a pure function of the request, so a migrated
+    continuation on another replica draws the same tokens."""
+    out = []
+    for i in range(n_requests):
+        prompt = [1 + (5 * i + j) % (CFG.vocab_size - 1)
+                  for j in range(prompt_len)]
+        kw = dict(uid=i, prompt=prompt, max_new_tokens=new_tokens)
+        if i % 2:
+            kw.update(temperature=0.8, top_k=40, seed=1000 + i)
+        out.append(kw)
+    return out
+
+
+def run_faults_reference(kw_list: list[dict]) -> dict[int, list[int]]:
+    """Fault-free reference streams: the same requests through one
+    engine (placement never changes tokens — the router suite proves
+    that — so one replica is the canonical fault-free run)."""
+    eng = make_engine(2, 128, 16)
+    eng.submit(Request(uid=-1, prompt=[1] * 32, max_new_tokens=2))
+    eng.run_until_drained()
+    eng.completed.clear()
+    for kw in kw_list:
+        eng.submit(Request(**kw))
+    done = eng.run_until_drained()
+    return {r.uid: list(r.generated) for r in done}
+
+
+def make_faults_replicas():
+    """Two warmed replicas shared by all drills. The first drill's
+    migrations still compile the resume-prompt prefill widths on the
+    survivor (a resume prompt = original + generated tokens ends on
+    chunk widths the plain workload never hits); reusing the engines
+    means drills 2+ measure recovery mechanics, not jit compiles, and
+    the median discards the cold drill."""
+    from repro.serving.router import make_replica_engines
+    engines = make_replica_engines(
+        get_model(CFG), get_params(), replicas=2, use_meshes=False,
+        max_batch=2, max_seq=128, chunk=16)
+    for r, eng in enumerate(engines):   # warm both compiled shapes
+        eng.submit(Request(uid=-1 - r, prompt=[1] * 32, max_new_tokens=2))
+        eng.run_until_drained()
+        eng.completed.clear()
+        eng.prefix.evict(eng.num_blocks)
+    return engines
+
+
+def run_faults_chaos(kw_list: list[dict], engines, kill_step: int = 5):
+    """Submit the workload to 2 replicas, then kill replica 0 at its
+    ``kill_step``-th post-warmup step attempt (permanently — probes keep
+    failing). Returns (router, streams, migrated uids, per-uid emission
+    times)."""
+    from repro.serving.faults import Fault, FaultInjector
+    from repro.serving.router import Router
+    router = Router(engines, seed=7)
+    emit_t: dict[int, list[float]] = {}
+
+    def on_tokens(r, toks, done):
+        if toks:
+            emit_t.setdefault(r.uid, []).append(time.monotonic())
+
+    # everything submitted before the kill: the victim holds both active
+    # slots AND queued requests, so migration covers in-flight + queued
+    for kw in kw_list:
+        req = Request(**kw)
+        req.on_tokens = on_tokens
+        router.submit(req)
+    inj = FaultInjector(engines[0],
+                        [Fault(step=kill_step, kind="die", steps=0)])
+    inj.install()
+    try:
+        router.run_until_drained()
+    finally:
+        inj.uninstall()                 # next drill gets a live replica 0
+    streams = {r.uid: list(r.generated) for r in router.completed}
+    migrated = {r.uid for r in router.completed if r.migrated}
+    return router, streams, migrated, emit_t
+
+
+def main_faults(args) -> None:
+    """--faults suite: the PR-8 chaos drill. Kills 1 of 2 replicas
+    mid-drain via the deterministic injector and asserts the acceptance
+    criteria: every request completes with streams bitwise equal to the
+    fault-free run (greedy and sampled), zero leaked blocks on the
+    survivor, and recovery latency (death -> first migrated-token
+    emission) is reported and gated."""
+    n_req = 4 if args.smoke else 6
+    new_tok = 16 if args.smoke else 24
+    kill_step = 4 if args.smoke else 5
+    kw_list = faults_workload(n_req, new_tokens=new_tok)
+    ref = run_faults_reference(kw_list)
+    # median of 3 drills over SHARED engines for the gated wall-clock
+    # metrics: drill 1 pays the resume-shape compiles, the median keeps
+    # the warm drills (the structural assertions must hold on every one)
+    engines = make_faults_replicas()
+    recoveries, decs, n_migrated = [], [], 0
+    for _ in range(3):
+        router, streams, migrated, emit_t = run_faults_chaos(
+            kw_list, engines, kill_step=kill_step)
+        assert router.replica_deaths == 1, "the scripted kill must fire"
+        assert router.migration_failures == 0, \
+            "no request may fail to move"
+        assert migrated, "the kill must catch requests on the victim"
+        assert len(streams) == len(ref), (
+            f"lost requests: {sorted(set(ref) - set(streams))}")
+        for uid, toks in sorted(ref.items()):
+            assert streams[uid] == toks, (
+                f"request {uid}{' (migrated)' if uid in migrated else ''} "
+                f"diverged from the fault-free stream")
+        decs.append(engines[1].metrics_summary()["mean_decode_tok_per_s"])
+        # zero leaked blocks: the victim's actives were freed by harvest,
+        # the survivor drained normally; after a full prefix flush every
+        # non-garbage block must be free on both
+        for eng in engines:
+            assert eng.alloc.check_conservation()
+            live = {b for b in range(1, eng.num_blocks)
+                    if eng.alloc.refcount(b) > 0}
+            pinned = eng.prefix.registered_blocks()
+            assert live <= pinned, \
+                f"leaked blocks: {sorted(live - pinned)}"
+            eng.prefix.evict(eng.num_blocks)
+            assert eng.alloc.free_blocks == eng.num_blocks - 1, \
+                "blocks leaked after drain + prefix flush"
+            eng.completed.clear()       # drills reuse uids
+        death = router.last_death_t
+        post = [t for uid in migrated for t in emit_t.get(uid, [])
+                if t >= death]
+        assert post, "migrated requests must emit tokens after the death"
+        recoveries.append(min(post) - death)
+        n_migrated = len(migrated)
+    recovery = sorted(recoveries)[1]
+    dec = sorted(decs)[1]
+    emit("serving_faults/recovery_latency_s", recovery * 1e6,
+         f"{recovery * 1e3:.1f}ms from replica death to the first "
+         f"migrated-token emission ({n_migrated} requests moved)")
+    emit("serving_faults/migrated_requests", float(n_migrated),
+         f"{n_migrated}/{n_req} requests migrated off the victim, "
+         f"0 failures, streams bitwise equal")
+    emit("serving_faults/post_fault_decode_tok_per_s",
+         1e6 / max(dec, 1e-9),
+         f"{dec:.1f} tok/s decode on the survivor "
+         f"(absorbed the migrated backlog)")
+
+
+# ---------------------------------------------------------------------- #
 # tensor-parallel serving: TTFT / decode rate / per-device cache bytes
 # ---------------------------------------------------------------------- #
 
@@ -496,7 +648,16 @@ def main(argv=()) -> None:
                     help="run the multi-replica router suite instead "
                          "(asserts prefix-affinity beats random placement "
                          "and streams match a single-replica run)")
+    ap.add_argument("--faults", action="store_true",
+                    help="run the fault-tolerance chaos drill instead "
+                         "(kills 1 of 2 replicas mid-drain; asserts "
+                         "bitwise recovery and zero leaked blocks)")
     args = ap.parse_args(list(argv))
+    if args.faults:
+        main_faults(args)
+        if args.json:
+            write_json(args.json)
+        return
     if args.router:
         main_router(args)
         if args.json:

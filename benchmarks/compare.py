@@ -30,11 +30,13 @@ import re
 import sys
 
 # the gate covers exactly the regression surface the serving tier promises:
-# time-to-first-token, steady-state decode rate, and memory per device
+# time-to-first-token, steady-state decode rate, memory per device, and
+# (PR 8) how fast a replica death turns back into flowing tokens
 GATED = (
     re.compile(r"ttft"),
     re.compile(r"decode_tok_per_s"),
     re.compile(r"bytes_per_device"),
+    re.compile(r"recovery"),
 )
 
 DEFAULT_THRESHOLD = 1.20

@@ -41,6 +41,15 @@ class StragglerMonitor:
         self.n = 0
         self._flags: deque[bool] = deque(maxlen=patience)
 
+    def reset(self) -> None:
+        """Forget all statistics. A readmitted serving replica must not
+        inherit the step-time distribution that got it killed — its first
+        post-recovery step would z-score against stale history."""
+        self.ewma = None
+        self.ewvar = 0.0
+        self.n = 0
+        self._flags.clear()
+
     def observe(self, step_time_s: float) -> StragglerVerdict:
         self.n += 1
         if self.ewma is None:

@@ -69,6 +69,22 @@ Flags:
                    meshes, else replicas share the default device)
   --max-queue N    per-replica admission backpressure: POSTs get 503
                    once a replica's queue holds N requests (default 32)
+  --request-timeout S  default per-request wall-clock deadline in server
+                   mode: a stream with no completion within S seconds is
+                   cancelled (blocks freed) and fails with 504 semantics;
+                   a request's own "deadline_s" body field overrides it
+                   (0 = unbounded, the default)
+  --step-deadline S  replica health watchdog (multi-replica server mode):
+                   a replica whose step exceeds S seconds goes SUSPECT,
+                   twice consecutively goes DEAD — its queued + in-flight
+                   requests migrate bitwise to survivors and probes
+                   re-admit it when it recovers (0 = off, the default)
+  --shed-below F   graceful degradation: when the alive-replica fraction
+                   drops to <= F (and at least one replica is dead),
+                   requests at priority <= --shed-priority are shed with
+                   503 + Retry-After (default 0.5)
+  --shed-priority P  highest priority class shed under degradation
+                   (default 0)
 
 Per-request metrics (TTFT, queue wait, decode tok/s, prefix-hit tokens,
 speculative acceptance rate when --spec-k is on) print at the end.
@@ -136,6 +152,18 @@ def main(argv=None) -> int:
     ap.add_argument("--max-queue", type=int, default=32,
                     help="per-replica queue depth that triggers 503 "
                          "backpressure in server mode")
+    ap.add_argument("--request-timeout", type=float, default=0.0,
+                    help="default per-request deadline in seconds for "
+                         "server mode (0 = unbounded)")
+    ap.add_argument("--step-deadline", type=float, default=0.0,
+                    help="replica step-time deadline in seconds for the "
+                         "health watchdog (0 = off; multi-replica only)")
+    ap.add_argument("--shed-below", type=float, default=0.5,
+                    help="shed low-priority traffic when alive/total "
+                         "replicas <= this fraction")
+    ap.add_argument("--shed-priority", type=int, default=0,
+                    help="highest priority class shed under degraded "
+                         "capacity")
     kernel_modes = ["xla", "xla_chunked", "pallas", "pallas_interpret"]
     ap.add_argument("--kernels",
                     default=os.environ.get("REPRO_KERNELS") or None,
@@ -196,17 +224,26 @@ def main(argv=None) -> int:
         from repro.serving.router import Router, make_replica_engines
         if args.replicas < 1:
             ap.error(f"--replicas must be >= 1, got {args.replicas}")
+        router_kw = {}
+        if args.step_deadline > 0:
+            router_kw["step_deadline_s"] = args.step_deadline
         if args.replicas > 1:
             engines = make_replica_engines(
                 api, params, replicas=args.replicas, tp=args.tp,
                 **engine_kw)
-            target = Router(engines)
+            target = Router(engines, **router_kw)
             print(f"router: {args.replicas} replicas, prefix-affinity "
-                  f"routing, tp={args.tp} each", flush=True)
+                  f"routing, tp={args.tp} each"
+                  + (f", step deadline {args.step_deadline:g}s"
+                     if args.step_deadline > 0 else ""), flush=True)
         else:
             target = ServingEngine(api, params, tp=args.tp, **engine_kw)
-        fe = AsyncFrontend(target, host=args.host, port=args.port,
-                           max_queue=args.max_queue)
+        fe = AsyncFrontend(
+            target, host=args.host, port=args.port,
+            max_queue=args.max_queue,
+            request_timeout=args.request_timeout or None,
+            step_deadline_s=args.step_deadline or None,
+            shed_below=args.shed_below, shed_priority=args.shed_priority)
         fe.run_forever()
         return 0
 

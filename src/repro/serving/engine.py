@@ -187,6 +187,12 @@ class Request:
     # set by Scheduler.submit when the prompt was clipped to max_seq - 1:
     # the response continues a truncated prompt, not the one submitted
     truncated: bool = False
+    # terminal failure reason, set before the final on_tokens fires:
+    # deadline expiry, worker crash, failed migration, abandoned drain
+    error: str | None = None
+    # set by Router.harvest when a dead replica's request was moved to a
+    # survivor and resumed through the requeue-as-prefill path
+    migrated: bool = False
     metrics: RequestMetrics = dataclasses.field(default_factory=RequestMetrics)
 
 
@@ -248,6 +254,9 @@ class ServingEngine:
         self._prefill_fn = api.prefill if api.prefill is not None else (
             lambda t, s, p, l: api.decode_step(t, s, p))
         self.completed: list[Request] = []
+        # incremented by a crashing EngineWorker so the failure is visible
+        # in metrics_summary even when the dead replica completed nothing
+        self.worker_crashed = 0
 
         can_page = api.prefill_paged is not None and api.cache_spec.paged
         self.paged = can_page if paged is None else (paged and can_page)
@@ -450,6 +459,20 @@ class ServingEngine:
         """Enqueue a request (may raise when it can never fit the pool —
         see :meth:`Scheduler.submit`)."""
         self.scheduler.submit(req, time.monotonic())
+
+    def resubmit(self, req: Request) -> None:
+        """Adopt a request that already ran (and possibly generated
+        tokens) on another engine — replica death, worker crash. Its
+        generated tokens fold into a resume prompt via the scheduler's
+        requeue-as-prefill path, so the continued stream is bitwise the
+        uninterrupted one (see :meth:`Scheduler.resubmit`; raises
+        ValueError when the resume prompt can no longer fit)."""
+        self.scheduler.resubmit(req, time.monotonic())
+
+    def cancel(self, uid: int) -> bool:
+        """Drop a queued or active request by uid, freeing its blocks;
+        False when the uid is unknown (already completed — benign)."""
+        return self.scheduler.cancel(uid)
 
     def _admit(self, now: float) -> None:
         fresh = self.scheduler.admit(now)
@@ -694,7 +717,10 @@ class ServingEngine:
         excluded from the means, never averaged in)."""
         done = self.completed
         if not done:
-            return {}
+            # a replica whose worker crashed before completing anything
+            # must still surface the crash, not an empty summary
+            return ({"worker_crashed": float(self.worker_crashed)}
+                    if self.worker_crashed else {})
 
         def finite_mean(vals):
             vals = [v for v in vals if not math.isnan(v)]
@@ -714,6 +740,8 @@ class ServingEngine:
                 sum(1 for r in done if r.truncated)),
         }
         out.update(self.scheduler.stats())  # preemptions/requeues[/blocks]
+        if self.worker_crashed:
+            out["worker_crashed"] = float(self.worker_crashed)
         if self.paged:
             out["mean_prefix_hit_tokens"] = (
                 sum(r.metrics.prefix_hit_tokens for r in done) / len(done))

@@ -1,0 +1,216 @@
+"""Deterministic fault injection for the serving stack.
+
+Chaos testing is only useful when a chaos scenario is a *reproducible
+unit test*: "kill replica 0 at step 7" must mean the same thing on every
+run, on every machine, or a recovery bug found once can never be
+bisected. This module therefore injects faults by **step index**, never
+by wall clock: a :class:`FaultInjector` wraps an engine's ``step`` (an
+instance-attribute shadow of the bound method — the engine class is
+untouched, and an engine with no injector installed is byte-for-byte the
+stock engine) and consults a scripted :class:`FaultPlan` before every
+step attempt.
+
+Fault taxonomy
+--------------
+Three fault kinds cover the failure modes a replica actually exhibits in
+production, each mapped to the detection path that must catch it:
+
+* ``"die"`` — replica death. Every step attempt from ``step`` onward
+  raises :class:`ReplicaDead` (for ``steps = N > 0``, only attempts in
+  ``[step, step + N)`` — a replica that *recovers*, which is what
+  probe-based re-admission exists for). Models a crashed process or a
+  lost host. Detected by the step loop's exception path: the sync
+  :class:`~repro.serving.router.Router` driver marks the replica DEAD and
+  migrates; the async :class:`~repro.serving.frontend.EngineWorker`
+  crash handler does the same through its ``on_crash`` hook.
+* ``"error"`` — a single raised exception mid-step (:class:`InjectedError`
+  at exactly step ``step``). Models a transient blow-up (OOM retry, a
+  poisoned batch). Same detection path as death, but probes succeed
+  afterwards, so it exercises re-admission.
+* ``"stall"`` — a sustained slowdown: every step in ``[step, step +
+  steps)`` sleeps ``stall_s`` before running. The step *completes* —
+  nothing raises — so only the wall-time watchdogs can see it: the
+  router's step-deadline check and
+  :class:`~repro.distributed.resilience.StragglerMonitor` EWMA z-score
+  (HEALTHY -> SUSPECT -> DEAD), or the frontend's stuck-step watchdog
+  task.
+
+Faults fire at **step boundaries** (before the wrapped step runs). That
+is not a test simplification, it is the recovery contract: a step either
+completed — its tokens were appended and emitted — or it never ran.
+There is no half-step state to reason about, so the migration below can
+treat ``req.generated`` as the exact resume point.
+
+Why migration is bitwise exact
+------------------------------
+When a replica dies, the router harvests its queued *and* in-flight
+requests and resubmits them to survivors through the scheduler's
+requeue-as-prefill path (:meth:`~repro.serving.scheduler.Scheduler.
+resubmit` — the cross-replica face of :meth:`~repro.serving.scheduler.
+Scheduler.preempt`): the tokens generated so far fold into a resume
+prompt ``prompt + generated``, and the survivor re-prefills it like any
+fresh request. Exactness rests on three established invariants:
+
+1. **Replicas compute the same function** — same params, and steps are
+   batch-composition-independent, so *where* a request runs never
+   changes its logits (the PR 7 router bench asserts this bitwise).
+2. **Chunked prefill of ``prompt + generated`` reproduces the decode
+   state** — the PR 5 preemption tests assert a requeued victim's
+   continued stream equals the uninterrupted one.
+3. **The sampling PRNG is coordinate-keyed, not stateful** — every draw
+   is keyed by ``(seed, len(generated))``, with ``seed`` defaulting to
+   the request's uid. A migrated request's next draw uses the same
+   coordinates on the survivor as it would have used on the dead
+   replica, so sampled streams continue exactly (greedy is trivially
+   exact).
+
+Hence a completed stream is bitwise identical to a fault-free run —
+recovery costs latency (re-prefill of the resume prompt) but never
+correctness. The one refusal: a request whose resume prompt would exceed
+``max_seq - 1`` cannot migrate without dropping generated tokens, so it
+is failed loudly (it was within one position of its forced finish).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.serving.engine import ServingEngine
+
+KINDS = ("die", "error", "stall")
+
+
+class InjectedError(RuntimeError):
+    """A scripted transient mid-step exception (fault kind ``"error"``)."""
+
+
+class ReplicaDead(RuntimeError):
+    """A scripted replica death (fault kind ``"die"``): raised on every
+    step attempt inside the fault's window."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scripted fault: ``kind`` fires relative to the injector's
+    step-attempt counter (0-indexed, counted from :meth:`FaultInjector.
+    install`). ``steps`` is the window length — for ``"die"``, 0 means
+    forever (the replica never recovers); ``"error"`` always fires once,
+    at exactly ``step``; ``"stall"`` sleeps ``stall_s`` before each step
+    in the window."""
+    step: int
+    kind: str
+    stall_s: float = 0.0
+    steps: int = 1
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {KINDS}")
+        if self.step < 0:
+            raise ValueError(f"fault step must be >= 0, got {self.step}")
+        if self.kind == "stall" and not self.stall_s > 0.0:
+            raise ValueError("a stall fault needs stall_s > 0")
+        if self.steps < 0 or (self.steps == 0 and self.kind != "die"):
+            raise ValueError(f"steps={self.steps} invalid for "
+                             f"kind {self.kind!r} (0 = forever is "
+                             f"die-only)")
+
+
+class FaultPlan:
+    """A scripted chaos scenario: per-replica fault lists, keyed by
+    replica id. A plain list is shorthand for ``{0: faults}`` (single
+    engine). :meth:`install` arms one :class:`FaultInjector` per planned
+    replica."""
+
+    def __init__(self, faults: dict[int, list[Fault]] | list[Fault]):
+        if isinstance(faults, list):
+            faults = {0: faults}
+        for rid, fs in faults.items():
+            if rid < 0:
+                raise ValueError(f"replica id must be >= 0, got {rid}")
+            for f in fs:
+                if not isinstance(f, Fault):
+                    raise TypeError(f"replica {rid}: expected Fault, "
+                                    f"got {type(f).__name__}")
+        self.faults = {rid: list(fs) for rid, fs in faults.items()}
+
+    def for_replica(self, rid: int) -> list[Fault]:
+        return list(self.faults.get(rid, []))
+
+    def install(self, engines: list[ServingEngine]) -> list["FaultInjector"]:
+        """Arm injectors on ``engines`` (one per replica the plan names);
+        returns them so callers can inspect ``fired`` / uninstall."""
+        for rid in self.faults:
+            if rid >= len(engines):
+                raise ValueError(f"plan names replica {rid} but only "
+                                 f"{len(engines)} engines were given")
+        out = []
+        for rid, fs in sorted(self.faults.items()):
+            inj = FaultInjector(engines[rid], fs)
+            inj.install()
+            out.append(inj)
+        return out
+
+
+class FaultInjector:
+    """Wrap one engine's ``step`` to fire scripted faults by step index.
+
+    ``install()`` shadows ``engine.step`` with an instance attribute
+    (``uninstall()`` deletes it, restoring the class method — nothing
+    about the engine changes when no injector is armed). Every *step
+    attempt* — including attempts that raise, and empty probe steps —
+    advances the counter, so a death window of ``steps = N`` is consumed
+    by probes deterministically. ``fired`` records ``(attempt, kind)``
+    for every fault that triggered; ``sleep`` is injectable so stall
+    tests need not actually wait."""
+
+    def __init__(self, engine: ServingEngine, faults: list[Fault], *,
+                 sleep=time.sleep):
+        self.engine = engine
+        self.faults = list(faults)
+        self.steps = 0                    # step-attempt counter
+        self.fired: list[tuple[int, str]] = []
+        self._sleep = sleep
+        self._installed = False
+
+    @property
+    def installed(self) -> bool:
+        return self._installed
+
+    def install(self) -> "FaultInjector":
+        if self._installed:
+            raise RuntimeError("injector already installed")
+        if "step" in self.engine.__dict__:
+            raise RuntimeError("engine.step is already wrapped (one "
+                               "injector per engine)")
+        self._orig = self.engine.step     # bound class method
+        self.engine.step = self._step     # instance shadow
+        self._installed = True
+        return self
+
+    def uninstall(self) -> None:
+        if self._installed:
+            del self.engine.step          # unshadow the class method
+            self._installed = False
+
+    def _step(self) -> int:
+        i = self.steps
+        self.steps += 1
+        for f in self.faults:
+            if f.kind == "die":
+                if i >= f.step and (f.steps == 0 or i < f.step + f.steps):
+                    self.fired.append((i, "die"))
+                    raise ReplicaDead(
+                        f"injected replica death at step attempt {i} "
+                        f"(scripted at step {f.step})")
+            elif f.kind == "error":
+                if i == f.step:
+                    self.fired.append((i, "error"))
+                    raise InjectedError(
+                        f"injected step exception at step attempt {i}")
+            elif f.kind == "stall":
+                if f.step <= i < f.step + f.steps:
+                    self.fired.append((i, "stall"))
+                    self._sleep(f.stall_s)
+        return self._orig()

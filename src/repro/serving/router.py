@@ -53,17 +53,48 @@ replica is stepped by its own worker thread and :meth:`route` runs on the
 asyncio thread — its reads of replica state (``peek``, queue depth,
 ``would_admit``) are racy-but-safe: single dict/list reads under the GIL
 that can only yield a slightly stale *placement*, never corrupt state.
+
+Replica health (PR 8)
+---------------------
+Each replica carries a state machine ``HEALTHY -> SUSPECT -> DEAD`` plus
+probe-based re-admission. The signals: a per-replica
+:class:`~repro.distributed.resilience.StragglerMonitor` EWMA z-score on
+per-step wall time flags *sustained* slowdowns (SUSPECT — informational,
+it accelerates the deadline path but never changes routing), a hard
+step-deadline overrun escalates SUSPECT and then kills (two consecutive
+overruns -> DEAD), and any exception out of ``step`` kills immediately.
+A fast step heals SUSPECT back to HEALTHY. DEAD replicas are excluded
+from all routing — live-cache affinity, the cold ``keys[0]`` hash (which
+re-maps onto the live set), load fallback, random and round-robin — and
+their queued + in-flight requests are **migrated**: harvested off the
+dead scheduler (blocks freed host-side) and resubmitted to survivors
+through :meth:`~repro.serving.scheduler.Scheduler.resubmit`, the
+requeue-as-prefill path, so completed streams are bitwise identical to a
+fault-free run (see :mod:`repro.serving.faults` for the exactness
+argument). The sync driver probes DEAD replicas once per :meth:`step`
+(an empty ``step()`` attempt — a recovered replica stops raising);
+``probe_successes`` consecutive clean probes readmit it with a reset
+watchdog and a flushed prefix cache (post-crash cache contents are
+untrusted). With every replica HEALTHY all of this is inert: the routing
+pool is the full replica set and every decision is byte-for-byte the
+health-free router.
 """
 
 from __future__ import annotations
 
 import math
 import random
+import time
 
+from repro.distributed.resilience import StragglerMonitor
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.paged import prefix_keys
 
 POLICIES = ("affinity", "random", "round_robin")
+
+# replica health states (the full machine: HEALTHY <-> SUSPECT -> DEAD,
+# DEAD -> HEALTHY only through probe-based re-admission)
+HEALTHY, SUSPECT, DEAD = "healthy", "suspect", "dead"
 
 
 class Router:
@@ -77,7 +108,8 @@ class Router:
 
     def __init__(self, engines: list[ServingEngine], *,
                  policy: str = "affinity", imbalance: int = 2,
-                 seed: int = 0):
+                 seed: int = 0, step_deadline_s: float = 30.0,
+                 probe_successes: int = 2, auto_probe: bool = True):
         if not engines:
             raise ValueError("need at least one engine replica")
         if policy not in POLICIES:
@@ -116,6 +148,20 @@ class Router:
         # sync-driver bookkeeping: completed-list watermark per replica
         # (step() scans the tail for fresh completions to feed the EWMA)
         self._done_seen = [0] * len(engines)
+        # ---- replica health (HEALTHY -> SUSPECT -> DEAD + re-admission)
+        self.step_deadline_s = float(step_deadline_s)
+        self.probe_successes = int(probe_successes)
+        self.auto_probe = bool(auto_probe)
+        self.health = [HEALTHY] * len(engines)
+        self.health_reason = [""] * len(engines)
+        self.watchdog = [StragglerMonitor() for _ in engines]
+        self._probe_ok = [0] * len(engines)     # consecutive clean probes
+        self.death_t = [float("nan")] * len(engines)
+        self.last_death_t = float("nan")
+        self.replica_deaths = 0
+        self.readmissions = 0
+        self.migrated_requests = 0
+        self.migration_failures = 0
 
     # ------------------------------------------------------------------ #
     # load signals
@@ -141,18 +187,150 @@ class Router:
         self.ewma_ttft[rid] = (ttft_s if math.isnan(prev)
                                else (1 - alpha) * prev + alpha * ttft_s)
 
-    def _overloaded(self, rid: int, req: Request) -> bool:
+    def _overloaded(self, rid: int, req: Request,
+                    pool: list[int]) -> bool:
         """Is the hash-affine target a bad idea right now? True when its
-        depth exceeds the lightest replica's by more than ``imbalance``,
-        or when it cannot admit the request while some other replica can
-        (the scheduler's pure would_admit probe)."""
-        depths = [self.depth(r) for r in range(len(self.engines))]
-        if depths[rid] > min(depths) + self.imbalance:
+        depth exceeds the lightest live replica's by more than
+        ``imbalance``, or when it cannot admit the request while some
+        other live replica can (the scheduler's pure would_admit probe)."""
+        depths = {r: self.depth(r) for r in pool}
+        if depths[rid] > min(depths.values()) + self.imbalance:
             return True
         if not self.engines[rid].scheduler.would_admit(req):
-            return any(e.scheduler.would_admit(req)
-                       for r, e in enumerate(self.engines) if r != rid)
+            return any(self.engines[r].scheduler.would_admit(req)
+                       for r in pool if r != rid)
         return False
+
+    # ------------------------------------------------------------------ #
+    # replica health: HEALTHY -> SUSPECT -> DEAD, probe re-admission
+    # ------------------------------------------------------------------ #
+    def alive(self) -> list[int]:
+        """Replica ids eligible for routing (everything not DEAD; SUSPECT
+        is informational — a suspect replica still computes correctly,
+        just slowly, and yanking its traffic on a z-score would make
+        routing jitter-sensitive)."""
+        return [r for r, h in enumerate(self.health) if h != DEAD]
+
+    def record_step_time(self, rid: int, dt: float) -> None:
+        """Feed one observed step wall time into replica ``rid``'s
+        watchdog. A sustained straggler verdict (EWMA z-score) marks
+        SUSPECT; a hard ``step_deadline_s`` overrun marks SUSPECT and, on
+        a second consecutive overrun, DEAD (the caller migrates); a fast
+        step heals SUSPECT back to HEALTHY."""
+        if self.health[rid] == DEAD:
+            return
+        verdict = self.watchdog[rid].observe(dt)
+        if dt >= self.step_deadline_s:
+            if self.health[rid] == SUSPECT:
+                self.mark_dead(
+                    rid, f"step deadline: {dt:.3f}s >= "
+                         f"{self.step_deadline_s:.3f}s, sustained")
+            else:
+                self.health[rid] = SUSPECT
+                self.health_reason[rid] = (
+                    f"step deadline miss ({dt:.3f}s)")
+        elif verdict.is_straggler:
+            if self.health[rid] == HEALTHY:
+                self.health[rid] = SUSPECT
+                self.health_reason[rid] = (
+                    f"sustained straggler (z={verdict.z_score:.1f})")
+        elif self.health[rid] == SUSPECT:
+            self.health[rid] = HEALTHY
+            self.health_reason[rid] = ""
+
+    def mark_dead(self, rid: int, reason: str = "") -> None:
+        """Transition ``rid`` to DEAD (idempotent). Marks only — callers
+        that own the engine's thread follow up with :meth:`harvest` /
+        :meth:`migrate` to move its work."""
+        if self.health[rid] == DEAD:
+            return
+        self.health[rid] = DEAD
+        self.health_reason[rid] = reason
+        self.death_t[rid] = self.last_death_t = time.monotonic()
+        self._probe_ok[rid] = 0
+        self.replica_deaths += 1
+
+    def harvest(self, rid: int) -> list[Request]:
+        """Pull every in-flight and queued request off replica ``rid``,
+        freeing its host-side blocks (finish decrefs; a later revival
+        starts from a clean scheduler). Must run on whichever thread owns
+        the engine — the sync driver, or a crashed worker's own thread
+        after its step loop exited. Actives first (they hold generated
+        tokens — the oldest work), then the queue in scheduling order."""
+        sched = self.engines[rid].scheduler
+        out: list[Request] = []
+        for slot, req in enumerate(sched.active):
+            if req is None:
+                continue
+            sched.finish(slot)
+            out.append(req)
+        out.extend(sched.drain_queue())
+        for req in out:
+            req.migrated = True
+        return out
+
+    def place_migrated(self, req: Request,
+                       submit=None) -> int | None:
+        """Route one harvested request to a survivor and resubmit it
+        through the requeue-as-prefill path (bitwise resume — see
+        :mod:`repro.serving.faults`). ``submit(rid, req)`` overrides the
+        direct engine resubmit (the frontend hands off to worker inboxes
+        instead). Returns the target rid, or None when the request could
+        not be placed — no survivor, or a resume prompt that no longer
+        fits — in which case it is failed loudly (``req.error`` set, the
+        stream's final callback fired)."""
+        try:
+            rid = self.route(req)
+            if submit is None:
+                self.engines[rid].resubmit(req)
+            else:
+                submit(rid, req)
+        except (RuntimeError, ValueError, MemoryError) as e:
+            req.error = f"migration failed: {e}"
+            req.done = True
+            self.migration_failures += 1
+            if req.on_tokens is not None:
+                req.on_tokens(req, [], True)
+            return None
+        self.migrated_requests += 1
+        return rid
+
+    def migrate(self, rid: int, reason: str = "") -> int:
+        """Kill ``rid`` and move its work to survivors (the sync-driver
+        path: mark DEAD, harvest, re-route each request). Returns how
+        many requests were successfully migrated."""
+        self.mark_dead(rid, reason)
+        return sum(1 for req in self.harvest(rid)
+                   if self.place_migrated(req) is not None)
+
+    def probe(self, rid: int) -> bool:
+        """One liveness probe of a DEAD replica: attempt a (normally
+        empty) ``step()`` — a still-dead engine raises, a recovered one
+        no-ops. ``probe_successes`` consecutive clean probes readmit."""
+        try:
+            self.engines[rid].step()
+        except Exception:
+            self._probe_ok[rid] = 0
+            return False
+        self._probe_ok[rid] += 1
+        if self._probe_ok[rid] >= self.probe_successes:
+            self.readmit(rid)
+        return True
+
+    def readmit(self, rid: int) -> None:
+        """Bring a recovered replica back into the routing pool: fresh
+        watchdog statistics (the distribution that killed it is stale)
+        and a flushed prefix cache — after a real crash the pool's
+        contents are untrusted, and re-prefilling a cold cache is always
+        correct (prefix hits never change tokens, only latency)."""
+        self.health[rid] = HEALTHY
+        self.health_reason[rid] = ""
+        self.watchdog[rid].reset()
+        self._probe_ok[rid] = 0
+        self.readmissions += 1
+        sched = self.engines[rid].scheduler
+        if sched.prefix is not None:
+            sched.prefix.evict(sched.num_blocks)
 
     # ------------------------------------------------------------------ #
     # routing
@@ -160,47 +338,56 @@ class Router:
     def route(self, req: Request) -> int:
         """Pick the replica for ``req`` (records stats, mutates no
         replica state). The frontend calls this then submits to the
-        chosen replica's worker; :meth:`submit` does both for sync use."""
-        n = len(self.engines)
+        chosen replica's worker; :meth:`submit` does both for sync use.
+        DEAD replicas are excluded — with every replica alive the pool is
+        the full set and each policy's decision sequence is exactly the
+        health-free one. Raises RuntimeError when no replica is alive."""
+        pool = self.alive()
+        if not pool:
+            raise RuntimeError(
+                "no live replicas: every replica is marked dead")
         if self.policy == "random":
-            rid = self._rng.randrange(n)
+            rid = pool[self._rng.randrange(len(pool))]
         elif self.policy == "round_robin":
-            rid = self._rr % n
-            self._rr += 1
+            while True:
+                rid = self._rr % len(self.engines)
+                self._rr += 1
+                if self.health[rid] != DEAD:
+                    break
         else:
-            rid = self._route_affinity(req)
+            rid = self._route_affinity(req, pool)
         self.routed[rid] += 1
         return rid
 
-    def _route_affinity(self, req: Request) -> int:
-        n = len(self.engines)
+    def _route_affinity(self, req: Request, pool: list[int]) -> int:
         keys = (prefix_keys(req.prompt[: self.max_seq - 1],
                             self.block_size) if self._affine else [])
         if keys:
-            depths = [
-                len(e.scheduler.prefix.peek(keys))
-                if e.scheduler.prefix is not None else 0
-                for e in self.engines
-            ]
-            best = max(depths)
+            depths = {
+                r: (len(self.engines[r].scheduler.prefix.peek(keys))
+                    if self.engines[r].scheduler.prefix is not None else 0)
+                for r in pool
+            }
+            best = max(depths.values())
             if best > 0:
                 # a replica already holds this prefix: deepest hit wins,
                 # load breaks ties
-                rid = min((r for r in range(n) if depths[r] == best),
+                rid = min((r for r in pool if depths[r] == best),
                           key=self._load_key)
                 self.affinity_hits += 1
                 self.affinity_hit_blocks += best
                 return rid
-            # cold prefix: stable hash of the first block's key, so the
-            # whole prefix family converges on one replica
-            rid = int.from_bytes(keys[0][:8], "little") % n
-            if n > 1 and self._overloaded(rid, req):
+            # cold prefix: stable hash of the first block's key over the
+            # live pool, so the whole prefix family converges on one
+            # replica (and re-converges onto a survivor after a death)
+            rid = pool[int.from_bytes(keys[0][:8], "little") % len(pool)]
+            if len(pool) > 1 and self._overloaded(rid, req, pool):
                 self.load_fallbacks += 1
-                return min(range(n), key=self._load_key)
+                return min(pool, key=self._load_key)
             self.cold_affinity += 1
             return rid
         self.load_routed += 1
-        return min(range(n), key=self._load_key)
+        return min(pool, key=self._load_key)
 
     def submit(self, req: Request) -> int:
         """Route and enqueue; returns the chosen replica id."""
@@ -212,12 +399,33 @@ class Router:
     # sync driver (benchmarks/tests; the async frontend threads replicas)
     # ------------------------------------------------------------------ #
     def step(self) -> int:
-        """One step on every replica that has work; returns total active.
-        Also harvests fresh completions into the TTFT EWMA."""
+        """One step on every live replica that has work; returns total
+        active. Also harvests fresh completions into the TTFT EWMA. This
+        is where the sync driver's fault tolerance lives: a step that
+        raises kills the replica and migrates its work; a step whose wall
+        time trips the watchdog (:meth:`record_step_time`) does the same
+        once the state machine reaches DEAD; DEAD replicas are probed for
+        re-admission instead of stepped."""
         total = 0
         for rid, eng in enumerate(self.engines):
+            if self.health[rid] == DEAD:
+                if self.auto_probe:
+                    self.probe(rid)
+                continue
             if eng.has_work():
-                total += eng.step()
+                t0 = time.monotonic()
+                try:
+                    total += eng.step()
+                except Exception as e:
+                    self.migrate(rid, f"step raised: {e!r}")
+                    continue
+                self.record_step_time(rid, time.monotonic() - t0)
+                if self.health[rid] == DEAD:
+                    # the watchdog killed it on this step's wall time;
+                    # the step itself completed, so generated tokens are
+                    # consistent and the harvest resumes after them
+                    self.migrate(rid)
+                    continue
             done = eng.completed
             for req in done[self._done_seen[rid]:]:
                 self.observe_ttft(rid, req.metrics.ttft)
@@ -261,6 +469,12 @@ class Router:
             out["affinity_hit_rate"] = self.affinity_hits / keyed
         for rid, c in enumerate(self.routed):
             out[f"replica{rid}_routed"] = float(c)
+        out["replicas_alive"] = float(len(self.alive()))
+        if self.replica_deaths:
+            out["replica_deaths"] = float(self.replica_deaths)
+            out["migrated_requests"] = float(self.migrated_requests)
+            out["migration_failures"] = float(self.migration_failures)
+            out["readmissions"] = float(self.readmissions)
         return out
 
     def metrics_summary(self) -> dict[str, float]:
@@ -270,17 +484,21 @@ class Router:
         summaries = [(m, e) for m, e in summaries if m]
         out: dict[str, float] = {}
         if summaries:
-            total = sum(m["requests"] for m, _ in summaries)
+            # .get: a crashed replica with zero completions reports only
+            # {"worker_crashed": n} — it carries no request weight
+            total = sum(m.get("requests", 0.0) for m, _ in summaries)
             out["requests"] = total
             for key in ("mean_ttft_s", "mean_queue_wait_s",
                         "mean_decode_tok_per_s", "mean_prefix_hit_tokens"):
-                vals = [(m[key], m["requests"]) for m, _ in summaries
+                vals = [(m[key], m.get("requests", 0.0))
+                        for m, _ in summaries
                         if key in m and not math.isnan(m[key])]
-                if vals:
-                    w = sum(n for _, n in vals)
+                w = sum(n for _, n in vals)
+                if vals and w:
                     out[key] = sum(v * n for v, n in vals) / w
             for key in ("preemptions", "requeues", "truncated_requests",
-                        "spec_proposed", "spec_accepted"):
+                        "spec_proposed", "spec_accepted", "cancelled",
+                        "worker_crashed"):
                 s = sum(m.get(key, 0.0) for m, _ in summaries)
                 if key in summaries[0][0] or s:
                     out[key] = s

@@ -174,6 +174,7 @@ class Scheduler:
             deque() for _ in range(max_batch)]
         self.preemptions = 0              # victims evicted mid-flight
         self.requeues = 0                 # preempted requests re-admitted
+        self.cancelled = 0                # requests dropped via cancel()
         self.spec_proposed = 0            # speculative draft tokens verified
         self.spec_accepted = 0            # ... of which matched the stream
         self._placing: list[int] = []     # slots filled by the live admit
@@ -261,6 +262,76 @@ class Scheduler:
         self._ticket[req.uid] = self._seq
         self._enqueue(_Entry(req, self._seq, prompt, enq_t=now))
         self._seq += 1
+
+    def resubmit(self, req: "Request", now: float | None = None) -> None:
+        """Re-enqueue a request that already ran — and possibly generated
+        tokens — on ANOTHER engine: the cross-replica face of the
+        requeue-as-prefill path (replica death, worker crash). The
+        generated-so-far tokens fold into the resume prompt exactly as
+        :meth:`preempt` does locally, so the next admission re-prefills
+        ``prompt + generated`` and the per-``(seed, len(generated))``
+        PRNG stream continues bitwise. Metrics carry over (``submit_t``
+        is preserved so TTFT spans the failure); a fresh FIFO ticket is
+        issued — the original belonged to the dead engine's queue.
+
+        Raises ValueError when the resume prompt no longer fits
+        ``max_seq - 1``: such a request was within one position of its
+        forced finish, and migrating it would drop generated tokens and
+        corrupt the stream — fail it loudly instead (same finish-over-
+        evict rule as :meth:`_resumable`)."""
+        now = time.monotonic() if now is None else now
+        if req.uid in self._ticket:
+            raise ValueError(
+                f"request uid {req.uid} is already in flight here — uids "
+                f"must be unique among queued/active requests")
+        resume = req.prompt[: self.max_seq - 1] + req.generated
+        if len(resume) > self.max_seq - 1:
+            raise ValueError(
+                f"request {req.uid} cannot migrate: resume prompt of "
+                f"{len(resume)} tokens exceeds max_seq - 1 = "
+                f"{self.max_seq - 1} — resuming would drop generated "
+                f"tokens")
+        if self.paged:
+            need = self._entry_blocks(resume, req)
+            if need > self.num_blocks - 1:
+                raise ValueError(
+                    f"request {req.uid} needs {need} blocks; pool has "
+                    f"{self.num_blocks - 1} usable")
+        if req.metrics.submit_t == 0.0:
+            req.metrics.submit_t = now
+        self._ticket[req.uid] = self._seq
+        self._enqueue(_Entry(req, self._seq, resume, enq_t=now,
+                             resumed=bool(req.generated)))
+        self._seq += 1
+
+    def cancel(self, uid: int) -> bool:
+        """Drop a request wherever it is — queued or active — freeing its
+        blocks and ticket (client disconnect, deadline expiry). Returns
+        False when the uid is unknown (already completed or never
+        submitted): cancellation racing completion is benign."""
+        for entry in self._queue:
+            if entry.req.uid == uid:
+                self._dequeue(entry)
+                self._ticket.pop(uid, None)
+                self.cancelled += 1
+                return True
+        for slot, req in enumerate(self.active):
+            if req is not None and req.uid == uid:
+                self.finish(slot)
+                self.cancelled += 1
+                return True
+        return False
+
+    def drain_queue(self) -> list["Request"]:
+        """Remove and return every queued request in scheduling order,
+        dropping tickets and key memos — the router's migration harvest
+        pulls a dead replica's backlog through this."""
+        self._sort(time.monotonic())
+        entries = list(self._queue)
+        for entry in entries:
+            self._dequeue(entry)
+            self._ticket.pop(entry.req.uid, None)
+        return [e.req for e in entries]
 
     def _enqueue(self, entry: _Entry) -> None:
         if self.paged and self.prefix is not None:
@@ -610,6 +681,8 @@ class Scheduler:
     def stats(self) -> dict[str, float]:
         out = {"preemptions": float(self.preemptions),
                "requeues": float(self.requeues)}
+        if self.cancelled:
+            out["cancelled"] = float(self.cancelled)
         if self.paged:
             out["free_blocks"] = float(self.alloc.free_blocks)
         if self.spec_proposed:

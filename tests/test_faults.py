@@ -1,0 +1,652 @@
+"""Fault tolerance: deterministic injection, replica health, migration.
+
+Three layers, mirroring the PR-8 stack:
+
+* :class:`~repro.serving.faults.FaultInjector` semantics on a fake
+  engine — step-indexed firing, windows, install/uninstall hygiene.
+* Router health machine + stream-preserving migration on real engines
+  driven by the sync driver — the bitwise-exactness contract.
+* The async frontend's edge resilience over real sockets — crash-safe
+  workers, disconnect cancellation, deadlines, retry, shedding.
+
+Every chaos scenario is scripted by step index (never wall clock), so
+each test is a reproducible unit test of a specific failure.
+"""
+
+import asyncio
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as nn
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import (Fault, FaultInjector, FaultPlan,
+                                  InjectedError, ReplicaDead)
+from repro.serving.frontend import (AsyncFrontend, client_generate,
+                                    client_get, retry_delays)
+from repro.serving.router import (DEAD, HEALTHY, SUSPECT, Router,
+                                  make_replica_engines)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  head_dim=16, remat="none")
+
+_PARAMS_CACHE: dict[str, dict] = {}
+
+
+def init_params(cfg=CFG):
+    if cfg.name not in _PARAMS_CACHE:
+        api = get_model(cfg)
+        _PARAMS_CACHE[cfg.name] = nn.init(
+            lambda t: api.forward(t), jax.random.key(0),
+            jnp.zeros((1, 8), jnp.int32))
+    return _PARAMS_CACHE[cfg.name]
+
+
+def make_engine(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("chunk", 8)
+    return ServingEngine(get_model(CFG), init_params(), **kw)
+
+
+def make_replicas(n=2, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("chunk", 8)
+    return make_replica_engines(get_model(CFG), init_params(), replicas=n,
+                                use_meshes=False, **kw)
+
+
+def mixed_requests(n=6, plen=12, new=10):
+    """Mixed greedy/sampled request kwargs; sampled ones carry explicit
+    seeds so streams are placement-independent."""
+    out = []
+    for i in range(n):
+        kw = dict(uid=i, prompt=[1 + (5 * i + j) % 96 for j in range(plen)],
+                  max_new_tokens=new)
+        if i % 2:
+            kw.update(temperature=0.8, top_k=20, seed=100 + i)
+        out.append(kw)
+    return out
+
+
+def reference_streams(kw_list):
+    eng = make_engine()
+    for kw in kw_list:
+        eng.submit(Request(**kw))
+    return {r.uid: list(r.generated) for r in eng.run_until_drained()}
+
+
+def assert_no_leaks(eng):
+    """After a drain, every live non-garbage block must be prefix-pinned;
+    a full flush must free the whole pool."""
+    assert eng.alloc.check_conservation()
+    live = {b for b in range(1, eng.num_blocks)
+            if eng.alloc.refcount(b) > 0}
+    assert live <= eng.prefix.registered_blocks(), \
+        f"leaked blocks: {sorted(live - eng.prefix.registered_blocks())}"
+    eng.prefix.evict(eng.num_blocks)
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+
+
+# ---------------------------------------------------------------------- #
+# injector semantics (fake engine: pure step-counting)
+# ---------------------------------------------------------------------- #
+
+class FakeEngine:
+    def __init__(self):
+        self.steps_run = 0
+
+    def step(self):
+        self.steps_run += 1
+        return 0
+
+
+def drive(inj, n):
+    """n step attempts; returns the per-attempt outcome ('ok' or the
+    exception class name)."""
+    out = []
+    for _ in range(n):
+        try:
+            inj.engine.step()
+            out.append("ok")
+        except (ReplicaDead, InjectedError) as e:
+            out.append(type(e).__name__)
+    return out
+
+
+def test_error_fires_exactly_once():
+    eng = FakeEngine()
+    inj = FaultInjector(eng, [Fault(step=2, kind="error")]).install()
+    assert drive(inj, 5) == ["ok", "ok", "InjectedError", "ok", "ok"]
+    assert eng.steps_run == 4            # the faulted attempt never ran
+    assert inj.fired == [(2, "error")]
+
+
+def test_die_permanent_raises_forever():
+    eng = FakeEngine()
+    inj = FaultInjector(
+        eng, [Fault(step=1, kind="die", steps=0)]).install()
+    assert drive(inj, 5) == ["ok"] + ["ReplicaDead"] * 4
+    assert eng.steps_run == 1
+
+
+def test_die_window_recovers_after_n_attempts():
+    eng = FakeEngine()
+    inj = FaultInjector(
+        eng, [Fault(step=2, kind="die", steps=3)]).install()
+    # window [2, 5): attempts 2,3,4 raise — including failed probes,
+    # which also advance the counter — then the replica recovers
+    assert drive(inj, 7) == ["ok", "ok", "ReplicaDead", "ReplicaDead",
+                             "ReplicaDead", "ok", "ok"]
+    assert [a for a, _ in inj.fired] == [2, 3, 4]
+
+
+def test_stall_sleeps_but_step_completes():
+    eng = FakeEngine()
+    slept = []
+    inj = FaultInjector(eng, [Fault(step=1, kind="stall", stall_s=2.5,
+                                    steps=2)],
+                        sleep=slept.append).install()
+    assert drive(inj, 4) == ["ok"] * 4   # nothing raises
+    assert eng.steps_run == 4            # every step ran
+    assert slept == [2.5, 2.5]           # window [1, 3) slept first
+    assert inj.fired == [(1, "stall"), (2, "stall")]
+
+
+def test_install_uninstall_restores_stock_engine():
+    eng = FakeEngine()
+    stock = eng.step
+    inj = FaultInjector(eng, [Fault(step=0, kind="die", steps=0)])
+    assert not inj.installed
+    inj.install()
+    assert "step" in eng.__dict__        # instance shadow, class untouched
+    with pytest.raises(RuntimeError, match="already"):
+        inj.install()
+    with pytest.raises(RuntimeError, match="already wrapped"):
+        FaultInjector(eng, []).install()
+    inj.uninstall()
+    assert "step" not in eng.__dict__
+    assert eng.step == stock             # byte-for-byte the stock engine
+    eng.step()
+    assert eng.steps_run == 1
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="kind"):
+        Fault(step=0, kind="explode")
+    with pytest.raises(ValueError, match=">= 0"):
+        Fault(step=-1, kind="die")
+    with pytest.raises(ValueError, match="stall_s"):
+        Fault(step=0, kind="stall")
+    with pytest.raises(ValueError, match="die-only"):
+        Fault(step=0, kind="error", steps=0)
+
+
+def test_fault_plan_per_replica_install():
+    plan = FaultPlan({1: [Fault(step=0, kind="die", steps=0)]})
+    assert plan.for_replica(0) == []
+    assert len(plan.for_replica(1)) == 1
+    engines = [FakeEngine(), FakeEngine()]
+    (inj,) = plan.install(engines)
+    assert inj.engine is engines[1]
+    engines[0].step()                    # unplanned replica is untouched
+    with pytest.raises(ReplicaDead):
+        engines[1].step()
+    with pytest.raises(ValueError, match="only 1 engines"):
+        FaultPlan({1: []}).install([FakeEngine()])
+    # list shorthand targets replica 0
+    assert FaultPlan([Fault(step=0, kind="error")]).for_replica(0)
+
+
+# ---------------------------------------------------------------------- #
+# router health machine
+# ---------------------------------------------------------------------- #
+
+def test_deadline_strikes_suspect_then_dead():
+    router = Router(make_replicas(2), step_deadline_s=1.0)
+    router.record_step_time(0, 0.01)
+    assert router.health[0] == HEALTHY
+    router.record_step_time(0, 1.5)      # first overrun: one strike
+    assert router.health[0] == SUSPECT
+    assert "deadline" in router.health_reason[0]
+    router.record_step_time(0, 2.0)      # second consecutive: dead
+    assert router.health[0] == DEAD
+    assert router.replica_deaths == 1
+    assert router.alive() == [1]
+    # DEAD is sticky against further observations
+    router.record_step_time(0, 0.01)
+    assert router.health[0] == DEAD
+
+
+def test_deadline_miss_heals_on_fast_step():
+    router = Router(make_replicas(2), step_deadline_s=1.0)
+    router.record_step_time(0, 1.5)
+    assert router.health[0] == SUSPECT
+    router.record_step_time(0, 0.01)     # recovered before strike two
+    assert router.health[0] == HEALTHY
+    assert router.health_reason[0] == ""
+    assert router.replica_deaths == 0
+
+
+def test_sustained_straggler_marks_suspect_not_dead():
+    # below the hard deadline but way outside the step-time distribution:
+    # the EWMA z-score needs `patience` consecutive outliers to flag
+    router = Router(make_replicas(2), step_deadline_s=30.0)
+    # small jitter builds a nonzero EWMA variance for the z-score
+    for i in range(12):
+        router.record_step_time(0, 0.010 + (i % 3) * 0.0005)
+    for _ in range(2):
+        router.record_step_time(0, 0.500)
+    assert router.health[0] == HEALTHY   # not sustained yet
+    router.record_step_time(0, 0.500)
+    assert router.health[0] == SUSPECT
+    assert "straggler" in router.health_reason[0]
+    assert router.alive() == [0, 1]      # SUSPECT never changes routing
+    router.record_step_time(0, 0.010)
+    assert router.health[0] == HEALTHY
+
+
+def test_dead_replica_excluded_from_every_policy():
+    long_prompt = [5] * 40               # >= 1 block: affinity keys exist
+    for policy in ("affinity", "random", "round_robin"):
+        router = Router(make_replicas(2, block_size=16), policy=policy,
+                        seed=3)
+        router.mark_dead(0, "test")
+        for i in range(6):
+            prompt = long_prompt if i % 2 else [1 + i, 2, 3]
+            rid = router.route(Request(uid=i, prompt=prompt,
+                                       max_new_tokens=4))
+            assert rid == 1, f"policy {policy} routed to a dead replica"
+        router.mark_dead(1, "test")
+        with pytest.raises(RuntimeError, match="no live replicas"):
+            router.route(Request(uid=99, prompt=[1, 2],
+                                 max_new_tokens=4))
+
+
+def test_stats_surface_health_counters():
+    router = Router(make_replicas(2))
+    s = router.stats()
+    assert s["replicas_alive"] == 2.0
+    assert "replica_deaths" not in s     # healthy path: counters absent
+    router.mark_dead(0, "test")
+    s = router.stats()
+    assert s["replicas_alive"] == 1.0
+    assert s["replica_deaths"] == 1.0
+
+
+# ---------------------------------------------------------------------- #
+# migration: bitwise streams, zero leaks (sync driver)
+# ---------------------------------------------------------------------- #
+
+def test_replica_death_migrates_streams_bitwise():
+    kw_list = mixed_requests(6)
+    ref = reference_streams(kw_list)
+    engines = make_replicas(2)
+    router = Router(engines, seed=7)
+    for kw in kw_list:
+        router.submit(Request(**kw))
+    assert all(c > 0 for c in router.routed), \
+        "workload must exercise both replicas before the kill"
+    inj = FaultInjector(engines[0],
+                        [Fault(step=3, kind="die", steps=0)]).install()
+    done = router.run_until_drained()
+    assert inj.fired and inj.fired[0][1] == "die"
+    assert router.replica_deaths == 1
+    assert router.migration_failures == 0
+    assert router.migrated_requests > 0
+    streams = {r.uid: list(r.generated) for r in done}
+    assert streams == ref, \
+        "migrated streams must be bitwise the fault-free streams"
+    migrated = [r for r in done if r.migrated]
+    assert migrated and all(r.error is None for r in migrated)
+    assert_no_leaks(engines[1])          # survivor
+    assert_no_leaks(engines[0])          # victim: harvest freed its slots
+
+
+def test_mid_step_error_also_kills_and_migrates():
+    # a single raised exception is indistinguishable from death to the
+    # step loop: the replica is killed, work migrates, probes readmit it
+    kw_list = mixed_requests(4)
+    ref = reference_streams(kw_list)
+    engines = make_replicas(2)
+    router = Router(engines, seed=7, probe_successes=2)
+    for kw in kw_list:
+        router.submit(Request(**kw))
+    FaultInjector(engines[0], [Fault(step=2, kind="error")]).install()
+    done = router.run_until_drained()
+    assert router.replica_deaths == 1
+    assert "step raised" in router.health_reason[0] \
+        or router.health[0] == HEALTHY   # reason cleared on readmission
+    assert {r.uid: list(r.generated) for r in done} == ref
+    # probes succeed after the one-shot error: the replica is readmitted
+    assert router.readmissions == 1
+    assert router.health[0] == HEALTHY
+
+
+def test_die_window_probe_readmission_and_reuse():
+    kw_list = mixed_requests(6)
+    ref = reference_streams(kw_list)
+    engines = make_replicas(2)
+    router = Router(engines, seed=7, probe_successes=2)
+    for kw in kw_list:
+        router.submit(Request(**kw))
+    # dies at attempts [2, 5): the kill, then 2 failed probes, then clean
+    # probes readmit — all deterministic in step attempts
+    inj = FaultInjector(engines[0],
+                        [Fault(step=2, kind="die", steps=3)]).install()
+    done = router.run_until_drained()
+    assert {r.uid: list(r.generated) for r in done} == ref
+    assert router.replica_deaths == 1
+    assert router.readmissions == 1
+    assert router.health[0] == HEALTHY
+    assert router.watchdog[0].n == 0     # fresh statistics after readmit
+    assert inj.fired[-1][1] == "die"
+    # the readmitted replica serves new traffic again
+    n0 = len(engines[0].completed)
+    for i in range(4):
+        router.submit(Request(uid=100 + i, prompt=[2 + i, 3, 5],
+                              max_new_tokens=4))
+    router.run_until_drained()
+    assert len(engines[0].completed) > n0, \
+        "readmitted replica never served again"
+
+
+def test_stall_trips_deadline_watchdog_and_migrates():
+    # the stall fault raises nothing — only the wall-time deadline can
+    # catch it. Two stalled steps = two strikes = dead + migration; once
+    # the window passes, probes readmit.
+    kw_list = mixed_requests(4)
+    ref = reference_streams(kw_list)
+    engines = make_replicas(2)
+    router = Router(engines, seed=7, step_deadline_s=0.04,
+                    probe_successes=2)
+    for kw in kw_list:
+        router.submit(Request(**kw))
+    FaultInjector(engines[0], [Fault(step=0, kind="stall", stall_s=0.06,
+                                     steps=4)]).install()
+    done = router.run_until_drained()
+    assert router.replica_deaths == 1
+    assert "deadline" in dict(enumerate(router.health_reason)).get(0, "") \
+        or router.health[0] == HEALTHY
+    assert {r.uid: list(r.generated) for r in done} == ref
+    assert_no_leaks(engines[1])
+
+
+def test_non_resumable_request_fails_loudly():
+    # a request within one position of max_seq cannot fold its generated
+    # tokens back into a resume prompt — migration must refuse, not
+    # silently truncate
+    engines = make_replicas(2)
+    router = Router(engines)
+    req = Request(uid=0, prompt=list(range(1, 41)), max_new_tokens=40)
+    req.generated = [3] * 30             # 40 + 30 > max_seq - 1 = 63
+    fired = []
+    req.on_tokens = lambda r, toks, done: fired.append((list(toks), done))
+    assert router.place_migrated(req) is None
+    assert router.migration_failures == 1
+    assert "cannot migrate" in req.error
+    assert fired == [([], True)], "the stream must fail loudly"
+
+
+def test_scheduler_resubmit_rejects_duplicates_and_counts_cancels():
+    eng = make_engine()
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    with pytest.raises(ValueError, match="uid 0"):
+        eng.resubmit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    assert eng.cancel(0) is True
+    assert eng.cancel(0) is False        # already gone: benign
+    assert eng.scheduler.cancelled == 1
+    assert eng.metrics_summary().get("cancelled", 1.0) == 1.0 \
+        or not eng.completed             # summary empty with 0 completions
+
+
+# ---------------------------------------------------------------------- #
+# frontend: crash-safe workers, disconnects, deadlines, retry, shedding
+# ---------------------------------------------------------------------- #
+
+def serve(target, scenario, **fe_kw):
+    fe_kw.setdefault("idle_wait", 0.002)
+
+    async def _main():
+        fe = AsyncFrontend(target, port=0, **fe_kw)
+        await fe.start()
+        try:
+            return fe, await scenario(fe)
+        finally:
+            await fe.shutdown()
+
+    return asyncio.run(_main())
+
+
+def test_worker_crash_migrates_streams_to_survivor():
+    kw_list = mixed_requests(6, new=8)
+    ref = reference_streams(kw_list)
+    engines = make_replicas(2, max_batch=3)
+    router = Router(engines, seed=7)
+    FaultInjector(engines[0],
+                  [Fault(step=2, kind="die", steps=0)]).install()
+
+    async def scenario(fe):
+        return await asyncio.gather(*[
+            client_generate("127.0.0.1", fe.port, prompt=kw["prompt"],
+                            max_new_tokens=kw["max_new_tokens"],
+                            temperature=kw.get("temperature", 0.0),
+                            top_k=kw.get("top_k", 0),
+                            seed=kw.get("seed", uid))
+            for uid, kw in enumerate(kw_list)])
+
+    fe, outs = serve(router, scenario)
+    # every stream completed despite the replica death, tokens bitwise
+    # (seeds pinned to the reference uids, so server-side uid order is
+    # irrelevant to sampled streams; greedy is uid-free anyway)
+    by_prompt = {tuple(kw["prompt"]): ref[kw["uid"]] for kw in kw_list}
+    for uid, out in enumerate(outs):
+        assert out["http_status"] == 200, out
+        assert "error" not in out, out
+        assert out["tokens"] == by_prompt[tuple(kw_list[uid]["prompt"])], \
+            "a migrated stream diverged from the fault-free run"
+    assert fe.stats.workers_crashed == 1
+    assert fe.workers[0].crashed
+    assert fe.stats.requests_migrated > 0
+    assert router.health[0] == DEAD
+    assert engines[0].worker_crashed == 1
+    assert_no_leaks(engines[1])
+
+
+def test_worker_crash_without_survivor_fails_streams_loudly():
+    eng = make_engine()
+    FaultInjector(eng, [Fault(step=1, kind="die", steps=0)]).install()
+
+    async def scenario(fe):
+        outs = await asyncio.gather(*[
+            client_generate("127.0.0.1", fe.port, prompt=[1 + i, 2, 3],
+                            max_new_tokens=32) for i in range(3)])
+        metrics = await client_get("127.0.0.1", fe.port, "/metrics")
+        return outs, metrics
+
+    fe, (outs, metrics) = serve(eng, scenario)
+    for out in outs:
+        assert "worker crashed" in out["error"], \
+            "streams must fail loudly, not hang"
+    assert fe.stats.workers_crashed == 1
+    assert fe.stats.requests_failed == 3
+    assert metrics["worker_crashed"] == 1.0
+    assert metrics["frontend_workers_crashed"] == 1.0
+
+
+def test_client_disconnect_cancels_and_frees_blocks():
+    eng = make_engine(max_batch=1, max_seq=256, chunk=8)
+
+    async def scenario(fe):
+        # hand-rolled dropper: read the SSE stream's first event, vanish
+        reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                       fe.port)
+        body = b'{"prompt": [1, 2, 3], "max_new_tokens": 200}'
+        writer.write(
+            (f"POST /generate HTTP/1.1\r\nHost: x\r\n"
+             f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        await writer.drain()
+        while True:                       # first data event = mid-stream
+            line = await asyncio.wait_for(reader.readline(), 10.0)
+            if line.startswith(b"data:"):
+                break
+        writer.close()
+        # the next SSE write hits the dead socket -> cancel path; wait
+        # for the engine to actually drop the request
+        for _ in range(400):
+            if not eng.has_work() and fe.stats.requests_cancelled:
+                break
+            await asyncio.sleep(0.01)
+        return None
+
+    fe, _ = serve(eng, scenario)
+    assert fe.stats.requests_cancelled == 1
+    assert eng.scheduler.cancelled == 1
+    done = eng.completed
+    assert not done or all(len(r.generated) < 200 for r in done)
+    assert_no_leaks(eng)                 # zero leaked blocks after cancel
+
+
+def test_request_deadline_times_out_with_504():
+    eng = make_engine(max_batch=1, max_seq=512, chunk=8)
+
+    async def scenario(fe):
+        out = await client_generate("127.0.0.1", fe.port, stream=False,
+                                    prompt=[1, 2, 3],
+                                    max_new_tokens=400, deadline_s=0.25)
+        for _ in range(400):
+            if not eng.has_work():
+                break
+            await asyncio.sleep(0.01)
+        return out
+
+    fe, out = serve(eng, scenario)
+    assert out["http_status"] == 504
+    assert "deadline exceeded" in out["error"]
+    assert fe.stats.requests_timed_out == 1
+    assert eng.scheduler.cancelled == 1, \
+        "an expired request must stop generating"
+    assert_no_leaks(eng)
+
+
+def test_retry_delays_deterministic_backoff():
+    class FixedRng:
+        def random(self):
+            return 0.5
+
+    ds = list(retry_delays(5, base_s=0.1, cap_s=0.5, jitter=0.2,
+                           rng=FixedRng()))
+    # min(cap, base * 2^i) * (1 + 0.2 * 0.5) = [.1, .2, .4, .5, .5] * 1.1
+    assert ds == pytest.approx([0.11, 0.22, 0.44, 0.55, 0.55])
+    assert list(retry_delays(0)) == []
+
+
+def test_client_retries_transient_503():
+    async def scenario(fe):
+        rejected = await client_generate(
+            "127.0.0.1", fe.port, prompt=[1, 2], max_new_tokens=4,
+            retries=2, retry_base_s=0.005, retry_jitter=0.0)
+        return rejected
+
+    # max_queue=0 rejects every attempt: the client retries then reports
+    fe, out = serve(make_engine(), scenario, max_queue=0)
+    assert out["http_status"] == 503
+    assert out["attempts"] == 3
+    assert fe.stats.requests_rejected == 3
+
+    # healthy server: exactly one attempt
+    _, ok = serve(make_engine(),
+                  lambda fe: client_generate(
+                      "127.0.0.1", fe.port, prompt=[1, 2],
+                      max_new_tokens=4, retries=2))
+    assert ok["http_status"] == 200
+    assert ok["attempts"] == 1
+
+
+def test_degraded_pool_sheds_low_priority_only():
+    engines = make_replicas(2)
+    router = Router(engines, seed=7)
+    router.mark_dead(0, "test")          # 1/2 alive <= shed_below=0.5
+
+    async def scenario(fe):
+        low = await client_generate("127.0.0.1", fe.port, prompt=[1, 2],
+                                    max_new_tokens=4, priority=0)
+        hi = await client_generate("127.0.0.1", fe.port, prompt=[1, 2],
+                                   max_new_tokens=4, priority=1)
+        health = await client_get("127.0.0.1", fe.port, "/health")
+        return low, hi, health
+
+    fe, (low, hi, health) = serve(router, scenario)
+    assert low["http_status"] == 503
+    assert "degraded" in low["error"]
+    assert hi["http_status"] == 200      # high priority rides through
+    assert hi["replica"] == 1
+    assert fe.stats.requests_shed == 1
+    assert health["replica_health"] == ["dead", "healthy"]
+
+
+def test_healthy_pool_never_sheds():
+    router = Router(make_replicas(2), seed=7)
+
+    async def scenario(fe):
+        return await client_generate("127.0.0.1", fe.port, prompt=[1, 2],
+                                     max_new_tokens=4, priority=0)
+
+    fe, out = serve(router, scenario, shed_below=1.0)
+    assert out["http_status"] == 200     # all alive: shedding is inert
+    assert fe.stats.requests_shed == 0
+
+
+def test_stuck_step_watchdog_quarantines_and_migrates():
+    # a real in-step stall (the injector's sleep), caught by the async
+    # watchdog task polling step_started_t: the worker is marked DEAD for
+    # routing, then quarantined -> crash path -> migration to replica 1
+    kw_list = mixed_requests(4, plen=8, new=8)
+    ref = reference_streams(kw_list)
+    engines = make_replicas(2, max_batch=2, chunk=4)
+    # warm EVERY compiled shape the workload can hit BEFORE arming the
+    # watchdog: greedy + sampled decode compile distinct graphs, and a
+    # migrated resume prompt (len 9..16) ends on any chunk width 1..4.
+    # A first-step jit compile stalls inside one step for real, and the
+    # deadline cannot tell compilation from a hang (deliberately so —
+    # production sets step_deadline_s far above compile time).
+    for eng in engines:
+        for i, (plen, sampled) in enumerate(
+                (p, s) for p in range(8, 12) for s in (False, True)):
+            kw = dict(uid=-100 - i, max_new_tokens=4,
+                      prompt=[1 + j % 96 for j in range(plen)])
+            if sampled:
+                kw.update(temperature=0.8, top_k=20, seed=7)
+            eng.submit(Request(**kw))
+            eng.run_until_drained()
+        eng.completed.clear()
+        eng.prefix.evict(eng.num_blocks)
+    router = Router(engines, seed=7)
+    FaultInjector(engines[0], [Fault(step=2, kind="stall", stall_s=0.8,
+                                     steps=1)]).install()
+
+    async def scenario(fe):
+        return await asyncio.gather(*[
+            client_generate("127.0.0.1", fe.port, prompt=kw["prompt"],
+                            max_new_tokens=kw["max_new_tokens"],
+                            temperature=kw.get("temperature", 0.0),
+                            top_k=kw.get("top_k", 0),
+                            seed=kw.get("seed", uid), timeout=60.0)
+            for uid, kw in enumerate(kw_list)])
+
+    fe, outs = serve(router, scenario, step_deadline_s=0.15)
+    by_prompt = {tuple(kw["prompt"]): ref[kw["uid"]] for kw in kw_list}
+    for uid, out in enumerate(outs):
+        assert out["http_status"] == 200
+        assert "error" not in out, out
+        assert out["tokens"] == by_prompt[tuple(kw_list[uid]["prompt"])]
+    assert router.health[0] == DEAD
+    assert "stuck" in router.health_reason[0]
+    assert fe.workers[0].crashed         # WorkerQuarantined -> crash path
+    assert fe.stats.workers_crashed == 1

@@ -1,9 +1,19 @@
 
-"""Straggler monitor + elastic mesh policy."""
+"""Straggler monitor + elastic mesh policy.
 
+PR 8 additions: the two resilience primitives against their real
+consumers — :class:`ElasticPolicy` choices must be realizable as the
+disjoint replica meshes :func:`make_replica_meshes` carves, and
+:class:`StragglerMonitor` must drive the router health machine
+(HEALTHY <-> SUSPECT) without ever shrinking the routing pool on its
+own (only hard step-deadline overruns escalate to DEAD).
+"""
+
+import jax
 import pytest
 
 from repro.distributed.resilience import ElasticPolicy, StragglerMonitor
+from repro.serving.router import DEAD, HEALTHY, SUSPECT, Router
 
 
 def test_steady_state_no_flags():
@@ -43,3 +53,98 @@ def test_elastic_policy_raises_when_infeasible():
     pol = ElasticPolicy(model_axis=16, min_data=2)
     with pytest.raises(RuntimeError):
         pol.choose(16)
+
+
+def test_elastic_policy_never_overcommits_survivors():
+    # pure property: whatever the loss, the chosen mesh fits on what is
+    # left, keeps power-of-two axes, and preserves the model axis while
+    # survivors can still hold it
+    pol = ElasticPolicy(model_axis=4)
+    for chips in range(1, 65):
+        c = pol.choose(chips)
+        data, model = c.shape
+        assert c.chips == data * model <= chips
+        assert data & (data - 1) == 0 and model & (model - 1) == 0
+        if chips >= 4:
+            assert model == 4
+
+
+def test_elastic_policy_shapes_realizable_as_replica_meshes():
+    # the policy's (data, model) choice is not abstract: data = replica
+    # count, model = tp, and make_replica_meshes must be able to carve
+    # exactly that many disjoint (1, tp) slices out of the survivors
+    if jax.device_count() < 8:
+        pytest.skip("needs >= 8 devices (REPRO_HOST_DEVICES)")
+    from repro.launch.mesh import make_replica_meshes
+    tp = 2
+    pol = ElasticPolicy(model_axis=tp)
+    for survivors in (4, 3, 2, 1):     # replicas left after deaths
+        choice = pol.choose(survivors * tp)
+        data, model = choice.shape
+        assert model == tp             # model axis survives replica loss
+        assert data <= survivors
+        meshes = make_replica_meshes(data, tp=model)
+        assert len(meshes) == data
+        seen: set = set()
+        for m in meshes:
+            assert m.devices.shape == (1, model)
+            assert m.axis_names == ("data", "model")
+            devs = set(m.devices.flat)
+            assert not (devs & seen), "replica meshes must be disjoint"
+            seen |= devs
+        assert len(seen) == choice.chips <= survivors * tp
+
+
+class _Replica:
+    """Just enough engine surface for Router health bookkeeping."""
+    max_seq = 64
+    paged = False
+    block_size = 8
+
+    class scheduler:
+        prefix = None
+
+
+def _warmed_router(**kw) -> Router:
+    r = Router([_Replica(), _Replica()], policy="round_robin", **kw)
+    # jittered fast steps: the EWMA needs real variance before z-scores
+    # mean anything (constant inputs leave ewvar at zero)
+    for i in range(30):
+        r.record_step_time(0, 0.010 + (i % 3) * 0.0005)
+        r.record_step_time(1, 0.010 + (i % 3) * 0.0005)
+    return r
+
+
+def test_straggler_verdict_suspects_but_never_sheds():
+    # sustained slowness *below* the hard deadline: the monitor flags,
+    # the router marks SUSPECT — and keeps routing there (SUSPECT is
+    # diagnostic; only DEAD shrinks the pool)
+    r = _warmed_router(step_deadline_s=30.0)
+    for _ in range(10):
+        r.record_step_time(0, 0.2)
+    assert r.health[0] == SUSPECT
+    assert "straggler" in r.health_reason[0]
+    assert r.alive() == [0, 1]
+    # back to nominal speed: heals without a probe cycle
+    for i in range(5):
+        r.record_step_time(0, 0.010 + (i % 3) * 0.0005)
+    assert r.health[0] == HEALTHY
+    assert r.health_reason[0] == ""
+
+
+def test_deadline_overrun_escalates_and_readmit_resets_watchdog():
+    r = _warmed_router(step_deadline_s=0.1)
+    n_before = r.watchdog[0].n
+    r.record_step_time(0, 0.5)         # first overrun: strike
+    assert r.health[0] == SUSPECT
+    r.record_step_time(0, 0.5)         # second consecutive: dead
+    assert r.health[0] == DEAD
+    assert "sustained" in r.health_reason[0]
+    assert r.alive() == [1]
+    r.readmit(0)
+    assert r.health[0] == HEALTHY
+    assert r.alive() == [0, 1]
+    # the statistics that condemned it are stale — readmission must not
+    # inherit them
+    assert r.watchdog[0].n == 0 < n_before
+    assert r.watchdog[1].n == n_before   # untouched replica keeps its history
