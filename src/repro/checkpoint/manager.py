@@ -157,3 +157,84 @@ class CheckpointManager:
         if step is None:
             return None
         return step, self.restore(step, template, shardings)
+
+
+class PrefixStore:
+    """Disk tier of the tiered KV cache: persisted prefix blocks.
+
+    One directory holds one store: ``prefix_store.npz`` (every block of
+    every entry, keyed ``<digest hex>|<leaf path>``) plus ``meta.json``
+    (CRC of the npz, the per-request priorities, and the pool *layout* —
+    block size, cache family, per-leaf block shapes/dtypes). The layout
+    is the compatibility contract: a store written by an engine with a
+    different block size, model or dtype is useless bytes, and ``load``
+    raises rather than let them near a page table. Writes follow the
+    manager's atomic idiom (tmp dir + ``os.replace``) so a killed writer
+    never corrupts the previous store.
+
+    Callers (the engine's warm-restart path) treat ANY load failure —
+    missing, corrupt, layout mismatch — as "serve cold": this class
+    raises precisely typed errors; it never half-loads.
+    """
+
+    NPZ = "prefix_store.npz"
+    META = "meta.json"
+
+    def __init__(self, directory: str | os.PathLike):
+        self.dir = pathlib.Path(directory)
+
+    def save(self, entries: dict[bytes, tuple[int, dict[str, np.ndarray]]],
+             layout: dict) -> None:
+        """Atomically write ``{digest: (priority, {leaf: block array})}``."""
+        self.dir.mkdir(parents=True, exist_ok=True)
+        tmp = self.dir / f".tmp-{secrets.token_hex(4)}"
+        tmp.mkdir()
+        try:
+            arrays: dict[str, np.ndarray] = {}
+            priorities: dict[str, int] = {}
+            for key, (pri, data) in entries.items():
+                hexkey = key.hex()
+                if pri:
+                    priorities[hexkey] = int(pri)
+                for path, arr in data.items():
+                    arrays[f"{hexkey}|{path}"] = np.asarray(arr)
+            npz = tmp / self.NPZ
+            np.savez(npz, **arrays)
+            crc = zlib.crc32(npz.read_bytes()) & 0xFFFFFFFF
+            meta = {"crc32": crc, "n_entries": len(entries),
+                    "priorities": priorities, "layout": layout}
+            (tmp / self.META).write_text(json.dumps(meta, indent=1))
+            os.replace(tmp / self.NPZ, self.dir / self.NPZ)
+            os.replace(tmp / self.META, self.dir / self.META)
+        finally:
+            if tmp.exists():
+                import shutil
+                shutil.rmtree(tmp, ignore_errors=True)
+
+    def load(self, expected_layout: dict
+             ) -> dict[bytes, tuple[int, dict[str, np.ndarray]]]:
+        """Load and verify. Raises ``FileNotFoundError`` when no store
+        exists, ``IOError`` on CRC mismatch, ``ValueError`` on layout
+        mismatch — the warm-restart caller maps all three to serve-cold."""
+        npz_path = self.dir / self.NPZ
+        meta_path = self.dir / self.META
+        if not npz_path.exists() or not meta_path.exists():
+            raise FileNotFoundError(f"no prefix store in {self.dir}")
+        meta = json.loads(meta_path.read_text())
+        crc = zlib.crc32(npz_path.read_bytes()) & 0xFFFFFFFF
+        if crc != meta.get("crc32"):
+            raise IOError(f"prefix store {npz_path} failed integrity check")
+        if meta.get("layout") != expected_layout:
+            raise ValueError(
+                f"prefix store layout mismatch: stored "
+                f"{meta.get('layout')}, engine expects {expected_layout}")
+        priorities = meta.get("priorities", {})
+        out: dict[bytes, tuple[int, dict[str, np.ndarray]]] = {}
+        with np.load(npz_path) as z:
+            for name in z.files:
+                hexkey, path = name.split("|", 1)
+                key = bytes.fromhex(hexkey)
+                if key not in out:
+                    out[key] = (int(priorities.get(hexkey, 0)), {})
+                out[key][1][path] = z[name]
+        return out

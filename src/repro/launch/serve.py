@@ -33,6 +33,15 @@ Flags:
                    max-seq); admission is gated on free blocks
   --no-paged       force the PR-1 dense per-slot cache layout
   --no-prefix-cache  disable cross-request prompt-prefix block reuse
+  --host-cache-gb G  tiered KV cache: size a host-RAM spill pool to G GiB;
+                   cold registered prefixes spill there under eviction
+                   pressure and fetch back into HBM on a hit (0 = off)
+  --host-cache-blocks N  size the host pool in blocks exactly (tests and
+                   benches; overrides --host-cache-gb)
+  --kv-store DIR   persist registered prefix chains to DIR at the end of a
+                   batch run and warm-load them (into the host tier) at
+                   startup — digest-keyed, CRC'd, layout-checked; a stale
+                   or corrupt store logs a warning and serves cold
   --kernels MODE   kernel mode for the jitted step: xla (default; gather-
                    then-dense paged references), xla_chunked, pallas (Pallas
                    paged-attention page-table walk — real TPUs only), or
@@ -121,6 +130,14 @@ def main(argv=None) -> int:
     ap.add_argument("--no-paged", action="store_true",
                     help="use the dense per-slot cache layout")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--host-cache-gb", type=float, default=0.0,
+                    help="host-RAM spill tier size in GiB (0 = no tier)")
+    ap.add_argument("--host-cache-blocks", type=int, default=0,
+                    help="host-RAM spill tier size in blocks (overrides "
+                         "--host-cache-gb; 0 = use the GiB sizing)")
+    ap.add_argument("--kv-store", default=None,
+                    help="directory for the persistent prefix store "
+                         "(warm restarts; None = off)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel width (devices per engine)")
     ap.add_argument("--scheduler", default="priority",
@@ -216,7 +233,10 @@ def main(argv=None) -> int:
                      scheduler=args.scheduler,
                      aging_s=args.sched_aging,
                      spec_k=0 if args.no_spec else args.spec_k,
-                     spec_ngram=args.spec_ngram)
+                     spec_ngram=args.spec_ngram,
+                     host_cache_blocks=args.host_cache_blocks or None,
+                     host_cache_gb=args.host_cache_gb,
+                     kv_store=args.kv_store)
 
     if args.port is not None:
         # server mode: HTTP/SSE frontend, optional multi-replica router
@@ -261,6 +281,12 @@ def main(argv=None) -> int:
               f"{engine.block_size} tok"
               f"{', prefix cache on' if engine.prefix else ''}"
               f" | kernels={args.kernels or 'ambient'}", flush=True)
+        if engine.prefix is not None and hasattr(engine.prefix, "host"):
+            print(f"tiered KV: host pool {engine.prefix.host.capacity} "
+                  f"blocks"
+                  + (f", warm store {args.kv_store} "
+                     f"({len(engine.prefix.host)} entries preloaded)"
+                     if args.kv_store else ""), flush=True)
     if engine.tp > 1:
         from repro.launch.serve_shardings import per_device_state_bytes
         print(f"tensor parallel: tp={engine.tp} over "
@@ -296,6 +322,13 @@ def main(argv=None) -> int:
         if "mean_prefix_hit_tokens" in m:
             line += (f" | prefix hits "
                      f"{m['mean_prefix_hit_tokens']:.1f} tok/req")
+        if "host_pool_capacity" in m:
+            line += (f" | tier: {m['tier_spilled_blocks']:.0f} spilled / "
+                     f"{m['tier_fetched_blocks']:.0f} fetched blk, host "
+                     f"{m['host_pool_blocks']:.0f}/"
+                     f"{m['host_pool_capacity']:.0f}, host hits "
+                     f"{m.get('mean_host_hit_tokens', 0.0):.1f} tok/req, "
+                     f"fetch EWMA {m['tier_fetch_ewma_s'] * 1e3:.1f}ms")
         if m.get("preemptions"):
             line += (f" | {m['preemptions']:.0f} preemptions, "
                      f"{m['requeues']:.0f} requeues")
@@ -306,6 +339,10 @@ def main(argv=None) -> int:
             line += (f" | spec accept {m['spec_accept_rate'] * 100:.0f}% "
                      f"({m['spec_accepted']:.0f}/{m['spec_proposed']:.0f})")
         print(line, flush=True)
+    if args.kv_store:
+        n = engine.save_kv_store()
+        print(f"kv-store: {n} prefix blocks persisted to {args.kv_store}",
+              flush=True)
     return 0
 
 

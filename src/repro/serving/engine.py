@@ -97,6 +97,7 @@ import dataclasses
 import functools
 import math
 import time
+import warnings
 from typing import Any
 
 import jax
@@ -120,6 +121,7 @@ class RequestMetrics:
     prefill_steps: int = 0
     decode_steps: int = 0
     prefix_hit_tokens: int = 0  # prompt tokens skipped via the prefix cache
+    host_hit_tokens: int = 0    # ... of which were fetched from the host tier
     preemptions: int = 0        # times this request was evicted mid-flight
     # sum of per-stint queue waits (submit->admit plus every re-admit gap),
     # maintained by Scheduler.admit; NaN until first admitted
@@ -206,7 +208,9 @@ class ServingEngine:
                  mesh=None, tp: int | None = None,
                  scheduler: str = "priority", aging_s: float = 0.0,
                  preemption: bool = True,
-                 spec_k: int = 0, spec_ngram: int = 3):
+                 spec_k: int = 0, spec_ngram: int = 3,
+                 host_cache_blocks: int | None = None,
+                 host_cache_gb: float = 0.0, kv_store: str | None = None):
         self.api = api
         self.params = params
         # tensor parallelism: tp=N builds a (1, N) (data, model) host mesh
@@ -260,6 +264,31 @@ class ServingEngine:
 
         can_page = api.prefill_paged is not None and api.cache_spec.paged
         self.paged = can_page if paged is None else (paged and can_page)
+        # tiered KV cache: a host-RAM pool cold registered prefixes spill
+        # into instead of being dropped (and a disk store for warm
+        # restarts). Only meaningful where the prefix cache itself is —
+        # paged engines of prefix_reuse families.
+        tiering_ok = (self.paged and prefix_cache
+                      and api.cache_spec.prefix_reuse)
+        host_blocks = 0
+        if tiering_ok:
+            if host_cache_blocks is not None:
+                host_blocks = int(host_cache_blocks)
+            elif host_cache_gb > 0:
+                from repro.serving.tiering import blocks_for_bytes
+                host_blocks = blocks_for_bytes(
+                    host_cache_gb,
+                    self._per_block_bytes(block_size, cache_dtype))
+            elif kv_store:
+                # a persistent store with no explicit host sizing still
+                # needs a host tier to warm-load into: default to 4x the
+                # usable HBM pool (the "~10x effective capacity" lever
+                # scales with this knob, not a magic constant)
+                mb = -(-(max_seq + self.chunk) // block_size)
+                nb = (num_blocks if num_blocks is not None
+                      else max_batch * mb + 1)
+                host_blocks = 4 * (nb - 1)
+        self._kv_store = kv_store if tiering_ok else None
         # every scheduling decision — queue order, placement, eviction,
         # preemption — and all per-slot bookkeeping lives in the scheduler;
         # it is host-side and layout-blind, so tp=N engines construct it
@@ -268,7 +297,8 @@ class ServingEngine:
             max_batch=max_batch, max_seq=max_seq, chunk=self.chunk,
             paged=self.paged, block_size=block_size, num_blocks=num_blocks,
             prefix_cache=prefix_cache and api.cache_spec.prefix_reuse,
-            policy=scheduler, aging_s=aging_s, preemption=preemption)
+            policy=scheduler, aging_s=aging_s, preemption=preemption,
+            host_cache_blocks=host_blocks)
         # speculative decoding: spec_k > 0 turns pure-decode steps into
         # (B, 1 + spec_k) verify steps over n-gram drafts. Sound only for
         # positional pure-KV state (CacheSpec.spec_decode) on the paged
@@ -290,6 +320,13 @@ class ServingEngine:
                 self.state = api.paged_state_init(
                     max_batch, self.scheduler.num_blocks,
                     self.scheduler.block_size, cache_dtype)
+            if host_blocks > 0:
+                # the tiered cache is layout-blind; the engine — which
+                # owns the pools — injects the block extract/insert I/O
+                self.scheduler.prefix.bind_device_io(
+                    self._extract_blocks, self._insert_blocks)
+                if self._kv_store:
+                    self._warm_restart()
             # 8 replicated metadata args: pages, pos, length + 5 sampling
             self._step = self._jit_step(self._step_paged_fn, n_meta=8)
             if self.spec is not None:
@@ -410,6 +447,111 @@ class ServingEngine:
             return {}
         from repro.launch.serve_shardings import state_layout
         return state_layout(self.state)
+
+    # ------------------------------------------------------------------ #
+    # tiered-cache device I/O and persistence: the TieredPrefixCache is
+    # layout-blind, so the engine — owner of the pools — provides the
+    # hooks that move block contents between HBM and host numpy, and the
+    # layout descriptor the disk store checks compatibility against.
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _is_kv_leaf(path) -> bool:
+        """KV pool leaves are keyed "k"/"v" — the same rule _admit's
+        recurrent-state reset uses. Their block axis is axis 1:
+        ``(n_layers, num_blocks, block_size, n_kv_heads, head_dim)``."""
+        last = path[-1]
+        return (isinstance(last, jax.tree_util.DictKey)
+                and last.key in ("k", "v"))
+
+    def _per_block_bytes(self, block_size: int, cache_dtype) -> int:
+        """Host-RAM bytes one spilled block occupies across every KV pool
+        leaf (sizes ``--host-cache-gb`` into a block count). Computed from
+        specs with a 2-block probe pool — no device allocation."""
+        specs = self.api.paged_state_specs(1, 2, block_size, cache_dtype)
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+            if self._is_kv_leaf(path) and leaf.shape[1] == 2:
+                total += (int(np.prod(leaf.shape)) // 2
+                          * np.dtype(leaf.dtype).itemsize)
+        return total
+
+    def _extract_blocks(self, bids: list[int]) -> dict[str, np.ndarray]:
+        """Pull blocks ``bids`` of every KV leaf to host numpy, stacked on
+        axis 1 (one gather per leaf for the whole batch — the spill path
+        calls this once per eviction pass). ``copy_to_host_async`` is a
+        best-effort overlap hint: real on TPU/GPU, a no-op on CPU jax."""
+        idx = jnp.asarray(bids, jnp.int32)
+        subs: list[tuple[str, Any]] = []
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.state)[0]:
+            if self._is_kv_leaf(path):
+                sub = leaf[:, idx]
+                try:
+                    sub.copy_to_host_async()
+                except (AttributeError, RuntimeError):
+                    pass
+                subs.append((jax.tree_util.keystr(path), sub))
+        return {k: np.asarray(v) for k, v in subs}
+
+    def _insert_blocks(self, bids: list[int],
+                       data: dict[str, np.ndarray]) -> None:
+        """Write host block data back into freshly allocated HBM blocks
+        (one scatter per leaf for the whole fetched chain). Under a mesh
+        the scatter result is pinned back to the leaf's sharding so the
+        state's placement fixed-point survives the update."""
+        idx = jnp.asarray(bids, jnp.int32)
+
+        def put(path, leaf):
+            if not self._is_kv_leaf(path):
+                return leaf
+            arr = jnp.asarray(data[jax.tree_util.keystr(path)], leaf.dtype)
+            new = leaf.at[:, idx].set(arr)
+            if self.mesh is not None:
+                new = jax.device_put(new, leaf.sharding)
+            return new
+
+        self.state = jax.tree_util.tree_map_with_path(put, self.state)
+
+    def kv_layout(self) -> dict:
+        """The pool layout the disk store records and checks on load: a
+        store written under any other block size, family, dtype or leaf
+        geometry is unusable bytes and must fail the warm restart."""
+        leaves = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.state)[0]:
+            if self._is_kv_leaf(path):
+                shape = list(leaf.shape[:1]) + list(leaf.shape[2:])
+                leaves[jax.tree_util.keystr(path)] = [
+                    shape, str(np.dtype(leaf.dtype))]
+        return {"block_size": self.scheduler.block_size,
+                "kind": self.api.cache_spec.kind,
+                "family": self.api.cfg.family,
+                "leaves": leaves}
+
+    def save_kv_store(self) -> int:
+        """Persist every registered prefix block — both tiers — to the
+        ``kv_store`` directory (atomic, CRC'd, layout-stamped). Returns
+        the number of entries written; 0 when no store is configured."""
+        if not self._kv_store:
+            return 0
+        from repro.checkpoint.manager import PrefixStore
+        entries = self.scheduler.prefix.snapshot()
+        PrefixStore(self._kv_store).save(entries, self.kv_layout())
+        return len(entries)
+
+    def _warm_restart(self) -> None:
+        """Load a previous run's prefix store into the HOST tier. Any
+        failure — missing, corrupt, layout mismatch — means serve cold;
+        a stale store must never crash startup."""
+        from repro.checkpoint.manager import PrefixStore
+        try:
+            entries = PrefixStore(self._kv_store).load(self.kv_layout())
+        except FileNotFoundError:
+            return          # first run: nothing to warm from
+        except Exception as e:   # corrupt npz/meta, CRC, layout mismatch
+            warnings.warn(
+                f"kv-store {self._kv_store!r} unusable ({e}); serving cold",
+                RuntimeWarning)
+            return
+        self.scheduler.prefix.preload_host(entries)
 
     def _step_fn(self, params, tokens, state, pos, length,
                  temps, top_k, top_p, seeds, counts, *, do_sample):
@@ -745,4 +887,6 @@ class ServingEngine:
         if self.paged:
             out["mean_prefix_hit_tokens"] = (
                 sum(r.metrics.prefix_hit_tokens for r in done) / len(done))
+            out["mean_host_hit_tokens"] = (
+                sum(r.metrics.host_hit_tokens for r in done) / len(done))
         return out

@@ -142,13 +142,22 @@ class PrefixCache:
     touching refcounts, stats or LRU order; the caller then ``acquire``\\ s
     the hits (incref — protects them from its own eviction pass) and, once
     the admission is certain, ``commit``\\ s (stats + LRU recency). ``evict``
-    frees idle entries (refcount 1 — nothing but the map) in LRU order
-    when the pool runs dry.
+    frees idle entries (refcount 1 — nothing but the map) when the pool
+    runs dry.
+
+    Eviction is **priority-then-LRU**: every entry carries the priority
+    class of the request that registered it (bumped to the max priority of
+    any later hit, so a prefix serving high-priority traffic stays
+    protected even if a low-priority request registered it first), and
+    :meth:`evict` frees the lowest-priority idle entries first, LRU within
+    a class. With every request at the default priority 0 — the all-FIFO
+    case — this degenerates to the exact LRU order of PRs 2–8.
     """
 
     def __init__(self, alloc: BlockAllocator):
         self.alloc = alloc
         self._map: OrderedDict[bytes, int] = OrderedDict()
+        self._pri: dict[bytes, int] = {}   # entry priority (default 0)
         self.hits = 0
         self.misses = 0
 
@@ -167,6 +176,25 @@ class PrefixCache:
             out.append(bid)
         return out
 
+    def peek_depth(self, keys: list[bytes]) -> int:
+        """Tier-aware hit depth: how many leading blocks of ``keys`` this
+        cache could serve without recomputing them. For the single-tier
+        cache that is exactly ``len(peek(keys))``; the tiered subclass
+        extends the run through its host pool, so the router's affinity
+        policy sees spilled chains as hits too. Pure read."""
+        return len(self.peek(keys))
+
+    def fetch_into_hbm(self, keys: list[bytes], hits: list[int],
+                       max_hits: int) -> list[int]:
+        """Extend an HBM hit run from lower tiers before admission.
+
+        The single-tier cache has no lower tier: the run is returned
+        unchanged. :class:`~repro.serving.tiering.TieredPrefixCache`
+        overrides this to re-fetch spilled host-resident blocks into
+        freshly allocated HBM blocks (capped at ``max_hits`` total so the
+        caller's never-skip-the-whole-prompt rule stays intact)."""
+        return hits
+
     def acquire(self, bids: list[int]) -> None:
         """Incref peeked hit blocks (the caller now references them)."""
         for b in bids:
@@ -177,8 +205,12 @@ class PrefixCache:
         for b in bids:
             self.alloc.decref(b)
 
-    def commit(self, keys: list[bytes], n_hits: int) -> None:
-        """Admission succeeded: record stats, refresh LRU recency.
+    def commit(self, keys: list[bytes], n_hits: int,
+               priority: int | None = None) -> None:
+        """Admission succeeded: record stats, refresh LRU recency (and,
+        with ``priority``, bump each touched entry's class to at least the
+        hitting request's — a prefix hot with high-priority traffic must
+        not be evicted ahead of a cold low-priority one).
 
         A peeked key may be gone by commit time: the deepest hit popped
         by the never-skip-the-whole-prompt rule is *not* acquired, so the
@@ -187,6 +219,8 @@ class PrefixCache:
         for k in keys[:n_hits]:
             if k in self._map:
                 self._map.move_to_end(k)
+                if priority is not None and priority > self._pri.get(k, 0):
+                    self._pri[k] = priority
         self.hits += n_hits
         if n_hits < len(keys):
             self.misses += 1
@@ -198,13 +232,18 @@ class PrefixCache:
         self.commit(keys, len(bids))
         return bids
 
-    def register(self, key: bytes, bid: int) -> None:
+    def register(self, key: bytes, bid: int, priority: int = 0) -> None:
         """Pin a freshly written full prompt block under its prefix key.
-        First writer wins: an existing entry is kept (it may be shared)."""
+        First writer wins: an existing entry is kept (it may be shared),
+        though a higher-priority re-registration still bumps its class."""
         if key in self._map:
+            if priority > self._pri.get(key, 0):
+                self._pri[key] = priority
             return
         self.alloc.incref(bid)
         self._map[key] = bid
+        if priority:
+            self._pri[key] = priority
 
     def evictable(self) -> int:
         """How many entries :meth:`evict` could free right now."""
@@ -217,16 +256,34 @@ class PrefixCache:
         map-only — i.e. evictable — rather than free)."""
         return set(self._map.values())
 
+    def priority_of(self, key: bytes) -> int:
+        """The priority class recorded for a registered entry (0 when the
+        key is unknown or was never prioritized)."""
+        return self._pri.get(key, 0)
+
+    def _evict_order(self) -> list[bytes]:
+        """Idle entries in eviction order: lowest priority class first,
+        LRU within a class (the OrderedDict *is* the LRU order, and the
+        sort is stable, so the all-priority-0 case is exactly the plain
+        LRU scan of PRs 2–8)."""
+        return sorted(
+            (k for k, bid in self._map.items()
+             if self.alloc.refcount(bid) == 1),
+            key=lambda k: self._pri.get(k, 0))
+
+    def _drop_entry(self, key: bytes) -> None:
+        bid = self._map.pop(key)
+        self._pri.pop(key, None)
+        self.alloc.decref(bid)
+
     def evict(self, n_blocks: int) -> int:
-        """Free up to ``n_blocks`` idle entries (LRU first). Returns the
-        number actually freed; in-use entries are skipped, not stalled on."""
+        """Free up to ``n_blocks`` idle entries (priority-then-LRU).
+        Returns the number actually freed; in-use entries are skipped,
+        not stalled on."""
         freed = 0
-        for h in list(self._map):
+        for k in self._evict_order():
             if freed >= n_blocks:
                 break
-            bid = self._map[h]
-            if self.alloc.refcount(bid) == 1:   # only the map holds it
-                del self._map[h]
-                self.alloc.decref(bid)
-                freed += 1
+            self._drop_entry(k)
+            freed += 1
         return freed

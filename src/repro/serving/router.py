@@ -363,8 +363,12 @@ class Router:
         keys = (prefix_keys(req.prompt[: self.max_seq - 1],
                             self.block_size) if self._affine else [])
         if keys:
+            # peek_depth, not len(peek(..)): tier-aware — a replica whose
+            # prefix chain spilled to its host pool still attracts the
+            # request (the fetch there is far cheaper than a re-prefill
+            # anywhere else). Identical for single-tier replicas.
             depths = {
-                r: (len(self.engines[r].scheduler.prefix.peek(keys))
+                r: (self.engines[r].scheduler.prefix.peek_depth(keys)
                     if self.engines[r].scheduler.prefix is not None else 0)
                 for r in pool
             }
@@ -489,7 +493,8 @@ class Router:
             total = sum(m.get("requests", 0.0) for m, _ in summaries)
             out["requests"] = total
             for key in ("mean_ttft_s", "mean_queue_wait_s",
-                        "mean_decode_tok_per_s", "mean_prefix_hit_tokens"):
+                        "mean_decode_tok_per_s", "mean_prefix_hit_tokens",
+                        "mean_host_hit_tokens"):
                 vals = [(m[key], m.get("requests", 0.0))
                         for m, _ in summaries
                         if key in m and not math.isnan(m[key])]

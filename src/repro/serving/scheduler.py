@@ -148,7 +148,7 @@ class Scheduler:
                  paged: bool, block_size: int = 16,
                  num_blocks: int | None = None, prefix_cache: bool = True,
                  policy: str = "priority", aging_s: float = 0.0,
-                 preemption: bool = True):
+                 preemption: bool = True, host_cache_blocks: int = 0):
         if policy not in POLICIES:
             raise ValueError(f"unknown scheduler policy {policy!r}; "
                              f"one of {POLICIES}")
@@ -189,7 +189,17 @@ class Scheduler:
             self.num_blocks = (num_blocks if num_blocks is not None
                                else max_batch * self.max_blocks + 1)
             self.alloc = BlockAllocator(self.num_blocks, self.block_size)
-            self.prefix = PrefixCache(self.alloc) if prefix_cache else None
+            if not prefix_cache:
+                self.prefix = None
+            elif host_cache_blocks > 0:
+                # tiered: eviction pressure spills registered prefixes to a
+                # host-RAM pool instead of dropping them; the engine binds
+                # the device extract/insert hooks after state init
+                from repro.serving.tiering import HostPool, TieredPrefixCache
+                self.prefix = TieredPrefixCache(
+                    self.alloc, HostPool(host_cache_blocks))
+            else:
+                self.prefix = PrefixCache(self.alloc)
             self.pages = np.zeros((max_batch, self.max_blocks), np.int32)
             self._prompt_keys: dict[int, list[bytes]] = {}  # req.uid -> keys
             self._slot_blocks: list[list[int]] = [[] for _ in range(max_batch)]
@@ -369,6 +379,20 @@ class Scheduler:
         keys = (self._prompt_keys.get(req.uid, [])
                 if self.prefix is not None else [])
         hits = self.prefix.peek(keys) if self.prefix is not None else []
+        host_hits = 0
+        if self.prefix is not None:
+            # tiered cache: extend the HBM run through host-resident
+            # continuation blocks before admission. Capped at max_hits =
+            # (plen-1)//block_size so a fetched block can never trip the
+            # never-skip-the-whole-prompt pop below (max_hits * block_size
+            # <= plen - 1 < plen). If admission still falls through, the
+            # fetched entries stay in the map as evictable HBM hits — the
+            # next attempt peeks them directly, so the work converges.
+            max_hits = (plen - 1) // self.block_size
+            if len(hits) < max_hits:
+                n0 = len(hits)
+                hits = self.prefix.fetch_into_hbm(keys, hits, max_hits)
+                host_hits = len(hits) - n0
         peeked = len(hits)     # pre-pop count: stats/LRU credit ALL hits
         # never skip the whole prompt: >= 1 token must still run through
         # prefill so the step has logits to sample the next token from
@@ -392,8 +416,9 @@ class Scheduler:
         blocks = hits + self.alloc.alloc(fresh)
         if self.prefix is not None:
             # peeked, not len(hits): a full-prompt repeat still touched its
-            # deepest block — keep its LRU recency hot and count the hit
-            self.prefix.commit(keys, peeked)
+            # deepest block — keep its LRU recency hot and count the hit;
+            # the committing request's class also bumps entry priorities
+            self.prefix.commit(keys, peeked, priority=req.priority)
         self.active[slot] = req
         self._slot_blocks[slot] = blocks
         self._slot_keys[slot] = keys
@@ -405,6 +430,7 @@ class Scheduler:
         self.pos[slot] = skip
         self.pending_prompt[slot] = deque(prompt[skip:])
         req.metrics.prefix_hit_tokens = skip
+        req.metrics.host_hit_tokens = host_hits * self.block_size
         return True
 
     def _place_dense(self, slot: int, entry: _Entry) -> None:
@@ -613,6 +639,11 @@ class Scheduler:
         hits = self.prefix.peek(keys) if self.prefix is not None else []
         while hits and len(hits) * self.block_size >= len(prompt):
             hits.pop()
+        # hits is the HBM run only — deliberately. A host-tier hit still
+        # costs one fresh block to fetch into, so block demand is exactly
+        # need - hbm_hits with or without a tier below; counting host hits
+        # here would overstate capacity. (Tier-aware depth for *affinity*
+        # is peek_depth, which the router uses.)
         fresh = need - len(hits)
         avail = self.alloc.free_blocks
         if self.prefix is not None:
@@ -648,9 +679,10 @@ class Scheduler:
         plen = int(self._slot_plen[slot])
         keys = self._slot_keys[slot]
         blocks = self._slot_blocks[slot]
+        pri = self.active[slot].priority if self.active[slot] else 0
         for j in range(int(self._slot_hits[slot]),
                        plen // self.block_size):
-            self.prefix.register(keys[j], blocks[j])
+            self.prefix.register(keys[j], blocks[j], priority=pri)
 
     def finish(self, slot: int) -> None:
         """The slot's request completed: return its blocks, clear the
@@ -685,6 +717,8 @@ class Scheduler:
             out["cancelled"] = float(self.cancelled)
         if self.paged:
             out["free_blocks"] = float(self.alloc.free_blocks)
+        if self.prefix is not None and hasattr(self.prefix, "tier_stats"):
+            out.update(self.prefix.tier_stats())
         if self.spec_proposed:
             out["spec_proposed"] = float(self.spec_proposed)
             out["spec_accepted"] = float(self.spec_accepted)

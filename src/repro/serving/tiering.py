@@ -1,0 +1,365 @@
+"""Tiered KV cache: host-RAM spill tier + disk persistence for prefixes.
+
+The paged pools in HBM are the only tier PRs 2–8 knew: when the prefix
+map ran out of room, :meth:`~repro.serving.paged.PrefixCache.evict`
+dropped cold entries and the next request paid a full re-prefill. This
+module adds the two tiers below and the policy that moves blocks between
+them.
+
+Tier-transition state machine
+-----------------------------
+A registered prefix block is always in exactly ONE tier::
+
+        register                   evict pressure
+   (new) ───────► HBM ───────────────────────────► host
+                   ▲    spill: batched device_get,  │
+                   │    block freed in HBM          │ host pool full /
+                   │                                │ lower priority
+        fetch_into_hbm: batched                     ▼
+        device write into a fresh                 (dropped)
+        block, entry removed from
+        host pool
+                  HBM ◄─────────────── host
+                          prefix hit
+
+   host ──save_kv_store()──► disk ──engine restart──► host
+          (snapshot of BOTH            (preload_host: digest-keyed,
+           tiers, digest-keyed,         layout-checked; first hit
+           CRC + layout meta)           then fetches into HBM)
+
+* **HBM → host (spill)**: under eviction pressure, instead of dropping a
+  cold entry, its block contents are pulled to host RAM (one batched
+  ``device_get`` per eviction pass — victims are gathered first, then
+  extracted in a single indexed slice per pool leaf) and the HBM block
+  is freed. The host pool admits by priority: an incoming entry may
+  evict host entries of priority <= its own (priority-ascending, LRU
+  within a class) but never a hotter one; if room still cannot be made,
+  the entry is dropped exactly as the single-tier cache would have.
+* **host → HBM (fetch)**: on a prefix hit whose chain continues into the
+  host tier, the continuation is fetched back *before admission*: fresh
+  HBM blocks are allocated — spilling colder idle map entries down to
+  host first when the free list is short (*evict-to-fetch*; the current
+  admission's own HBM hit run is pinned and can never be chosen, and a
+  chain never self-evicts because its keys are not in the map while they
+  are being fetched) — one batched device write inserts the data, and
+  the entries move back into the map. The admitting request then sees
+  them as ordinary HBM hits. If admission still falls through, the
+  fetched entries simply remain in the map as evictable entries — the
+  next attempt peeks them as HBM hits, so the work converges rather
+  than thrashing. Capacity accounting is unmoved by evict-to-fetch:
+  every spill frees exactly the block its fetch consumes, so
+  ``would_admit``'s free+evictable bound holds before and after.
+* **host ⇄ disk (persist / warm restart)**: ``engine.save_kv_store()``
+  snapshots both tiers (digest key → per-leaf numpy block) through
+  :class:`repro.checkpoint.manager.PrefixStore` — atomic tmp + rename,
+  CRC-checked, with the pool layout recorded in meta. On restart the
+  store is loaded into the *host* pool (never straight into HBM — the
+  new process's pool is cold and admission decides what is hot); a
+  stale or corrupt store logs a warning and the engine serves cold.
+
+Bitwise identity
+----------------
+Serving through the tiers is bitwise identical to the untiered path.
+A prefix hit — from either tier — means the admitted request *skips*
+prefill for those blocks and reads their K/V through the page table;
+a miss means it recomputes exactly the same K/V values from the same
+tokens (prefill is deterministic given the prompt). Spill/fetch moves
+block bytes verbatim (``device_get`` then a device write of the same
+array), so a spilled-then-refetched block is bit-exact by construction,
+and the only observable difference between tier configurations is
+*latency*, never token streams.
+
+"Pinned" host memory: on TPU/GPU backends ``device_get`` into a
+preallocated pinned buffer would make the spill DMA async; under the CPU
+jax used in CI the arrays are plain numpy and the ``copy_to_host_async``
+hint in the engine's extract hook is a no-op. The accounting here is
+backend-blind either way.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.serving.paged import BlockAllocator, PrefixCache
+
+# extract(bids) -> {leaf path: stacked per-block array}; insert(bids, data)
+# writes them back. Bound by the engine, which owns the device pools.
+ExtractFn = Callable[[list[int]], dict[str, np.ndarray]]
+InsertFn = Callable[[list[int], dict[str, np.ndarray]], None]
+
+
+@dataclass
+class _HostEntry:
+    """One spilled prefix block resident in host RAM."""
+    data: dict[str, np.ndarray]      # leaf path -> per-block array
+    priority: int = 0
+    nbytes: int = field(default=0)
+
+    def __post_init__(self) -> None:
+        if not self.nbytes:
+            self.nbytes = sum(int(a.nbytes) for a in self.data.values())
+
+
+class HostPool:
+    """Fixed-capacity host-RAM pool of spilled prefix blocks.
+
+    Keyed by the same 128-bit prefix digests as the HBM map, one entry
+    per block. Admission is priority-aware: :meth:`put` makes room by
+    evicting resident entries whose priority class is <= the incoming
+    entry's (lowest class first, LRU within a class) and rejects the
+    incoming entry when even that cannot free a slot — a cold
+    low-priority spill never displaces a hot high-priority one.
+    """
+
+    def __init__(self, capacity_blocks: int):
+        self.capacity = int(capacity_blocks)
+        self._map: OrderedDict[bytes, _HostEntry] = OrderedDict()
+        self.evicted = 0          # host entries dropped to make room
+        self.rejected = 0         # incoming spills refused (pool too hot)
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._map
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._map)
+
+    @property
+    def free_blocks(self) -> int:
+        return self.capacity - len(self._map)
+
+    def get(self, key: bytes) -> _HostEntry | None:
+        return self._map.get(key)
+
+    def keys(self) -> list[bytes]:
+        return list(self._map)
+
+    def put(self, key: bytes, data: dict[str, np.ndarray],
+            priority: int = 0) -> bool:
+        """Admit a spilled block; returns False when it was refused.
+        Re-putting an existing key refreshes data/recency and bumps the
+        entry's class to the max of old and new."""
+        if self.capacity <= 0:
+            self.rejected += 1
+            return False
+        if key in self._map:
+            old = self._map[key]
+            self._map[key] = _HostEntry(data, max(old.priority, priority))
+            self._map.move_to_end(key)
+            return True
+        if len(self._map) >= self.capacity:
+            # evict only classes <= the incoming one: priority asc, LRU
+            # within a class (stable sort over the OrderedDict's LRU order)
+            victims = sorted(
+                (k for k, e in self._map.items() if e.priority <= priority),
+                key=lambda k: self._map[k].priority)
+            need = len(self._map) - self.capacity + 1
+            if len(victims) < need:
+                self.rejected += 1
+                return False
+            for k in victims[:need]:
+                del self._map[k]
+                self.evicted += 1
+        self._map[key] = _HostEntry(data, priority)
+        return True
+
+    def pop(self, key: bytes) -> _HostEntry | None:
+        """Remove and return an entry (fetch path: the block is moving
+        back to HBM — no dual residency)."""
+        return self._map.pop(key, None)
+
+    def touch(self, key: bytes) -> None:
+        if key in self._map:
+            self._map.move_to_end(key)
+
+    def flush(self) -> int:
+        n = len(self._map)
+        self._map.clear()
+        return n
+
+
+class TieredPrefixCache(PrefixCache):
+    """:class:`PrefixCache` whose eviction spills into a :class:`HostPool`
+    and whose hit path re-fetches spilled chains into HBM.
+
+    Drop-in for the scheduler: ``peek``/``acquire``/``commit``/
+    ``register``/``evict`` keep their single-tier contracts; the tier
+    machinery hides behind :meth:`evict` (spill instead of drop),
+    :meth:`fetch_into_hbm` (called by the scheduler between peek and
+    placement) and :meth:`peek_depth` (tier-aware — the router's
+    affinity and any capacity probe see host-resident chain depth).
+
+    The device I/O is injected via :meth:`bind_device_io` because this
+    object is layout-blind: the engine owns the pools and knows how to
+    slice block ``bid`` out of every K/V leaf. Until bound (or when the
+    host pool has zero capacity), eviction degrades to the plain drop
+    of the base class — correctness never depends on the host tier.
+    """
+
+    def __init__(self, alloc: BlockAllocator, host: HostPool):
+        super().__init__(alloc)
+        self.host = host
+        self._extract: ExtractFn | None = None
+        self._insert: InsertFn | None = None
+        self.spilled_blocks = 0
+        self.fetched_blocks = 0
+        self.dropped_blocks = 0        # evicted with nowhere to spill
+        self.host_hits = 0             # chain blocks served from host tier
+        self.fetch_ewma_s = 0.0        # per-batch fetch latency EWMA
+
+    def bind_device_io(self, extract: ExtractFn, insert: InsertFn) -> None:
+        self._extract = extract
+        self._insert = insert
+
+    # -- spill ---------------------------------------------------------- #
+    def evict(self, n_blocks: int) -> int:
+        """Free up to ``n_blocks`` idle entries (priority-then-LRU, same
+        order as the base class) — but spill each victim's block contents
+        into the host pool first when it has room for that entry's class.
+        One batched extract covers the whole pass."""
+        victims = self._evict_order()[:n_blocks]
+        if not victims:
+            return 0
+        if self._extract is not None and self.host.capacity > 0:
+            bids = [self._map[k] for k in victims]
+            stacked = self._extract(bids)      # ONE device_get for the pass
+            for i, k in enumerate(victims):
+                data = {path: np.ascontiguousarray(arr[:, i])
+                        for path, arr in stacked.items()}
+                if self.host.put(k, data, self._pri.get(k, 0)):
+                    self.spilled_blocks += 1
+                else:
+                    self.dropped_blocks += 1
+                self._drop_entry(k)
+        else:
+            for k in victims:
+                self.dropped_blocks += 1
+                self._drop_entry(k)
+        return len(victims)
+
+    # -- fetch ---------------------------------------------------------- #
+    def fetch_into_hbm(self, keys: list[bytes], hits: list[int],
+                       max_hits: int) -> list[int]:
+        """Extend the HBM hit run through host-resident continuation
+        blocks: allocate fresh HBM blocks, one batched insert, move the
+        entries back into the map (removed from the host pool — a block
+        is never resident in two tiers). Capped at ``max_hits`` so the
+        caller's never-skip-the-whole-prompt rule stays intact.
+
+        When the free list cannot fund the whole chain, colder idle map
+        entries are spilled down first (evict-to-fetch): a revisited
+        prefix displaces idle strangers instead of re-prefilling. The
+        caller's own HBM hit run is temporarily pinned so it can never
+        be chosen, and the chain cannot self-evict (its keys are not in
+        the map while in flight). The eviction's own spills may displace
+        chain entries *from the host pool* (priority-ordered), so the
+        chain is re-scanned afterwards."""
+        if self._insert is None or len(self.host) == 0:
+            return hits
+
+        def scan() -> list[bytes]:
+            out: list[bytes] = []
+            for k in keys[len(hits):max_hits]:
+                if k not in self.host:
+                    break
+                out.append(k)
+            return out
+
+        chain = scan()
+        if not chain:
+            return hits
+        short = len(chain) - self.alloc.free_blocks
+        if short > 0 and self.evictable() > 0:
+            self.acquire(hits)     # the admission's hit run is off-limits
+            self.evict(short)
+            self.release(hits)
+            chain = scan()         # spills may have displaced chain entries
+        n = min(len(chain), self.alloc.free_blocks)
+        if n <= 0:
+            return hits
+        chain = chain[:n]
+        t0 = time.monotonic()
+        entries = [self.host.pop(k) for k in chain]
+        bids = self.alloc.alloc(len(chain))    # refcount 1 = the map's ref
+        stacked = {path: np.stack([e.data[path] for e in entries], axis=1)
+                   for path in entries[0].data}
+        self._insert(bids, stacked)            # ONE device write for the run
+        for k, bid, e in zip(chain, bids, entries):
+            self._map[k] = bid
+            if e.priority:
+                self._pri[k] = max(self._pri.get(k, 0), e.priority)
+        dt = time.monotonic() - t0
+        self.fetch_ewma_s = (dt if self.fetch_ewma_s == 0.0
+                             else 0.8 * self.fetch_ewma_s + 0.2 * dt)
+        self.fetched_blocks += len(chain)
+        self.host_hits += len(chain)
+        return hits + bids
+
+    # -- tier-aware reads ----------------------------------------------- #
+    def peek_depth(self, keys: list[bytes]) -> int:
+        """HBM hit run plus its host-resident continuation. Pure read —
+        the router's affinity policy counts spilled chains as hits so
+        traffic keeps landing where its prefix lives, in either tier."""
+        d = len(self.peek(keys))
+        for k in keys[d:]:
+            if k not in self.host:
+                break
+            d += 1
+        return d
+
+    # -- persistence hooks ---------------------------------------------- #
+    def preload_host(self, entries: dict[bytes, tuple[int, dict[str, np.ndarray]]]
+                     ) -> int:
+        """Warm restart: load persisted entries into the HOST tier (never
+        straight into HBM — admission decides what gets fetched up).
+        Stops when the pool is full; returns how many were loaded."""
+        n = 0
+        for key, (priority, data) in entries.items():
+            if self.host.free_blocks <= 0:
+                break
+            if self.host.put(key, data, priority):
+                n += 1
+        return n
+
+    def snapshot(self) -> dict[bytes, tuple[int, dict[str, np.ndarray]]]:
+        """Both tiers as ``{digest: (priority, per-leaf block data)}`` for
+        the disk store. HBM entries go through one batched extract."""
+        out: dict[bytes, tuple[int, dict[str, np.ndarray]]] = {}
+        if self._extract is not None and self._map:
+            hbm_keys = list(self._map)
+            stacked = self._extract([self._map[k] for k in hbm_keys])
+            for i, k in enumerate(hbm_keys):
+                data = {path: np.ascontiguousarray(arr[:, i])
+                        for path, arr in stacked.items()}
+                out[k] = (self._pri.get(k, 0), data)
+        for k in self.host.keys():
+            e = self.host.get(k)
+            out[k] = (e.priority, e.data)
+        return out
+
+    def tier_stats(self) -> dict[str, float]:
+        return {
+            "tier_spilled_blocks": float(self.spilled_blocks),
+            "tier_fetched_blocks": float(self.fetched_blocks),
+            "tier_dropped_blocks": float(self.dropped_blocks),
+            "tier_host_hits": float(self.host_hits),
+            "host_pool_blocks": float(self.host.used_blocks),
+            "host_pool_capacity": float(self.host.capacity),
+            "tier_fetch_ewma_s": self.fetch_ewma_s,
+        }
+
+
+def blocks_for_bytes(host_cache_gb: float, block_bytes: int) -> int:
+    """How many host-pool blocks fit in ``host_cache_gb`` gigabytes given
+    the per-block byte footprint across every K/V leaf."""
+    if host_cache_gb <= 0 or block_bytes <= 0:
+        return 0
+    return int(host_cache_gb * (1 << 30)) // block_bytes

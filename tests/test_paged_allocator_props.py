@@ -116,3 +116,99 @@ def test_prefix_cache_pins_exactly_once(n, evict):
     assert freed == min(evict, n)
     assert a.free_blocks == (2 * n + 1) - (n - freed)
     assert a.check_conservation()
+
+
+# ---------------------------------------------------------------------- #
+# tiered cache: random spill / fetch / drop interleavings
+# ---------------------------------------------------------------------- #
+
+TIER_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("reg"), st.integers(0, 3)),     # register @ prio
+        st.tuples(st.just("evict"), st.integers(1, 4)),   # spill-or-drop
+        st.tuples(st.just("fetch"), st.integers(1, 12)),  # host -> HBM
+        st.tuples(st.just("hold"), st.integers(0, 50)),   # acquire a hit
+        st.tuples(st.just("drop"), st.integers(0, 50)),   # release a hold
+    ),
+    min_size=1, max_size=50)
+
+
+@settings(max_examples=150, deadline=None)
+@given(num_blocks=st.integers(4, 16), host_cap=st.integers(0, 10),
+       ops=TIER_OPS)
+def test_tiered_cache_invariants_under_random_ops(num_blocks, host_cap, ops):
+    """Spill/fetch/drop interleavings against a model of who owns what:
+
+    * refcount == owners per tier: an HBM map entry holds exactly 1 ref
+      plus one per outstanding hold; host entries hold no allocator refs;
+    * no key resident in two tiers, ever;
+    * block contents round-trip spill -> fetch bit-exact;
+    * a full drain (evict everything, flush the host pool, release holds)
+      leaves both pools empty with zero leaked blocks.
+    """
+    import numpy as np
+
+    from repro.serving.tiering import HostPool, TieredPrefixCache
+
+    a = BlockAllocator(num_blocks, 4)
+    pc = TieredPrefixCache(a, HostPool(host_cap))
+    dev = {"k": np.zeros((1, num_blocks, 4), np.float32)}
+    pc.bind_device_io(
+        lambda bids: {"k": dev["k"][:, np.asarray(bids)].copy()},
+        lambda bids, data: dev["k"].__setitem__(
+            (slice(None), np.asarray(bids)), data["k"]))
+
+    keys = prefix_keys(list(range(4 * 64)), 4)
+    value: dict[bytes, float] = {}     # key -> expected block payload
+    held: list[int] = []               # bids acquired by fake requests
+    nreg = 0
+
+    for op, arg in ops:
+        if op == "reg" and nreg < len(keys) and a.can_alloc(1):
+            bid = a.alloc(1)[0]
+            dev["k"][:, bid] = float(nreg + 1)
+            value[keys[nreg]] = float(nreg + 1)
+            pc.register(keys[nreg], bid, priority=arg)
+            a.decref(bid)              # owner done: map-only entry
+            nreg += 1
+        elif op == "evict":
+            before_idle = pc.evictable()
+            freed = pc.evict(arg)
+            assert freed == min(arg, before_idle)
+        elif op == "fetch":
+            chain = keys[:nreg]
+            hits = pc.peek(chain)
+            got = pc.fetch_into_hbm(chain, list(hits), arg)
+            assert len(got) >= len(hits)
+            assert len(got) <= max(len(hits), arg)
+        elif op == "hold" and len(pc):
+            run = pc.peek(keys[:nreg])
+            if run:
+                bid = run[arg % len(run)]
+                a.incref(bid)
+                held.append(bid)
+        elif op == "drop" and held:
+            a.decref(held.pop(arg % len(held)))
+
+        # invariants after EVERY operation ---------------------------- #
+        assert a.check_conservation()
+        for k, bid in pc._map.items():
+            assert k not in pc.host, f"key resident in two tiers"
+            assert a.refcount(bid) == 1 + held.count(bid), \
+                "map entry refcount != map ref + outstanding holds"
+            assert dev["k"][0, bid, 0] == value[k], \
+                "HBM block content diverged from its registered value"
+        for k in pc.host.keys():
+            assert pc.host.get(k).data["k"][0, 0] == value[k], \
+                "host tier content diverged (spill not bit-exact)"
+        assert len(pc.host) <= host_cap
+
+    # full drain: drop holds, evict the map dry, flush the host pool
+    while held:
+        a.decref(held.pop())
+    pc.evict(len(pc))
+    pc.host.flush()
+    assert len(pc) == 0 and len(pc.host) == 0
+    assert a.free_blocks == num_blocks - 1 and a.check_conservation()
+    total = pc.spilled_blocks + pc.dropped_blocks + pc.fetched_blocks
+    assert total >= 0   # counters monotone; exercised paths accounted

@@ -1,0 +1,407 @@
+"""Tiered KV cache: host spill/fetch, priority eviction, warm restarts.
+
+Covers the tier-transition state machine of :mod:`repro.serving.tiering`
+(HBM ⇄ host ⇄ disk), the priority-then-LRU fix in the base
+:class:`~repro.serving.paged.PrefixCache`, the engine-level bitwise-
+identity guarantee, and the warm-restart tolerance for stale stores.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as nn
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.paged import BlockAllocator, PrefixCache, prefix_keys
+from repro.serving.tiering import HostPool, TieredPrefixCache
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  head_dim=16, remat="none")
+
+_PARAMS_CACHE: dict[str, dict] = {}
+
+
+def init_params(cfg=CFG):
+    if cfg.name not in _PARAMS_CACHE:
+        api = get_model(cfg)
+        _PARAMS_CACHE[cfg.name] = nn.init(
+            lambda t: api.forward(t), jax.random.key(0),
+            jnp.zeros((1, 8), jnp.int32))
+    return _PARAMS_CACHE[cfg.name]
+
+
+def make_engine(host_cache_blocks=None, num_blocks=14, max_batch=2,
+                kv_store=None, block_size=16, **kw):
+    return ServingEngine(get_model(CFG), init_params(),
+                         max_batch=max_batch, max_seq=128, chunk=16,
+                         block_size=block_size, num_blocks=num_blocks,
+                         host_cache_blocks=host_cache_blocks,
+                         kv_store=kv_store, **kw)
+
+
+# ---------------------------------------------------------------------- #
+# fake device I/O: a host-side "pool" of one leaf, block axis 1
+# ---------------------------------------------------------------------- #
+
+def fake_pool(num_blocks, width=4):
+    dev = {"k": np.zeros((1, num_blocks, width), np.float32)}
+
+    def extract(bids):
+        return {"k": dev["k"][:, np.asarray(bids)].copy()}
+
+    def insert(bids, data):
+        dev["k"][:, np.asarray(bids)] = data["k"]
+
+    return dev, extract, insert
+
+
+def make_tiered(num_blocks=8, host_cap=8):
+    a = BlockAllocator(num_blocks, 4)
+    pc = TieredPrefixCache(a, HostPool(host_cap))
+    dev, extract, insert = fake_pool(num_blocks)
+    pc.bind_device_io(extract, insert)
+    return a, pc, dev
+
+
+KEYS = prefix_keys(list(range(64)), 4)
+
+
+def register_chain(a, pc, dev, n, start=0, priority=0):
+    """Register n chain blocks with distinct device contents; the owner
+    decrefs so each entry is map-only (refcount 1), like a completed
+    request's registered prompt blocks."""
+    bids = a.alloc(n)
+    for j, bid in enumerate(bids):
+        dev["k"][:, bid] = float(start + j + 1)
+        pc.register(KEYS[start + j], bid, priority=priority)
+        a.decref(bid)
+    return bids
+
+
+# ---------------------------------------------------------------------- #
+# satellite 1: priority-then-LRU eviction in the base PrefixCache
+# ---------------------------------------------------------------------- #
+
+def test_base_evict_priority_then_lru():
+    a = BlockAllocator(8, 4)
+    pc = PrefixCache(a)
+    bids = a.alloc(4)
+    # LRU order: k0, k1, k2, k3 — but k1 registered at priority 2
+    for j, pri in enumerate([0, 2, 0, 1]):
+        pc.register(KEYS[j], bids[j], priority=pri)
+        a.decref(bids[j])
+    pc.evict(2)
+    # priority asc, LRU within class: k0 (pri 0) then k2 (pri 0)
+    assert a.refcount(bids[0]) == 0 and a.refcount(bids[2]) == 0
+    assert a.refcount(bids[1]) == 1 and a.refcount(bids[3]) == 1
+    pc.evict(1)   # next lowest class: k3 (pri 1), NOT k1 (pri 2)
+    assert a.refcount(bids[3]) == 0 and a.refcount(bids[1]) == 1
+
+
+def test_base_evict_all_default_priority_is_plain_lru():
+    a = BlockAllocator(8, 4)
+    pc = PrefixCache(a)
+    bids = a.alloc(4)
+    for j in range(4):
+        pc.register(KEYS[j], bids[j])
+        a.decref(bids[j])
+    pc.commit(KEYS[:1], 1)   # touch k0: now LRU order k1, k2, k3, k0
+    pc.evict(2)
+    assert a.refcount(bids[1]) == 0 and a.refcount(bids[2]) == 0
+    assert a.refcount(bids[0]) == 1 and a.refcount(bids[3]) == 1
+
+
+def test_commit_bumps_priority_protects_entry():
+    a = BlockAllocator(8, 4)
+    pc = PrefixCache(a)
+    bids = a.alloc(2)
+    for j in range(2):
+        pc.register(KEYS[j], bids[j])
+        a.decref(bids[j])
+    # a priority-3 request hits the k0 chain: k0's class rises
+    pc.commit(KEYS[:1], 1, priority=3)
+    pc.evict(1)
+    assert a.refcount(bids[0]) == 1, "hot high-priority entry evicted"
+    assert a.refcount(bids[1]) == 0
+
+
+def test_evict_skips_in_use_entries():
+    a = BlockAllocator(8, 4)
+    pc = PrefixCache(a)
+    bids = a.alloc(2)
+    for j in range(2):
+        pc.register(KEYS[j], bids[j])
+        a.decref(bids[j])
+    pc.acquire([bids[0]])          # an active request holds k0's block
+    assert pc.evictable() == 1
+    assert pc.evict(2) == 1        # only k1 can go
+    assert a.refcount(bids[0]) == 2
+    pc.release([bids[0]])
+
+
+# ---------------------------------------------------------------------- #
+# HostPool
+# ---------------------------------------------------------------------- #
+
+def test_host_pool_capacity_and_lru_eviction():
+    hp = HostPool(2)
+    d = {"k": np.ones((1, 4), np.float32)}
+    assert hp.put(b"a", d) and hp.put(b"b", d)
+    assert hp.put(b"c", d)             # evicts the LRU entry: a
+    assert b"a" not in hp and b"b" in hp and b"c" in hp
+    assert hp.used_blocks == 2 and hp.evicted == 1
+
+
+def test_host_pool_priority_protects_entries():
+    hp = HostPool(2)
+    d = {"k": np.ones((1, 4), np.float32)}
+    hp.put(b"hot1", d, priority=2)
+    hp.put(b"hot2", d, priority=2)
+    assert not hp.put(b"cold", d, priority=0)   # can't displace hotter
+    assert hp.rejected == 1 and b"cold" not in hp
+    assert hp.put(b"hotter", d, priority=3)     # can displace cooler
+    assert hp.used_blocks == 2 and b"hotter" in hp
+
+
+def test_host_pool_zero_capacity_rejects():
+    hp = HostPool(0)
+    assert not hp.put(b"a", {"k": np.ones(2, np.float32)})
+    assert hp.rejected == 1
+
+
+# ---------------------------------------------------------------------- #
+# TieredPrefixCache: spill / fetch / no dual residency
+# ---------------------------------------------------------------------- #
+
+def test_evict_spills_to_host_and_fetch_restores_bit_exact():
+    a, pc, dev = make_tiered(num_blocks=8, host_cap=8)
+    register_chain(a, pc, dev, 3)
+    orig = {j: dev["k"][:, pc.peek(KEYS[: j + 1])[j]].copy()
+            for j in range(3)}
+    assert pc.evict(3) == 3
+    assert pc.spilled_blocks == 3 and len(pc.host) == 3
+    assert a.free_blocks == 7 and len(pc) == 0
+    # scribble over the freed device blocks: fetch must restore from host
+    dev["k"][:] = -1.0
+    hits = pc.fetch_into_hbm(KEYS[:3], [], max_hits=3)
+    assert len(hits) == 3 and pc.fetched_blocks == 3
+    assert len(pc.host) == 0, "fetched entries still resident in host tier"
+    for j, bid in enumerate(hits):
+        np.testing.assert_array_equal(dev["k"][:, bid], orig[j])
+        assert a.refcount(bid) == 1          # the map's own reference
+    assert pc.peek(KEYS[:3]) == hits         # back to ordinary HBM hits
+
+
+def test_fetch_is_free_block_funded_and_capped():
+    a, pc, dev = make_tiered(num_blocks=8, host_cap=8)
+    register_chain(a, pc, dev, 4)
+    pc.evict(4)                      # all 4 spilled, 7 free
+    hold = a.alloc(5)                # squeeze the pool: 2 free
+    hits = pc.fetch_into_hbm(KEYS[:4], [], max_hits=4)
+    assert len(hits) == 2, "fetch must not exceed free blocks"
+    assert len(pc.host) == 2
+    # max_hits cap: even with room, never fetch past it
+    for b in hold:
+        a.decref(b)
+    hits = pc.peek(KEYS[:4])
+    hits = pc.fetch_into_hbm(KEYS[:4], hits, max_hits=3)
+    assert len(hits) == 3 and len(pc.host) == 1
+
+
+def test_no_key_resident_in_two_tiers_ever():
+    a, pc, dev = make_tiered(num_blocks=8, host_cap=8)
+    register_chain(a, pc, dev, 3)
+    pc.evict(2)
+    for k in KEYS[:3]:
+        assert not (pc._map.get(k) is not None and k in pc.host)
+    pc.fetch_into_hbm(KEYS[:3], pc.peek(KEYS[:3]), max_hits=3)
+    for k in KEYS[:3]:
+        assert not (pc._map.get(k) is not None and k in pc.host)
+
+
+def test_spill_honors_host_priority_drops_when_refused():
+    a, pc, dev = make_tiered(num_blocks=12, host_cap=2)
+    register_chain(a, pc, dev, 2, start=0, priority=5)   # hot chain
+    register_chain(a, pc, dev, 2, start=2, priority=0)   # cold chain
+    pc.evict(2)          # cold class evicts first: both cold blocks spill
+    assert pc.spilled_blocks == 2 and len(pc.host) == 2
+    pc.evict(2)          # hot blocks displace the colder host entries
+    assert pc.spilled_blocks == 4 and pc.host.evicted == 2
+    assert all(pc.host.get(k).priority == 5 for k in pc.host.keys())
+
+
+def test_unbound_tier_degrades_to_drop():
+    a = BlockAllocator(8, 4)
+    pc = TieredPrefixCache(a, HostPool(8))   # no bind_device_io
+    bids = a.alloc(2)
+    for j, bid in enumerate(bids):
+        pc.register(KEYS[j], bid)
+        a.decref(bid)
+    assert pc.evict(2) == 2
+    assert pc.dropped_blocks == 2 and len(pc.host) == 0
+    assert a.free_blocks == 7
+
+
+def test_peek_depth_counts_host_continuation():
+    a, pc, dev = make_tiered(num_blocks=8, host_cap=8)
+    register_chain(a, pc, dev, 4)
+    pc.commit(KEYS[:4], 4)                  # LRU: oldest first anyway
+    # spill the TAIL of the chain by protecting the head
+    pc.acquire(pc.peek(KEYS[:2]))
+    pc.evict(2)                             # spills k2, k3
+    pc.release(pc.peek(KEYS[:2]))
+    assert len(pc.peek(KEYS[:4])) == 2      # HBM run stops at the spill
+    assert pc.peek_depth(KEYS[:4]) == 4     # tier-aware depth sees it all
+    single = PrefixCache(a)
+    assert single.peek_depth(KEYS[:4]) == 0
+
+
+# ---------------------------------------------------------------------- #
+# engine level: bitwise identity, host hits, zero leaks
+# ---------------------------------------------------------------------- #
+
+def _churn(eng, fams, max_new=4):
+    """Submit each family's prompt twice, one at a time with drains, so
+    registration pressure evicts earlier families before their revisit."""
+    outs = {}
+    uid = 0
+    for wave in range(2):
+        for p in fams:
+            eng.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new))
+            uid += 1
+            eng.run_until_drained()
+    for r in eng.completed:
+        outs[r.uid] = list(r.generated)
+    return outs
+
+
+@pytest.fixture(scope="module")
+def churn_families():
+    rng = np.random.default_rng(7)
+    return [rng.integers(1, CFG.vocab_size, 64).tolist() for _ in range(4)]
+
+
+def test_tiered_streams_bitwise_identical_and_host_hits(churn_families):
+    tiered = make_engine(host_cache_blocks=64)
+    base = make_engine(host_cache_blocks=None)
+    out_t = _churn(tiered, churn_families)
+    out_b = _churn(base, churn_families)
+    assert out_t == out_b, "tiering changed a token stream"
+    s = tiered.scheduler.stats()
+    assert s["tier_spilled_blocks"] > 0, "undersized pool never spilled"
+    assert s["tier_fetched_blocks"] > 0, "revisits never hit the host tier"
+    m = tiered.metrics_summary()
+    assert m["mean_host_hit_tokens"] > 0
+    # the untiered run on the same undersized pool got no reuse at all
+    assert base.metrics_summary()["mean_prefix_hit_tokens"] == 0.0
+
+
+def test_tiered_full_drain_zero_leaks(churn_families):
+    eng = make_engine(host_cache_blocks=64)
+    _churn(eng, churn_families)
+    pc = eng.scheduler.prefix
+    # drop both tiers: every spilled/registered block must come back
+    freed = pc.evict(len(pc))
+    assert len(pc) == 0
+    pc.host.flush()
+    assert len(pc.host) == 0
+    assert eng.alloc.free_blocks == eng.num_blocks - 1
+    assert eng.alloc.check_conservation()
+
+
+# ---------------------------------------------------------------------- #
+# disk tier: warm restart, stale-store tolerance
+# ---------------------------------------------------------------------- #
+
+def test_warm_restart_first_wave_hits(tmp_path, churn_families):
+    store = str(tmp_path / "kv")
+    p = churn_families[0]
+    e1 = make_engine(host_cache_blocks=32, kv_store=store)
+    e1.submit(Request(uid=0, prompt=p, max_new_tokens=4))
+    e1.run_until_drained()
+    assert e1.save_kv_store() > 0
+    e2 = make_engine(host_cache_blocks=32, kv_store=store)
+    assert len(e2.scheduler.prefix.host) > 0, "store not preloaded"
+    e2.submit(Request(uid=0, prompt=p, max_new_tokens=4))
+    e2.run_until_drained()
+    r = e2.completed[0]
+    assert r.metrics.prefix_hit_tokens > 0, "warm restart served cold"
+    assert r.metrics.host_hit_tokens > 0
+    assert r.generated == e1.completed[0].generated
+
+
+def test_kv_store_defaults_host_tier_on(tmp_path):
+    eng = make_engine(kv_store=str(tmp_path / "kv"))
+    assert hasattr(eng.scheduler.prefix, "host")
+    assert eng.scheduler.prefix.host.capacity > 0
+
+
+def test_corrupt_store_serves_cold(tmp_path, churn_families):
+    store = tmp_path / "kv"
+    e1 = make_engine(host_cache_blocks=32, kv_store=str(store))
+    e1.submit(Request(uid=0, prompt=churn_families[0], max_new_tokens=4))
+    e1.run_until_drained()
+    e1.save_kv_store()
+    npz = store / "prefix_store.npz"
+    npz.write_bytes(npz.read_bytes()[:-8] + b"deadbeef")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        e2 = make_engine(host_cache_blocks=32, kv_store=str(store))
+    assert any("serving cold" in str(x.message) for x in w)
+    assert len(e2.scheduler.prefix.host) == 0
+    # and it still serves — cold, same stream
+    e2.submit(Request(uid=0, prompt=churn_families[0], max_new_tokens=4))
+    e2.run_until_drained()
+    assert e2.completed[0].generated == e1.completed[0].generated
+
+
+def test_layout_mismatch_serves_cold(tmp_path, churn_families):
+    store = str(tmp_path / "kv")
+    e1 = make_engine(host_cache_blocks=32, kv_store=store)
+    e1.submit(Request(uid=0, prompt=churn_families[0], max_new_tokens=4))
+    e1.run_until_drained()
+    e1.save_kv_store()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        e2 = make_engine(host_cache_blocks=32, kv_store=store,
+                         block_size=8, num_blocks=28)
+    assert any("serving cold" in str(x.message) for x in w)
+    assert len(e2.scheduler.prefix.host) == 0
+
+
+def test_missing_store_is_silent_first_run(tmp_path):
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng = make_engine(host_cache_blocks=32,
+                          kv_store=str(tmp_path / "never_written"))
+    assert not [x for x in w if "serving cold" in str(x.message)]
+    assert len(eng.scheduler.prefix.host) == 0
+
+
+# ---------------------------------------------------------------------- #
+# router: tier-aware affinity
+# ---------------------------------------------------------------------- #
+
+def test_router_affinity_sees_host_tier(churn_families):
+    from repro.serving.router import Router
+    e0 = make_engine(host_cache_blocks=64)
+    e1 = make_engine(host_cache_blocks=64)
+    router = Router([e0, e1], seed=0)
+    p = churn_families[0]
+    # prime replica 1 with the prefix, then spill it to its host pool
+    e1.submit(Request(uid=1000, prompt=p, max_new_tokens=4))
+    e1.run_until_drained()
+    pc = e1.scheduler.prefix
+    pc.evict(len(pc))
+    assert len(pc.host) > 0 and len(pc) == 0
+    assert pc.peek(prefix_keys(p[:127], 16)) == []
+    # the router must still route the revisit onto replica 1
+    req = Request(uid=2000, prompt=p, max_new_tokens=4)
+    assert router.route(req) == 1
+    assert router.affinity_hits == 1
