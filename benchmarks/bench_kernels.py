@@ -20,9 +20,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import ModelConfig
+from repro.kernels import quant
 from repro.kernels.flash_attention import paged_attention as pa
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.ssd import ref as ssd_ref
+from repro.models import transformer as T
 from benchmarks.common import emit, time_fn, write_json
 
 
@@ -129,6 +132,68 @@ def bench_paged(rng, smoke: bool) -> None:
     emit("kernels/paged_prefill_pallas_interpret", us_pp)
 
 
+def bench_paged_quant(rng, smoke: bool) -> None:
+    """Quantized (int8) pools through the same three lowerings, plus the
+    byte-accounting acceptance: at head_dim 64, int8 pools + f32 scales
+    must cost <= 0.55x the bf16 bytes/token, and the quantized Pallas walk
+    must still never materialize the dense DEQUANTIZED gather copy (the
+    failure mode that would erase the bandwidth win)."""
+    B, Hq, Hkv = (2, 4, 2) if smoke else (4, 8, 2)
+    D = 64                               # the 0.55x bound is a D=64 claim
+    bs, MB = (8, 8) if smoke else (16, 16)
+    Smax = bs * MB
+    NB = B * MB + 1
+    iters = 2 if smoke else 5
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((NB, bs, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NB, bs, Hkv, D)), jnp.float32)
+    kq, ks = quant.quantize(kp, jnp.int8)
+    vq, vs = quant.quantize(vp, jnp.int8)
+    pages = jnp.asarray(1 + np.arange(B * MB).reshape(B, MB), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, Smax + 1, B), jnp.int32)
+
+    gather_f32 = lambda *a: fa_ref.paged_decode_reference(
+        a[0], a[1], a[2], a[5], a[6], k_scale=a[3], v_scale=a[4])
+    pallas_q = lambda *a: pa.paged_decode(
+        a[0], a[1], a[2], a[5], a[6], k_scale=a[3], v_scale=a[4],
+        interpret=True)
+    args = (q, kq, vq, ks, vs, pages, lengths)
+
+    # the dense view a dequantize-then-gather lowering would materialize:
+    # ONE pool's pages widened to f32 (same bytes as the unquantized bench)
+    gather_bytes = B * MB * bs * Hkv * D * 4
+    t_gather = temp_bytes(gather_f32, *args)
+    t_pallas = temp_bytes(pallas_q, *args)
+    us_g = time_fn(jax.jit(gather_f32), *args, iters=iters)
+    us_p = time_fn(jax.jit(pallas_q), *args, iters=iters)
+    emit("kernels/paged_decode_quant_gather_ref", us_g,
+         f"temp={t_gather}B gather={gather_bytes}B, int8 pools")
+    emit("kernels/paged_decode_quant_pallas_interpret", us_p,
+         f"temp={t_pallas}B gather={gather_bytes}B, int8 pools, "
+         f"block dequant in VMEM")
+    assert t_pallas < gather_bytes, (
+        f"quantized Pallas decode materializes {t_pallas}B of temps — a "
+        f"dense dequantized {gather_bytes}B gather copy snuck back in")
+
+    # state-spec byte accounting at head_dim 64 (the ISSUE acceptance
+    # number): bytes/token = pool + scale leaves over block_size tokens
+    cfg = ModelConfig(name="q", family="dense", n_layers=2, d_model=256,
+                      n_heads=4, n_kv_heads=Hkv, d_ff=512, vocab_size=64,
+                      head_dim=D)
+    spec_bytes = lambda dt: sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in T.paged_kv_cache_specs(cfg, NB, bs, dt).values())
+    bpt_bf = spec_bytes(jnp.bfloat16) / (NB * bs)
+    bpt_i8 = spec_bytes(jnp.int8) / (NB * bs)
+    ratio = bpt_i8 / bpt_bf
+    emit("kernels/paged_quant_kv_bytes_per_token", bpt_i8,
+         f"{bpt_i8:.0f} B/tok int8+scales vs {bpt_bf:.0f} bf16 at D={D} "
+         f"(x{ratio:.3f})")
+    assert ratio <= 0.55, (
+        f"int8 pools + scales cost {ratio:.3f}x bf16 bytes/token at "
+        f"D={D} — exceeds the 0.55x acceptance bound")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -141,6 +206,7 @@ def main(argv=None) -> None:
         bench_attention(rng)
         bench_ssd(rng)
     bench_paged(rng, args.smoke)
+    bench_paged_quant(rng, args.smoke)
     if args.json:
         write_json(args.json)
 

@@ -30,13 +30,16 @@ import re
 import sys
 
 # the gate covers exactly the regression surface the serving tier promises:
-# time-to-first-token, steady-state decode rate, memory per device, and
-# (PR 8) how fast a replica death turns back into flowing tokens
+# time-to-first-token, steady-state decode rate, memory per device,
+# (PR 8) how fast a replica death turns back into flowing tokens, and
+# (PR 10) KV-cache bytes per token — lower is better, so a change that
+# bloats the quantized pool layout (wider scales, lost packing) fails here
 GATED = (
     re.compile(r"ttft"),
     re.compile(r"decode_tok_per_s"),
     re.compile(r"bytes_per_device"),
     re.compile(r"recovery"),
+    re.compile(r"kv_bytes_per_token"),
 )
 
 DEFAULT_THRESHOLD = 1.20

@@ -38,6 +38,14 @@ scalar-prefetched table, so the chunk lands directly in the pool
 pool, no materialized scatter indices). Tokens past the row's table width
 are redirected into the garbage block 0, which no valid mask ever reads.
 
+Quantized pools (int8/fp8, see :mod:`repro.kernels.quant`) fuse both
+directions into the same kernels: the walk DMAs each block's
+per-(slot, head) scale vector alongside its K/V tile and dequantizes in
+VMEM right after the waits (one VPU broadcast multiply — no dequantized
+pool copy ever exists in HBM, and the DMA'd bytes are *halved*), while
+``paged_write`` computes the absmax quant inside the scatter body and
+donates pool + scale array through the same index maps.
+
 Validated against the gather-then-dense references in interpret mode (CPU
 container, block sizes 4/8/16, GQA, ragged lengths); ``interpret=False``
 targets real TPUs. Lengths/pos semantics assume ``lengths >= 1`` for any
@@ -55,19 +63,33 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import quant
+
 NEG_INF = -1e30
 
 
-def _paged_attn_kernel(pages_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
-                       m_scr, l_scr, acc_scr, k_vmem, v_vmem, sem, *,
-                       bs: int, C: int, rep: int, scale: float):
+def _paged_attn_kernel(pages_ref, pos_ref, q_ref, k_hbm, v_hbm, *rest,
+                       bs: int, C: int, rep: int, scale: float,
+                       quantized: bool):
     """One (batch row, kv head, kv block) grid step of the paged walk.
 
     Scratch persists across the innermost (sequential) grid axis: m/l/acc
     carry the online softmax, k_vmem/v_vmem are the two DMA landing slots.
     ``pos_ref[b] + C`` is the row's visible-token count — for decode
     (C = 1, pos = lengths - 1) that is exactly ``lengths[b]``.
+
+    Quantized pools add per-(slot, head) scale vectors that ride the same
+    double-buffer rhythm: each block's ``(bs,)`` scale slice is DMA'd
+    alongside its K/V tile (own landing slots + semaphore) and the dequant
+    is a single VPU multiply right after the waits — the MXU sees the
+    same high-precision operands as the unquantized walk, so the online
+    softmax carry and the chunk-causal mask are untouched.
     """
+    if quantized:
+        (ks_hbm, vs_hbm, o_ref, m_scr, l_scr, acc_scr,
+         k_vmem, v_vmem, ks_vmem, vs_vmem, sem_s, sem) = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr, k_vmem, v_vmem, sem = rest
     b = pl.program_id(0)
     h = pl.program_id(1)
     ki = pl.program_id(2)
@@ -80,6 +102,18 @@ def _paged_attn_kernel(pages_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
         return pltpu.make_async_copy(
             hbm.at[blk, :, h, :], vmem.at[slot], sem.at[slot])
 
+    def scale_dma(slot, col, hbm, vmem):
+        blk = pages_ref[b, col]
+        return pltpu.make_async_copy(
+            hbm.at[blk, :, h], vmem.at[slot], sem_s.at[slot])
+
+    def start_block(slot, col):
+        block_dma(slot, col, k_hbm, k_vmem).start()
+        block_dma(slot, col, v_hbm, v_vmem).start()
+        if quantized:
+            scale_dma(slot, col, ks_hbm, ks_vmem).start()
+            scale_dma(slot, col, vs_hbm, vs_vmem).start()
+
     @pl.when(ki == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
@@ -88,8 +122,7 @@ def _paged_attn_kernel(pages_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
 
         @pl.when(visible > 0)
         def _warm():
-            block_dma(0, 0, k_hbm, k_vmem).start()
-            block_dma(0, 0, v_hbm, v_vmem).start()
+            start_block(0, 0)
 
     @pl.when(ki * bs < visible)
     def _body():
@@ -100,8 +133,7 @@ def _paged_attn_kernel(pages_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
         # across (b, h) rows.
         @pl.when((ki + 1) * bs < visible)
         def _prefetch():
-            block_dma((ki + 1) % 2, ki + 1, k_hbm, k_vmem).start()
-            block_dma((ki + 1) % 2, ki + 1, v_hbm, v_vmem).start()
+            start_block((ki + 1) % 2, ki + 1)
 
         slot = ki % 2
         # wait() only consumes the semaphore + dst shape; src is a dummy.
@@ -109,10 +141,20 @@ def _paged_attn_kernel(pages_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
                               sem.at[slot]).wait()
         pltpu.make_async_copy(v_hbm.at[0, :, h, :], v_vmem.at[slot],
                               sem.at[slot]).wait()
+        if quantized:
+            pltpu.make_async_copy(ks_hbm.at[0, :, h], ks_vmem.at[slot],
+                                  sem_s.at[slot]).wait()
+            pltpu.make_async_copy(vs_hbm.at[0, :, h], vs_vmem.at[slot],
+                                  sem_s.at[slot]).wait()
 
         q = q_ref[0, :, 0, :, :].astype(jnp.float32).reshape(C * rep, -1)
         k = k_vmem[slot].astype(jnp.float32)              # (bs, D)
         v = v_vmem[slot].astype(jnp.float32)
+        if quantized:
+            # dequant in VMEM: one broadcast multiply per tile, fused into
+            # the DMA shadow — never a dequantized pool copy in HBM
+            k = k * ks_vmem[slot][:, None]
+            v = v * vs_vmem[slot][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
 
@@ -140,66 +182,92 @@ def _paged_attn_kernel(pages_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
             .astype(o_ref.dtype).reshape(C, rep, -1)
 
 
-def _paged_walk(q, k_pool, v_pool, pages, pos, *, scale, interpret):
+def _paged_walk(q, k_pool, v_pool, pages, pos, *, scale, interpret,
+                k_scale=None, v_scale=None):
     """Shared pallas_call builder: q (B, C, Hq, D) through the page table
-    with the chunk-causal mask anchored at per-row ``pos``."""
+    with the chunk-causal mask anchored at per-row ``pos``. Quantized
+    pools (int8/fp8) pass their (NB, bs, Hkv) scale arrays as extra
+    HBM-resident operands."""
     B, C, Hq, D = q.shape
     _, bs, Hkv, _ = k_pool.shape
     MB = pages.shape[1]
     if Hq % Hkv:
         raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    quantized = k_scale is not None
+    if quantized and v_scale is None:
+        raise ValueError("k_scale given without v_scale")
     rep = Hq // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     qh = q.reshape(B, C, Hkv, rep, D)
 
+    in_specs = [
+        pl.BlockSpec((1, C, 1, rep, D),
+                     lambda b, h, ki, *_: (b, 0, h, 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),   # K pool stays in HBM
+        pl.BlockSpec(memory_space=pltpu.ANY),   # V pool stays in HBM
+    ]
+    scratch = [
+        pltpu.VMEM((C * rep,), jnp.float32),          # m
+        pltpu.VMEM((C * rep,), jnp.float32),          # l
+        pltpu.VMEM((C * rep, D), jnp.float32),        # acc
+        pltpu.VMEM((2, bs, D), k_pool.dtype),         # K landing slots
+        pltpu.VMEM((2, bs, D), v_pool.dtype),         # V landing slots
+    ]
+    operands = [pages, jnp.asarray(pos, jnp.int32), qh, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec(memory_space=pltpu.ANY),     # K scales (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),     # V scales (HBM)
+        ]
+        scratch += [
+            pltpu.VMEM((2, bs), k_scale.dtype),       # K scale slots
+            pltpu.VMEM((2, bs), v_scale.dtype),       # V scale slots
+            pltpu.SemaphoreType.DMA((2,)),            # scale DMA sem
+        ]
+        operands += [k_scale, v_scale]
+    scratch += [pltpu.SemaphoreType.DMA((2,))]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,            # pages, pos
         grid=(B, Hkv, MB),
-        in_specs=[
-            pl.BlockSpec((1, C, 1, rep, D),
-                         lambda b, h, ki, *_: (b, 0, h, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),   # K pool stays in HBM
-            pl.BlockSpec(memory_space=pltpu.ANY),   # V pool stays in HBM
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, C, 1, rep, D),
                                lambda b, h, ki, *_: (b, 0, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((C * rep,), jnp.float32),          # m
-            pltpu.VMEM((C * rep,), jnp.float32),          # l
-            pltpu.VMEM((C * rep, D), jnp.float32),        # acc
-            pltpu.VMEM((2, bs, D), k_pool.dtype),         # K landing slots
-            pltpu.VMEM((2, bs, D), v_pool.dtype),         # V landing slots
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
+        scratch_shapes=scratch,
     )
     out = pl.pallas_call(
         functools.partial(_paged_attn_kernel, bs=bs, C=C, rep=rep,
-                          scale=scale),
+                          scale=scale, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, C, Hkv, rep, D), q.dtype),
         interpret=interpret,
-    )(pages, jnp.asarray(pos, jnp.int32), qh, k_pool, v_pool)
+    )(*operands)
     return out.reshape(B, C, Hq, D)
 
 
 def paged_decode(q, k_pool, v_pool, pages, lengths, *, scale=None,
+                 k_scale=None, v_scale=None,
                  interpret: bool = False) -> jax.Array:
     """Single-token decode through the page table. q (B, 1, Hq, D); pools
     (num_blocks, block_size, Hkv, D); pages (B, max_blocks) int32;
-    lengths (B,) valid token counts (the query sees kpos < lengths[b])."""
+    lengths (B,) valid token counts (the query sees kpos < lengths[b]).
+    Quantized pools pass (NB, bs, Hkv) scales via k_scale/v_scale."""
     B, one, _, _ = q.shape
     assert one == 1, "decode takes a single query token per row"
     return _paged_walk(q, k_pool, v_pool, pages,
                        jnp.asarray(lengths, jnp.int32) - 1,
-                       scale=scale, interpret=interpret)
+                       scale=scale, interpret=interpret,
+                       k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_prefill(q, k_pool, v_pool, pages, pos, *, scale=None,
+                  k_scale=None, v_scale=None,
                   interpret: bool = False) -> jax.Array:
     """Chunk-causal prefill through the page table. q (B, C, Hq, D);
     query i of row b sees gathered positions ``<= pos[b] + i``."""
     return _paged_walk(q, k_pool, v_pool, pages, pos,
-                       scale=scale, interpret=interpret)
+                       scale=scale, interpret=interpret,
+                       k_scale=k_scale, v_scale=v_scale)
 
 
 def prefill_dense(q, k_cache, v_cache, pos, *, scale=None,
@@ -229,13 +297,37 @@ def _paged_write_kernel(pages_ref, pos_ref, new_ref, pool_ref, out_ref):
     out_ref[...] = new_ref[...].astype(out_ref.dtype)
 
 
-def paged_write(pool, new, pages, pos, *, interpret: bool = False):
+def _paged_write_quant_kernel(pages_ref, pos_ref, new_ref, pool_ref,
+                              scale_pool_ref, out_ref, scale_out_ref, *,
+                              qmax: float, integer: bool):
+    # Quant fused into the scatter: per-(token, head) absmax over D on the
+    # VPU, then the same output-index-map landing — op-for-op identical to
+    # quant.quantize so the XLA path writes bit-identical pools.
+    del pages_ref, pos_ref, pool_ref, scale_pool_ref
+    x = new_ref[...].astype(jnp.float32)                  # (1, 1, Hkv, D)
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), quant._EPS)
+    # reciprocal multiply, matching quant.quantize (see the note there)
+    s = (amax * (1.0 / qmax)).astype(scale_out_ref.dtype)  # (1, 1, Hkv)
+    q = x / s.astype(jnp.float32)[..., None]
+    if integer:
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+    out_ref[...] = q.astype(out_ref.dtype)
+    scale_out_ref[...] = s
+
+
+def paged_write(pool, new, pages, pos, *, pool_scale=None,
+                interpret: bool = False):
     """Fused scatter of a (B, C, Hkv, D) chunk into a (NB, bs, Hkv, D)
     pool: token i of row b lands at block ``pages[b, (pos[b]+i) // bs]``,
     slot ``(pos[b]+i) % bs``. Tokens past the table width go to the
     garbage block 0 (never read). The pool is donated in place
     (``input_output_aliases``): no flat-index materialization, no
-    read-modify-write of untouched blocks."""
+    read-modify-write of untouched blocks.
+
+    With ``pool_scale`` (quantized (NB, bs, Hkv) scale array), the chunk
+    is absmax-quantized to the pool dtype *inside* the scatter — both the
+    pool and the scale array are donated outputs and the per-token scale
+    lands through the same index map. Returns ``(pool, pool_scale)``."""
     NB, bs, Hkv, D = pool.shape
     B, C = new.shape[:2]
     MB = pages.shape[1]
@@ -246,21 +338,52 @@ def paged_write(pool, new, pages, pos, *, interpret: bool = False):
         blk = jnp.where(col < MB, pages_ref[b, jnp.minimum(col, MB - 1)], 0)
         return blk, p % bs, 0, 0
 
+    if pool_scale is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,            # pages, pos
+            grid=(B, C),
+            in_specs=[
+                pl.BlockSpec((1, 1, Hkv, D), lambda b, i, *_: (b, i, 0, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),  # donated pool (unread)
+            ],
+            out_specs=pl.BlockSpec((1, 1, Hkv, D), out_map),
+        )
+        return pl.pallas_call(
+            _paged_write_kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+            # operand 3 counting the two scalar-prefetch args: (pages, pos,
+            # new, pool) -> pool aliases the single output
+            input_output_aliases={3: 0},
+            interpret=interpret,
+        )(pages, jnp.asarray(pos, jnp.int32), new, pool)
+
+    def scale_map(b, i, pages_ref, pos_ref):
+        p = pos_ref[b] + i
+        col = p // bs
+        blk = jnp.where(col < MB, pages_ref[b, jnp.minimum(col, MB - 1)], 0)
+        return blk, p % bs, 0
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,            # pages, pos
+        num_scalar_prefetch=2,                # pages, pos
         grid=(B, C),
         in_specs=[
             pl.BlockSpec((1, 1, Hkv, D), lambda b, i, *_: (b, i, 0, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),   # donated pool (unread)
+            pl.BlockSpec(memory_space=pltpu.ANY),   # donated scales (unread)
         ],
-        out_specs=pl.BlockSpec((1, 1, Hkv, D), out_map),
+        out_specs=[pl.BlockSpec((1, 1, Hkv, D), out_map),
+                   pl.BlockSpec((1, 1, Hkv), scale_map)],
     )
+    qd = jnp.dtype(pool.dtype)
     return pl.pallas_call(
-        _paged_write_kernel,
+        functools.partial(_paged_write_quant_kernel, qmax=quant.qmax(qd),
+                          integer=bool(jnp.issubdtype(qd, jnp.integer))),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
-        # operand 3 counting the two scalar-prefetch args: (pages, pos,
-        # new, pool) -> pool aliases the single output
-        input_output_aliases={3: 0},
+        out_shape=[jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+                   jax.ShapeDtypeStruct(pool_scale.shape, pool_scale.dtype)],
+        # operands counting the two scalar-prefetch args: (pages, pos, new,
+        # pool, scales) -> pool and scales alias the two outputs
+        input_output_aliases={3: 0, 4: 1},
         interpret=interpret,
-    )(pages, jnp.asarray(pos, jnp.int32), new, pool)
+    )(pages, jnp.asarray(pos, jnp.int32), new, pool, pool_scale)

@@ -220,37 +220,58 @@ def prefill_reference(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def gather_pages(pool: jax.Array, pages: jax.Array) -> jax.Array:
     """Materialize per-row dense caches from a block pool.
 
-    ``pool`` (num_blocks, block_size, Hkv, D); ``pages`` (B, max_blocks)
-    int32 block ids (0 = the garbage block — rows past a request's length,
-    masked out downstream). Returns (B, max_blocks * block_size, Hkv, D),
-    the exact dense cache the row would have held, so the dense references
-    below apply unchanged and paged-vs-dense logits agree bitwise.
+    ``pool`` (num_blocks, block_size, Hkv, D) — or a (num_blocks,
+    block_size, Hkv) scale array; any trailing shape rides along.
+    ``pages`` (B, max_blocks) int32 block ids (0 = the garbage block —
+    rows past a request's length, masked out downstream). Returns
+    (B, max_blocks * block_size, ...), the exact dense cache the row
+    would have held, so the dense references below apply unchanged and
+    paged-vs-dense logits agree bitwise.
     """
-    nb, bs, Hkv, D = pool.shape
+    bs = pool.shape[1]
     B, MB = pages.shape
-    g = jnp.take(pool, pages, axis=0)            # (B, MB, bs, Hkv, D)
-    return g.reshape(B, MB * bs, Hkv, D)
+    g = jnp.take(pool, pages, axis=0)            # (B, MB, bs, ...)
+    return g.reshape((B, MB * bs) + pool.shape[2:])
+
+
+def _gather_dequant(pool, scale_arr, pages):
+    """Gather a quantized pool + its scales into the dense f32 cache the
+    unquantized row would have held — the jnp mirror of the kernel's
+    in-VMEM dequant, so the same dense oracles apply to quantized pools."""
+    dense = gather_pages(pool, pages).astype(jnp.float32)
+    s = gather_pages(scale_arr, pages).astype(jnp.float32)
+    return dense * s[..., None]
 
 
 def paged_prefill_reference(q: jax.Array, k_pool: jax.Array,
                             v_pool: jax.Array, pages: jax.Array,
-                            pos: jax.Array, *, scale: float | None = None
-                            ) -> jax.Array:
+                            pos: jax.Array, *, scale: float | None = None,
+                            k_scale: jax.Array | None = None,
+                            v_scale: jax.Array | None = None) -> jax.Array:
     """Chunk-causal prefill attention through a page table: gather each
     row's blocks into its dense-equivalent cache, then delegate to
     :func:`prefill_reference` (the oracle for paged-vs-dense equivalence).
-    A Pallas kernel that gathers block-by-block in VMEM slots in behind
-    :func:`repro.kernels.ops.attention_prefill_paged` later."""
+    Quantized pools pass their (NB, bs, Hkv) scales via k_scale/v_scale
+    and are dequantized in the gather."""
+    if k_scale is not None:
+        return prefill_reference(q, _gather_dequant(k_pool, k_scale, pages),
+                                 _gather_dequant(v_pool, v_scale, pages),
+                                 pos, scale=scale)
     return prefill_reference(q, gather_pages(k_pool, pages),
                              gather_pages(v_pool, pages), pos, scale=scale)
 
 
 def paged_decode_reference(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, pages: jax.Array,
-                           lengths: jax.Array, *, scale: float | None = None
-                           ) -> jax.Array:
+                           lengths: jax.Array, *, scale: float | None = None,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None) -> jax.Array:
     """Single-token decode attention through a page table (see
     :func:`paged_prefill_reference`)."""
+    if k_scale is not None:
+        return decode_reference(q, _gather_dequant(k_pool, k_scale, pages),
+                                _gather_dequant(v_pool, v_scale, pages),
+                                lengths, scale=scale)
     return decode_reference(q, gather_pages(k_pool, pages),
                             gather_pages(v_pool, pages), lengths, scale=scale)
 

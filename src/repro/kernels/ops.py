@@ -6,7 +6,8 @@ the plain-XLA reference executes. The dry-run container always takes the XLA
 path (TPU Pallas cannot lower on CPU backends); real-TPU deployments flip
 ``Context.kernels`` to ``"pallas"``.
 
-Op x mode matrix (which implementation runs):
+Op x mode matrix (which implementation runs, and — for the paged ops —
+where quantized pools (int8/fp8, :mod:`repro.kernels.quant`) convert):
 
 =========================  ==============  ==============  ===================
 op                         xla             xla_chunked     pallas[_interpret]
@@ -15,8 +16,14 @@ attention                  mha_reference   mha_chunked     flash_attention
 attention_decode           decode ref      decode ref      flash_decode
 attention_prefill          prefill ref     prefill ref     paged walk [#f1]_
 attention_decode_paged     gather+dense    gather+dense    paged_decode
+  quant (k/v_scale)        dequant in the  dequant in the  dequant in VMEM
+                           gather [#f3]_   gather [#f3]_   post-DMA [#f4]_
 attention_prefill_paged    gather+dense    gather+dense    paged_prefill
+  quant (k/v_scale)        dequant in the  dequant in the  dequant in VMEM
+                           gather [#f3]_   gather [#f3]_   post-DMA [#f4]_
 paged_cache_write          jnp scatter     jnp scatter     fused paged_write
+  quant (pool_scale)       jnp quantize +  jnp quantize +  absmax quant in
+                           2-array scatter 2-array scatter the scatter body
 ssd                        ssd_chunked     ssd_chunked     ssd kernel [#f2]_
 ssd_decode_step            jnp             jnp             jnp (elementwise)
 =========================  ==============  ==============  ===================
@@ -24,6 +31,25 @@ ssd_decode_step            jnp             jnp             jnp (elementwise)
 .. [#f1] dense prefill is the paged walk over an identity page table (a
    contiguous cache reshapes to a block pool for free).
 .. [#f2] stateful continuation (``h0``) always takes the chunked-jnp path.
+.. [#f3] ``gather_pages`` on the quantized pool + scale array, then one
+   broadcast multiply — the dense copy is f32, so the same dense oracle
+   applies and XLA-vs-Pallas parity holds at quantized dtypes too.
+.. [#f4] *why VMEM*: dequantizing right after the double-buffered DMA
+   wait means the HBM traffic is the **quantized** bytes (the whole point
+   of the scheme — the walk is bandwidth-bound), the dequant multiply
+   hides in the next block's DMA shadow, and the MXU sees exactly the
+   high-precision operands of the unquantized walk, leaving the online
+   softmax carry and chunk-causal mask untouched. A dequantized pool
+   never exists in HBM in any mode.
+
+Quantization scheme (shared by all modes): symmetric absmax, one f32
+scale per written (token slot, kv head) — scale arrays (NB, bs, Hkv)
+alongside each (NB, bs, Hkv, D) pool. Per-*slot* (not per-block) scales
+keep the fused write a pure scatter (no read-modify-write of sibling
+slots) and keep speculative decode bitwise: a stored token's bytes never
+depend on rejected draft tokens sharing its block. The XLA quantize and
+the Pallas write-kernel quantize are op-for-op identical, so pools are
+bit-identical across modes and spill/fetch round-trips are exact.
 
 Speculative verify steps (PR 6) add **no rows**: a ``(B, 1 + k)`` draft
 window is just another chunk width through ``attention_prefill_paged``
@@ -97,19 +123,29 @@ def _repl(*arrays):
     return tuple(P() for _ in arrays)
 
 
-def _tp_heads_call(fn, q, kv_args, rep_args):
+def _head_spec(a, ax):
+    """PartitionSpec sharding array ``a``'s axis ``ax`` on the model axis."""
+    ax = ax % a.ndim
+    return P(*(None,) * ax, "model", *(None,) * (a.ndim - ax - 1))
+
+
+def _tp_heads_call(fn, q, kv_args, rep_args, kv_axes=None):
     """Run ``fn(q, *kv_args, *rep_args) -> (B, C, Hq, D)`` under shard_map.
 
-    ``kv_args`` carry the kv-head axis at position -2 (block pools
-    ``(NB, bs, Hkv, D)`` and dense caches ``(B, S, Hkv, D)`` both do);
-    ``rep_args`` (page tables, positions, lengths) replicate. Layouts, in
-    preference order: shard kv heads (each shard walks only its local pool
-    slice); GQA ``Hkv < tp``: replicate KV, shard the per-group query
-    heads; indivisible probe geometries: run fully replicated.
+    ``kv_args`` carry the kv-head axis at the per-arg position in
+    ``kv_axes`` (default -2 for every arg: block pools ``(NB, bs, Hkv, D)``
+    and dense caches ``(B, S, Hkv, D)`` both do; quantized scale arrays
+    ``(NB, bs, Hkv)`` pass -1); ``rep_args`` (page tables, positions,
+    lengths) replicate. Layouts, in preference order: shard kv heads (each
+    shard walks only its local pool slice); GQA ``Hkv < tp``: replicate
+    KV, shard the per-group query heads; indivisible probe geometries:
+    run fully replicated.
     """
     mesh = _tp_mesh()
     if mesh is None:
         return fn(q, *kv_args, *rep_args)
+    if kv_axes is None:
+        kv_axes = (-2,) * len(kv_args)
     tp = mesh.shape["model"]
     B, C, Hq, D = q.shape
     Hkv = kv_args[0].shape[-2]
@@ -119,7 +155,7 @@ def _tp_heads_call(fn, q, kv_args, rep_args):
         # head h // rep), so sharding the q-head axis into tp contiguous
         # chunks lands each chunk on the shard holding its kv heads.
         kv_specs = tuple(
-            P(*(None,) * (a.ndim - 2), "model", None) for a in kv_args)
+            _head_spec(a, ax) for a, ax in zip(kv_args, kv_axes))
         sharded = shard_map(
             fn, mesh=mesh,
             in_specs=(P(None, None, "model", None),) + kv_specs + rep_specs,
@@ -147,20 +183,27 @@ def _tp_heads_call(fn, q, kv_args, rep_args):
     return sharded(q, *kv_args, *rep_args)
 
 
-def _tp_write_call(fn, pool, new, pages, pos):
+def _tp_write_call(fn, pool, new, pages, pos, pool_scale=None):
     """Fused paged scatter under shard_map: pool and chunk both shard on
-    the kv-head axis (position -2), page table and positions replicate.
-    The per-shard kernel still donates its pool slice in place via
+    the kv-head axis (position -2; a quantized scale array shards the same
+    head axis at -1), page table and positions replicate. The per-shard
+    kernel still donates its pool (+ scale) slice in place via
     ``input_output_aliases``."""
     mesh = _tp_mesh()
     if mesh is None:
-        return fn(pool, new, pages, pos)
+        return fn(pool, new, pages, pos) if pool_scale is None \
+            else fn(pool, new, pages, pos, pool_scale)
     tp = mesh.shape["model"]
-    kv = (P(*(None,) * (pool.ndim - 2), "model", None)
-          if pool.shape[-2] % tp == 0 else P())
-    sharded = shard_map(fn, mesh=mesh, in_specs=(kv, kv, P(), P()),
-                        out_specs=kv, check_rep=False)
-    return sharded(pool, new, pages, pos)
+    split = pool.shape[-2] % tp == 0
+    kv = _head_spec(pool, -2) if split else P()
+    if pool_scale is None:
+        sharded = shard_map(fn, mesh=mesh, in_specs=(kv, kv, P(), P()),
+                            out_specs=kv, check_rep=False)
+        return sharded(pool, new, pages, pos)
+    sc = _head_spec(pool_scale, -1) if split else P()
+    sharded = shard_map(fn, mesh=mesh, in_specs=(kv, kv, P(), P(), sc),
+                        out_specs=(kv, sc), check_rep=False)
+    return sharded(pool, new, pages, pos, pool_scale)
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
@@ -219,7 +262,8 @@ def attention_prefill(q, k_cache, v_cache, pos, *, scale=None) -> jax.Array:
 
 
 def attention_decode_paged(q, k_pool, v_pool, pages, lengths, *,
-                           scale=None) -> jax.Array:
+                           scale=None, k_scale=None,
+                           v_scale=None) -> jax.Array:
     """Single-token decode against a block-paged cache: q (B, 1, Hq, D),
     pools (num_blocks, block_size, Hkv, D), ``pages`` (B, max_blocks) int32
     block ids per row, ``lengths`` (B,) valid token counts.
@@ -228,12 +272,27 @@ def attention_decode_paged(q, k_pool, v_pool, pages, lengths, *,
     HBM pass plus a transient dense copy sized by the worst-case table
     width. Pallas modes walk the page table in VMEM (double-buffered block
     DMAs, no materialized gather): :mod:`.flash_attention.paged_attention`.
+
+    Quantized pools (int8/fp8) pass their (NB, bs, Hkv) scale arrays via
+    ``k_scale``/``v_scale``; see the matrix above for where each mode
+    dequantizes.
     """
     mode = _ctx.get_default_context().kernels
     if mode in ("xla", "xla_chunked"):
         return fa_ref.paged_decode_reference(q, k_pool, v_pool, pages,
-                                             lengths, scale=scale)
+                                             lengths, scale=scale,
+                                             k_scale=k_scale,
+                                             v_scale=v_scale)
     from repro.kernels.flash_attention import paged_attention as pa
+
+    if k_scale is not None:
+        def _call_q(q_, k_, v_, ks_, vs_, pages_, len_):
+            return pa.paged_decode(q_, k_, v_, pages_, len_, scale=scale,
+                                   k_scale=ks_, v_scale=vs_,
+                                   interpret=(mode == "pallas_interpret"))
+
+        return _tp_heads_call(_call_q, q, (k_pool, v_pool, k_scale, v_scale),
+                              (pages, lengths), kv_axes=(-2, -2, -1, -1))
 
     def _call(q_, k_, v_, pages_, len_):
         return pa.paged_decode(q_, k_, v_, pages_, len_, scale=scale,
@@ -243,17 +302,28 @@ def attention_decode_paged(q, k_pool, v_pool, pages, lengths, *,
 
 
 def attention_prefill_paged(q, k_pool, v_pool, pages, pos, *,
-                            scale=None) -> jax.Array:
+                            scale=None, k_scale=None,
+                            v_scale=None) -> jax.Array:
     """Chunk-causal prefill against a block-paged cache: q (B, C, Hq, D)
     with query i of row b seeing positions ``<= pos[b] + i`` gathered
     through the row's page table (see :func:`attention_decode_paged` for
-    the layout and mode dispatch).
+    the layout, mode dispatch and quantized-pool handling).
     """
     mode = _ctx.get_default_context().kernels
     if mode in ("xla", "xla_chunked"):
         return fa_ref.paged_prefill_reference(q, k_pool, v_pool, pages, pos,
-                                              scale=scale)
+                                              scale=scale, k_scale=k_scale,
+                                              v_scale=v_scale)
     from repro.kernels.flash_attention import paged_attention as pa
+
+    if k_scale is not None:
+        def _call_q(q_, k_, v_, ks_, vs_, pages_, pos_):
+            return pa.paged_prefill(q_, k_, v_, pages_, pos_, scale=scale,
+                                    k_scale=ks_, v_scale=vs_,
+                                    interpret=(mode == "pallas_interpret"))
+
+        return _tp_heads_call(_call_q, q, (k_pool, v_pool, k_scale, v_scale),
+                              (pages, pos), kv_axes=(-2, -2, -1, -1))
 
     def _call(q_, k_, v_, pages_, pos_):
         return pa.paged_prefill(q_, k_, v_, pages_, pos_, scale=scale,
@@ -262,7 +332,7 @@ def attention_prefill_paged(q, k_pool, v_pool, pages, pos, *,
     return _tp_heads_call(_call, q, (k_pool, v_pool), (pages, pos))
 
 
-def paged_cache_write(pool, new, pages, pos):
+def paged_cache_write(pool, new, pages, pos, *, pool_scale=None):
     """Scatter a (B, C, Hkv, D) K/V chunk into a (NB, bs, Hkv, D) pool.
 
     Token i of row b lands at flat slot ``pages[b, p // bs] * bs + p % bs``
@@ -276,10 +346,24 @@ def paged_cache_write(pool, new, pages, pos):
     Pallas modes fuse the scatter into a kernel whose output index map
     computes each token's (block, slot) destination directly (pool donated
     in place); XLA modes use the flat jnp scatter below.
+
+    With ``pool_scale`` (quantized pool's (NB, bs, Hkv) scale array), the
+    chunk is absmax-quantized to the pool dtype on the way in — inside the
+    Pallas scatter body, or as a jnp quantize feeding a two-array scatter
+    in the XLA modes (bit-identical results) — and ``(pool, pool_scale)``
+    is returned.
     """
     mode = _ctx.get_default_context().kernels
     if mode not in ("xla", "xla_chunked"):
         from repro.kernels.flash_attention import paged_attention as pa
+
+        if pool_scale is not None:
+            def _call_q(pool_, new_, pages_, pos_, scale_):
+                return pa.paged_write(pool_, new_, pages_, pos_,
+                                      pool_scale=scale_,
+                                      interpret=(mode == "pallas_interpret"))
+
+            return _tp_write_call(_call_q, pool, new, pages, pos, pool_scale)
 
         def _call(pool_, new_, pages_, pos_):
             return pa.paged_write(pool_, new_, pages_, pos_,
@@ -295,6 +379,17 @@ def paged_cache_write(pool, new, pages, pos):
         pages, jax.numpy.clip(col, 0, MB - 1), axis=1)
     blk = jax.numpy.where(col < MB, blk, 0)    # overrun -> garbage block
     flat = (blk * bs + p % bs).reshape(-1)
+    if pool_scale is not None:
+        from repro.kernels import quant
+        new_q, s_new = quant.quantize(new, pool.dtype)
+        pool_flat = pool.reshape((nb * bs,) + pool.shape[2:])
+        pool_flat = pool_flat.at[flat].set(
+            new_q.reshape((B * C,) + new_q.shape[2:]))
+        scale_flat = pool_scale.reshape((nb * bs,) + pool_scale.shape[2:])
+        scale_flat = scale_flat.at[flat].set(
+            s_new.astype(pool_scale.dtype).reshape((B * C,) + s_new.shape[2:]))
+        return (pool_flat.reshape(pool.shape),
+                scale_flat.reshape(pool_scale.shape))
     pool_flat = pool.reshape((nb * bs,) + pool.shape[2:])
     pool_flat = pool_flat.at[flat].set(
         new.astype(pool.dtype).reshape((B * C,) + new.shape[2:]))

@@ -47,6 +47,14 @@ Flags:
                    paged-attention page-table walk — real TPUs only), or
                    pallas_interpret (same kernels on the CPU interpreter).
                    Defaults to $REPRO_KERNELS when set.
+  --kv-dtype D     paged KV pool storage dtype: native (default; the
+                   compute dtype), int8 or fp8 (quantized pools with
+                   per-(token, kv-head) scales — quant fused into the
+                   write scatter, dequant into the attention walk; ~0.53x
+                   the bf16 HBM bytes/token at head_dim 64, so the same
+                   pool holds ~2x the cached tokens), or bf16/fp16/fp32.
+                   Defaults to $REPRO_KV_DTYPE when set. fp8 falls back
+                   to int8 with a warning on jax builds without float8.
   --tp N           tensor parallelism: shard params and the paged KV pools
                    over an N-wide (data=1, model=N) mesh so one engine
                    spans N devices (each holds 1/N of the KV bytes). Needs
@@ -187,11 +195,22 @@ def main(argv=None) -> int:
                     choices=kernel_modes,
                     help="kernel mode for the serving step "
                          "(default: $REPRO_KERNELS or ambient context)")
+    kv_dtypes = ["native", "int8", "fp8", "bf16", "fp16", "fp32"]
+    ap.add_argument("--kv-dtype",
+                    default=os.environ.get("REPRO_KV_DTYPE") or None,
+                    choices=kv_dtypes,
+                    help="paged KV pool storage dtype: int8/fp8 quantize "
+                         "with fused per-token scales; native (default) "
+                         "keeps the compute dtype "
+                         "(default: $REPRO_KV_DTYPE or native)")
     args = ap.parse_args(argv)
     # argparse does not validate `choices` against env-supplied defaults
     if args.kernels is not None and args.kernels not in kernel_modes:
         ap.error(f"invalid kernel mode {args.kernels!r} "
                  f"(from $REPRO_KERNELS?)")
+    if args.kv_dtype is not None and args.kv_dtype not in kv_dtypes:
+        ap.error(f"invalid kv dtype {args.kv_dtype!r} "
+                 f"(from $REPRO_KV_DTYPE?)")
     try:
         priorities = [int(p) for p in args.priority.split(",") if p != ""]
     except ValueError:
@@ -236,7 +255,8 @@ def main(argv=None) -> int:
                      spec_ngram=args.spec_ngram,
                      host_cache_blocks=args.host_cache_blocks or None,
                      host_cache_gb=args.host_cache_gb,
-                     kv_store=args.kv_store)
+                     kv_store=args.kv_store,
+                     kv_dtype=args.kv_dtype)
 
     if args.port is not None:
         # server mode: HTTP/SSE frontend, optional multi-replica router
@@ -278,7 +298,8 @@ def main(argv=None) -> int:
               f"aging {args.sched_aging:g}s", flush=True)
     if engine.paged:
         print(f"paged KV: {engine.num_blocks} blocks x "
-              f"{engine.block_size} tok"
+              f"{engine.block_size} tok, {engine.kv_dtype} pools "
+              f"({engine.kv_bytes_per_token():.0f} B/tok)"
               f"{', prefix cache on' if engine.prefix else ''}"
               f" | kernels={args.kernels or 'ambient'}", flush=True)
         if engine.prefix is not None and hasattr(engine.prefix, "host"):
@@ -322,6 +343,9 @@ def main(argv=None) -> int:
         if "mean_prefix_hit_tokens" in m:
             line += (f" | prefix hits "
                      f"{m['mean_prefix_hit_tokens']:.1f} tok/req")
+        if "kv_bytes_per_token" in m:
+            line += (f" | KV {engine.kv_dtype} "
+                     f"{m['kv_bytes_per_token']:.0f} B/tok")
         if "host_pool_capacity" in m:
             line += (f" | tier: {m['tier_spilled_blocks']:.0f} spilled / "
                      f"{m['tier_fetched_blocks']:.0f} fetched blk, host "

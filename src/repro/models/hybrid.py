@@ -19,6 +19,7 @@ import repro.core as nn
 from repro.core import functions as F
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import named_zeros
+from repro.kernels import quant
 from repro.models import mamba as M
 from repro.models import transformer as T
 
@@ -144,9 +145,19 @@ def init_paged_state(cfg: ModelConfig, batch: int, num_blocks: int,
     sites = n_attn_sites(cfg)
     kv_shape = (sites, num_blocks, block_size, cfg.n_kv_heads, hd)
     kv_names = ("layers", None, None, "kv_heads", "head_dim")
-    return {"ssm": M.init_state(cfg, batch, dtype),
-            "kv": {"k": named_zeros(kv_names, kv_shape, dtype),
-                   "v": named_zeros(kv_names, kv_shape, dtype)}}
+    kv = {"k": named_zeros(kv_names, kv_shape, dtype),
+          "v": named_zeros(kv_names, kv_shape, dtype)}
+    if quant.is_quantized(dtype):
+        # quantized pools carry per-(slot, head) scale leaves; the SSM
+        # state stays in the compute dtype (it is O(1) per slot — nothing
+        # to page, nothing worth quantizing)
+        s_names = ("layers", None, None, "kv_heads")
+        kv["k_scale"] = named_zeros(s_names, kv_shape[:-1], quant.SCALE_DTYPE)
+        kv["v_scale"] = named_zeros(s_names, kv_shape[:-1], quant.SCALE_DTYPE)
+    return {"ssm": M.init_state(cfg, batch,
+                                dtype if not quant.is_quantized(dtype)
+                                else jnp.bfloat16),
+            "kv": kv}
 
 
 def paged_state_specs(cfg: ModelConfig, batch: int, num_blocks: int,
@@ -154,9 +165,15 @@ def paged_state_specs(cfg: ModelConfig, batch: int, num_blocks: int,
     hd = cfg.resolved_head_dim
     sites = n_attn_sites(cfg)
     kv_shape = (sites, num_blocks, block_size, cfg.n_kv_heads, hd)
-    return {"ssm": M.state_specs(cfg, batch, dtype),
-            "kv": {"k": jax.ShapeDtypeStruct(kv_shape, dtype),
-                   "v": jax.ShapeDtypeStruct(kv_shape, dtype)}}
+    kv = {"k": jax.ShapeDtypeStruct(kv_shape, dtype),
+          "v": jax.ShapeDtypeStruct(kv_shape, dtype)}
+    if quant.is_quantized(dtype):
+        kv["k_scale"] = jax.ShapeDtypeStruct(kv_shape[:-1], quant.SCALE_DTYPE)
+        kv["v_scale"] = jax.ShapeDtypeStruct(kv_shape[:-1], quant.SCALE_DTYPE)
+    return {"ssm": M.state_specs(cfg, batch,
+                                 dtype if not quant.is_quantized(dtype)
+                                 else jnp.bfloat16),
+            "kv": kv}
 
 
 def _site_map(cfg: ModelConfig) -> jax.Array:
@@ -192,18 +209,16 @@ def _scan_decode_layers(cfg: ModelConfig, x, state: dict[str, Any],
 
         def with_attn(args):
             h_, kv_ = args
-            k_site = lax.dynamic_index_in_dim(kv_["k"], site, 0,
-                                              keepdims=False)
-            v_site = lax.dynamic_index_in_dim(kv_["v"], site, 0,
-                                              keepdims=False)
+            quantized = "k_scale" in kv_
+            names = ("k", "v") + (("k_scale", "v_scale") if quantized else ())
+            cache = tuple(
+                lax.dynamic_index_in_dim(kv_[n], site, 0, keepdims=False)
+                for n in names)
             h2, new_cache = nn.apply_shared(
                 shared, _shared_block, cfg, h_, cos, sin,
-                cache=(k_site, v_site), cache_pos=pos, pages=pages)
-            kk = lax.dynamic_update_index_in_dim(kv_["k"], new_cache[0],
-                                                 site, 0)
-            vv = lax.dynamic_update_index_in_dim(kv_["v"], new_cache[1],
-                                                 site, 0)
-            return h2, {"k": kk, "v": vv}
+                cache=cache, cache_pos=pos, pages=pages)
+            return h2, {n: lax.dynamic_update_index_in_dim(kv_[n], c, site, 0)
+                        for n, c in zip(names, new_cache)}
 
         if n_attn_sites(cfg) > 0:  # static: probe configs may have none
             h, kv = lax.cond(site >= 0, with_attn, lambda a: a, (h, kv))

@@ -8,8 +8,11 @@ providers for inputs and decode state.
 Decode-state convention: every state leaf carries the layer (or attention
 site) axis first and the batch axis second — the serving engine relies on
 axis 1 being batch when it zeroes a slot's recurrent state on reuse. KV
-cache leaves must be keyed ``"k"``/``"v"``: the engine skips them when
-resetting (they are positionally overwritten and length-masked), so any
+cache leaves must be keyed ``"k"``/``"v"`` — plus ``"k_scale"``/
+``"v_scale"`` for quantized pools (int8/fp8 ``kv_dtype``): the engine
+skips all four when resetting (they are positionally overwritten and
+length-masked; zeroing a scale leaf would corrupt live blocks, since
+scale leaves have the *block* axis at position 1, not batch), so any
 other key is treated as recurrent state and zeroed.
 """
 
@@ -49,12 +52,18 @@ class CacheSpec:
     serving mesh, including the recorded reason whenever a leaf replicates
     instead of sharding (``repro.launch.serve_shardings`` applies the
     policy; the engine's ``tp_layout()`` reports the realized placement).
+    ``kv_dtype``: the family's *default* paged-pool storage dtype name
+    ("native" = the engine's compute dtype; "int8"/"fp8" = quantized
+    pools with per-(slot, head) scale leaves, see
+    :mod:`repro.kernels.quant`). The engine's ``kv_dtype`` knob /
+    ``--kv-dtype`` / ``$REPRO_KV_DTYPE`` override it per deployment.
     """
     kind: str
     paged: bool = False
     prefix_reuse: bool = False
     spec_decode: bool = False
     tp_note: str = ""
+    kv_dtype: str = "native"
 
 
 @dataclasses.dataclass(frozen=True)

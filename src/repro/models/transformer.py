@@ -27,6 +27,7 @@ from repro.core import parametric as PF
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain, named_zeros
 from repro.kernels import ops as K
+from repro.kernels import quant
 
 MOE_AUX_COEF = 0.01
 
@@ -189,21 +190,39 @@ def attention(cfg: ModelConfig, x, cos, sin, *, name: str = "attn",
         # block-paged cache: scatter the chunk's K/V through the page table,
         # then attend through the gathered per-row view. ``cache_pos`` must
         # be per-row (B,) — the paged engine always schedules per-row.
-        k_pool, v_pool = cache
+        # A 4-tuple cache carries a quantized pool's (NB, bs, Hkv) scale
+        # arrays; the quant/dequant fuses into the write/read kernels.
+        quantized = len(cache) == 4
+        if quantized:
+            k_pool, v_pool, k_scale, v_scale = cache
+        else:
+            k_pool, v_pool = cache
+            k_scale = v_scale = None
         pos_arr = jnp.asarray(cache_pos, jnp.int32)
         assert pos_arr.ndim == 1, "paged attention needs per-row positions"
-        k_pool = K.paged_cache_write(k_pool, k, pages, pos_arr)
-        v_pool = K.paged_cache_write(v_pool, v, pages, pos_arr)
+        if quantized:
+            k_pool, k_scale = K.paged_cache_write(k_pool, k, pages, pos_arr,
+                                                  pool_scale=k_scale)
+            v_pool, v_scale = K.paged_cache_write(v_pool, v, pages, pos_arr,
+                                                  pool_scale=v_scale)
+            k_scale = constrain(k_scale, None, None, "kv_heads")
+            v_scale = constrain(v_scale, None, None, "kv_heads")
+        else:
+            k_pool = K.paged_cache_write(k_pool, k, pages, pos_arr)
+            v_pool = K.paged_cache_write(v_pool, v, pages, pos_arr)
         # pin the pool's kv-head sharding through the scatter so GSPMD
         # carries it across layers (tp serving; no-op without a mesh)
         k_pool = constrain(k_pool, None, None, "kv_heads", "head_dim")
         v_pool = constrain(v_pool, None, None, "kv_heads", "head_dim")
         if S > 1:
-            y = K.attention_prefill_paged(q, k_pool, v_pool, pages, pos_arr)
+            y = K.attention_prefill_paged(q, k_pool, v_pool, pages, pos_arr,
+                                          k_scale=k_scale, v_scale=v_scale)
         else:
             y = K.attention_decode_paged(q, k_pool, v_pool, pages,
-                                         pos_arr + 1)
-        new_cache = (k_pool, v_pool)
+                                         pos_arr + 1,
+                                         k_scale=k_scale, v_scale=v_scale)
+        new_cache = (k_pool, v_pool, k_scale, v_scale) if quantized \
+            else (k_pool, v_pool)
     elif cache is not None:
         k_cache, v_cache = cache
         assert cache_pos is not None
@@ -501,23 +520,39 @@ def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
     per-slot page tables, so memory scales with allocated blocks, not
     ``batch * max_seq``. Block 0 is the engine's garbage block.
 
+    A quantized ``dtype`` (int8/fp8, :mod:`repro.kernels.quant`) adds
+    per-(slot, head) f32 scale leaves ``k_scale``/``v_scale`` shaped
+    (n_layers, num_blocks, block_size, Hkv) next to the pools — the block
+    axis stays axis 1 on every leaf, so the engine's block extraction,
+    tier spill/fetch and store fingerprint treat them like pool leaves.
+
     Under an active serving env (tensor-parallel engine) the pools come
     out sharded on the kv-head axis — each device is born holding
-    ``1/tp`` of every block — degrading to replicated for GQA geometries
-    where ``Hkv`` doesn't divide the model axis."""
+    ``1/tp`` of every block (scales shard the same head axis) — degrading
+    to replicated for GQA geometries where ``Hkv`` doesn't divide the
+    model axis."""
     hd = cfg.resolved_head_dim
     shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, hd)
     names = ("layers", None, None, "kv_heads", "head_dim")
-    return {"k": named_zeros(names, shape, dtype),
-            "v": named_zeros(names, shape, dtype)}
+    out = {"k": named_zeros(names, shape, dtype),
+           "v": named_zeros(names, shape, dtype)}
+    if quant.is_quantized(dtype):
+        s_names = ("layers", None, None, "kv_heads")
+        out["k_scale"] = named_zeros(s_names, shape[:-1], quant.SCALE_DTYPE)
+        out["v_scale"] = named_zeros(s_names, shape[:-1], quant.SCALE_DTYPE)
+    return out
 
 
 def paged_kv_cache_specs(cfg: ModelConfig, num_blocks: int, block_size: int,
                          dtype=jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
     hd = cfg.resolved_head_dim
     shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, hd)
-    return {"k": jax.ShapeDtypeStruct(shape, dtype),
-            "v": jax.ShapeDtypeStruct(shape, dtype)}
+    out = {"k": jax.ShapeDtypeStruct(shape, dtype),
+           "v": jax.ShapeDtypeStruct(shape, dtype)}
+    if quant.is_quantized(dtype):
+        out["k_scale"] = jax.ShapeDtypeStruct(shape[:-1], quant.SCALE_DTYPE)
+        out["v_scale"] = jax.ShapeDtypeStruct(shape[:-1], quant.SCALE_DTYPE)
+    return out
 
 
 def decode_step(cfg: ModelConfig, tokens, cache: dict[str, Any],
@@ -613,17 +648,23 @@ def prefill_paged(cfg: ModelConfig, tokens, cache: dict[str, Any],
     cos, sin = rope_tables(cfg, positions)
     valid = jnp.arange(C)[None, :] < length[:, None]
 
+    quantized = "k_scale" in cache
+
     def block(h, idx, layer_cache):
-        h, _, new_cache = decoder_block(cfg, h, cos, sin,
-                                        cache=(layer_cache["k"],
-                                               layer_cache["v"]),
+        c = (layer_cache["k"], layer_cache["v"])
+        if quantized:
+            c += (layer_cache["k_scale"], layer_cache["v_scale"])
+        h, _, new_cache = decoder_block(cfg, h, cos, sin, cache=c,
                                         cache_pos=pos, pages=pages,
                                         token_mask=valid)
-        return h, {"k": new_cache[0], "v": new_cache[1]}
+        out = {"k": new_cache[0], "v": new_cache[1]}
+        if quantized:
+            out["k_scale"], out["v_scale"] = new_cache[2], new_cache[3]
+        return h, out
 
     x, new_cache = nn.layer_stack_with_output(
         "layers", cfg.n_layers, block, x,
-        xs={"k": cache["k"], "v": cache["v"]}, unroll=cfg.scan_unroll)
+        xs=dict(cache), unroll=cfg.scan_unroll)
     if last_only:
         x = gather_last_valid(x, length)
     x = norm(cfg, x, "ln_final")

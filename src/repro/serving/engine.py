@@ -83,6 +83,19 @@ never reads and the next step overwrites (``CacheSpec.spec_decode``
 gates this on positional pure-KV state). Default ``spec_k=0`` — the
 engine is byte-for-byte the PR-5 engine unless asked.
 
+Quantized KV pools (PR 10, ``kv_dtype="int8"``/``"fp8"``): the paged
+pools store int8 (or fp8 where the platform dtype exists) with
+per-(token-slot, kv-head) float32 scale leaves riding alongside
+(``"k_scale"``/``"v_scale"``). Quant fuses into the write scatter,
+dequant into the attention walk (in VMEM on the Pallas path) — no
+dequantized pool ever materializes in HBM, and every host-side
+subsystem (allocator, tiering spill/fetch, prefix store, tp sharding)
+carries the scale leaves automatically because they are ordinary KV
+leaves with the block axis at 1. Resolution order for the dtype:
+explicit ``kv_dtype=`` > ``$REPRO_KV_DTYPE`` > ``CacheSpec.kv_dtype``.
+``kv_bytes_per_token()`` reports the realized per-token HBM cost
+(pool + scales); at D = 64, int8 is ~0.53x of bf16.
+
 Per-request metrics on ``Request.metrics``: queue wait, time-to-first-
 token, decode tokens/s, prefill/decode step counts, prefix-hit tokens.
 Accessors are NaN-safe — reading ``ttft`` before the first token lands or
@@ -96,6 +109,7 @@ import contextlib
 import dataclasses
 import functools
 import math
+import os
 import time
 import warnings
 from typing import Any
@@ -107,9 +121,17 @@ import numpy as np
 import repro.core as nn
 from repro.core import context as _ctx
 from repro.distributed import sharding as _sh
+from repro.kernels import quant
 from repro.models.registry import ModelApi
 from repro.serving import sampling
 from repro.serving.scheduler import Scheduler
+
+# Every KV-pool leaf key: the quantized pools carry per-(slot, head)
+# scale arrays next to the int8/fp8 payload. One tuple feeds both
+# consumers — _is_kv_leaf (spill/fetch, layout fingerprint, byte
+# accounting) and _admit's recurrent-state reset skip — so a new leaf
+# kind can never be spilled but not reset-protected (or vice versa).
+_KV_KEYS = ("k", "v", "k_scale", "v_scale")
 
 
 @dataclasses.dataclass
@@ -210,7 +232,8 @@ class ServingEngine:
                  preemption: bool = True,
                  spec_k: int = 0, spec_ngram: int = 3,
                  host_cache_blocks: int | None = None,
-                 host_cache_gb: float = 0.0, kv_store: str | None = None):
+                 host_cache_gb: float = 0.0, kv_store: str | None = None,
+                 kv_dtype: str | None = None):
         self.api = api
         self.params = params
         # tensor parallelism: tp=N builds a (1, N) (data, model) host mesh
@@ -264,6 +287,18 @@ class ServingEngine:
 
         can_page = api.prefill_paged is not None and api.cache_spec.paged
         self.paged = can_page if paged is None else (paged and can_page)
+        # paged-pool storage dtype: explicit arg > $REPRO_KV_DTYPE > the
+        # family default in CacheSpec.kv_dtype. "int8"/"fp8" allocate
+        # quantized pools with per-(slot, head) scale leaves (see
+        # :mod:`repro.kernels.quant`); "native" keeps cache_dtype. Dense
+        # fallback engines ignore the knob — quantization is a paged-pool
+        # layout, the dense cache always stays in the compute dtype.
+        if kv_dtype is None:
+            kv_dtype = (os.environ.get("REPRO_KV_DTYPE")
+                        or api.cache_spec.kv_dtype)
+        self.kv_pool_dtype = (quant.resolve_kv_dtype(kv_dtype, cache_dtype)
+                              if self.paged else jnp.dtype(cache_dtype))
+        self.kv_dtype = quant.kv_dtype_name(self.kv_pool_dtype)
         # tiered KV cache: a host-RAM pool cold registered prefixes spill
         # into instead of being dropped (and a disk store for warm
         # restarts). Only meaningful where the prefix cache itself is —
@@ -278,7 +313,7 @@ class ServingEngine:
                 from repro.serving.tiering import blocks_for_bytes
                 host_blocks = blocks_for_bytes(
                     host_cache_gb,
-                    self._per_block_bytes(block_size, cache_dtype))
+                    self._per_block_bytes(block_size, self.kv_pool_dtype))
             elif kv_store:
                 # a persistent store with no explicit host sizing still
                 # needs a host tier to warm-load into: default to 4x the
@@ -319,7 +354,7 @@ class ServingEngine:
             with self._env_scope():
                 self.state = api.paged_state_init(
                     max_batch, self.scheduler.num_blocks,
-                    self.scheduler.block_size, cache_dtype)
+                    self.scheduler.block_size, self.kv_pool_dtype)
             if host_blocks > 0:
                 # the tiered cache is layout-blind; the engine — which
                 # owns the pools — injects the block extract/insert I/O
@@ -456,18 +491,22 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     @staticmethod
     def _is_kv_leaf(path) -> bool:
-        """KV pool leaves are keyed "k"/"v" — the same rule _admit's
-        recurrent-state reset uses. Their block axis is axis 1:
-        ``(n_layers, num_blocks, block_size, n_kv_heads, head_dim)``."""
+        """KV pool leaves are keyed by ``_KV_KEYS`` — payload pools plus
+        the quantized pools' scale arrays, the same set _admit's
+        recurrent-state reset skips. Their block axis is axis 1:
+        ``(n_layers, num_blocks, block_size, n_kv_heads, head_dim)`` for
+        pools, ``(n_layers, num_blocks, block_size, n_kv_heads)`` for
+        scales — so spill/fetch/layout code slicing axis 1 covers both."""
         last = path[-1]
         return (isinstance(last, jax.tree_util.DictKey)
-                and last.key in ("k", "v"))
+                and last.key in _KV_KEYS)
 
-    def _per_block_bytes(self, block_size: int, cache_dtype) -> int:
+    def _per_block_bytes(self, block_size: int, pool_dtype) -> int:
         """Host-RAM bytes one spilled block occupies across every KV pool
-        leaf (sizes ``--host-cache-gb`` into a block count). Computed from
-        specs with a 2-block probe pool — no device allocation."""
-        specs = self.api.paged_state_specs(1, 2, block_size, cache_dtype)
+        leaf — scale arrays included for quantized pools (sizes
+        ``--host-cache-gb`` into a block count). Computed from specs with
+        a 2-block probe pool — no device allocation."""
+        specs = self.api.paged_state_specs(1, 2, block_size, pool_dtype)
         total = 0
         for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
             if self._is_kv_leaf(path) and leaf.shape[1] == 2:
@@ -510,6 +549,17 @@ class ServingEngine:
             return new
 
         self.state = jax.tree_util.tree_map_with_path(put, self.state)
+
+    def kv_bytes_per_token(self) -> float:
+        """HBM bytes one cached token costs across every KV leaf — pools
+        plus scale arrays for quantized dtypes, summed over layers/sites.
+        Pure spec arithmetic (no device reads); NaN for dense engines.
+        ``bench_serving --quant`` reports this and ``compare.py`` gates
+        it lower-is-better."""
+        if not self.paged:
+            return float("nan")
+        bs = self.scheduler.block_size
+        return self._per_block_bytes(bs, self.kv_pool_dtype) / bs
 
     def kv_layout(self) -> dict:
         """The pool layout the disk store records and checks on load: a
@@ -622,13 +672,16 @@ class ServingEngine:
             idx = jnp.asarray(fresh, jnp.int32)
             # Zero the admitted rows of every *recurrent* state leaf so a
             # freed slot's SSM state can't leak forward (batch is axis 1,
-            # see registry docstring). KV-cache leaves — keyed "k"/"v" —
-            # are skipped: paged pools have no batch axis at all, and a
-            # dense cache is positionally overwritten and length-masked.
+            # see registry docstring). KV-cache leaves — _KV_KEYS, i.e.
+            # "k"/"v" plus quantized pools' "k_scale"/"v_scale" — are
+            # skipped: paged pools have no batch axis at all (axis 1 is
+            # the BLOCK axis; zeroing a scale leaf there would corrupt
+            # live blocks), and a dense cache is positionally overwritten
+            # and length-masked.
             def reset(path, a):
                 last = path[-1]
                 if (isinstance(last, jax.tree_util.DictKey)
-                        and last.key in ("k", "v")):
+                        and last.key in _KV_KEYS):
                     return a
                 return a.at[:, idx].set(0)
             self.state = jax.tree_util.tree_map_with_path(reset, self.state)
@@ -889,4 +942,7 @@ class ServingEngine:
                 sum(r.metrics.prefix_hit_tokens for r in done) / len(done))
             out["mean_host_hit_tokens"] = (
                 sum(r.metrics.host_hit_tokens for r in done) / len(done))
+            # realized pool layout cost (the dtype name itself is on
+            # ``engine.kv_dtype``; this summary is float-valued)
+            out["kv_bytes_per_token"] = self.kv_bytes_per_token()
         return out

@@ -135,14 +135,18 @@ TIER_OPS = st.lists(
 
 @settings(max_examples=150, deadline=None)
 @given(num_blocks=st.integers(4, 16), host_cap=st.integers(0, 10),
-       ops=TIER_OPS)
-def test_tiered_cache_invariants_under_random_ops(num_blocks, host_cap, ops):
+       ops=TIER_OPS, quantized=st.booleans())
+def test_tiered_cache_invariants_under_random_ops(num_blocks, host_cap, ops,
+                                                  quantized):
     """Spill/fetch/drop interleavings against a model of who owns what:
 
     * refcount == owners per tier: an HBM map entry holds exactly 1 ref
       plus one per outstanding hold; host entries hold no allocator refs;
     * no key resident in two tiers, ever;
-    * block contents round-trip spill -> fetch bit-exact;
+    * block contents round-trip spill -> fetch bit-exact — for quantized
+      pools that means the int8 payload AND the float32 scale leaf, whose
+      lifecycle must mirror the payload's exactly (spilled together,
+      fetched together, never resident in one tier without the other);
     * a full drain (evict everything, flush the host pool, release holds)
       leaves both pools empty with zero leaked blocks.
     """
@@ -152,11 +156,20 @@ def test_tiered_cache_invariants_under_random_ops(num_blocks, host_cap, ops):
 
     a = BlockAllocator(num_blocks, 4)
     pc = TieredPrefixCache(a, HostPool(host_cap))
-    dev = {"k": np.zeros((1, num_blocks, 4), np.float32)}
+    # quantized pools: an int8 payload leaf plus a scale leaf, spilled
+    # and fetched as ordinary sibling KV leaves (exactly how the engine's
+    # _extract_blocks/_insert_blocks treat "k"/"k_scale")
+    if quantized:
+        dev = {"k": np.zeros((1, num_blocks, 4), np.int8),
+               "k_scale": np.zeros((1, num_blocks), np.float32)}
+    else:
+        dev = {"k": np.zeros((1, num_blocks, 4), np.float32)}
     pc.bind_device_io(
-        lambda bids: {"k": dev["k"][:, np.asarray(bids)].copy()},
-        lambda bids, data: dev["k"].__setitem__(
-            (slice(None), np.asarray(bids)), data["k"]))
+        lambda bids: {n: leaf[:, np.asarray(bids)].copy()
+                      for n, leaf in dev.items()},
+        lambda bids, data: [leaf.__setitem__(
+            (slice(None), np.asarray(bids)), data[n])
+            for n, leaf in dev.items()])
 
     keys = prefix_keys(list(range(4 * 64)), 4)
     value: dict[bytes, float] = {}     # key -> expected block payload
@@ -166,8 +179,12 @@ def test_tiered_cache_invariants_under_random_ops(num_blocks, host_cap, ops):
     for op, arg in ops:
         if op == "reg" and nreg < len(keys) and a.can_alloc(1):
             bid = a.alloc(1)[0]
-            dev["k"][:, bid] = float(nreg + 1)
-            value[keys[nreg]] = float(nreg + 1)
+            dev["k"][:, bid] = nreg + 1 if not quantized else (nreg % 126) + 1
+            if quantized:
+                # a distinct non-trivial scale so a payload/scale swap or
+                # a zeroed scale leaf cannot round-trip undetected
+                dev["k_scale"][:, bid] = (nreg + 1) * 0.125
+            value[keys[nreg]] = float(dev["k"][0, bid, 0])
             pc.register(keys[nreg], bid, priority=arg)
             a.decref(bid)              # owner done: map-only entry
             nreg += 1
@@ -198,9 +215,21 @@ def test_tiered_cache_invariants_under_random_ops(num_blocks, host_cap, ops):
                 "map entry refcount != map ref + outstanding holds"
             assert dev["k"][0, bid, 0] == value[k], \
                 "HBM block content diverged from its registered value"
+            if quantized:
+                assert dev["k_scale"][0, bid] == value[k] * 0.125, \
+                    "scale leaf diverged from its payload's lifecycle"
         for k in pc.host.keys():
-            assert pc.host.get(k).data["k"][0, 0] == value[k], \
+            ent = pc.host.get(k).data
+            assert ent["k"][0, 0] == value[k], \
                 "host tier content diverged (spill not bit-exact)"
+            if quantized:
+                assert ent["k"].dtype == np.int8, \
+                    "spill widened the quantized payload"
+                assert "k_scale" in ent, \
+                    "payload spilled without its scale leaf"
+                assert ent["k_scale"].dtype == np.float32
+                assert ent["k_scale"][0] == value[k] * 0.125, \
+                    "scale spill not bit-exact"
         assert len(pc.host) <= host_cap
 
     # full drain: drop holds, evict the map dry, flush the host pool

@@ -287,13 +287,15 @@ def test_engine_paged_equals_dense(cfg):
     """The engine emits identical greedy tokens with the paged cache and
     with the PR-1 dense layout, across all three LM families (the pure-SSM
     family has no KV cache — its paged engine IS the dense engine — which
-    this pins down as well)."""
+    this pins down as well). Pools pin kv_dtype="native": this is a
+    LAYOUT-equivalence invariant, exact only at matching pool dtypes, so
+    the int8 CI leg's REPRO_KV_DTYPE must not quantize the paged side."""
     api = get_model(cfg)
     params = init_params(cfg)
     outs = []
     for paged in (True, False):
         eng = ServingEngine(api, params, max_batch=2, max_seq=48, chunk=6,
-                            block_size=4, paged=paged)
+                            block_size=4, paged=paged, kv_dtype="native")
         assert eng.paged == (paged and api.cache_spec.paged)
         for i in range(4):
             eng.submit(Request(uid=i, prompt=[1 + i, 2, 3, 4, 5, 6, 7],

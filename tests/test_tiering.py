@@ -375,6 +375,45 @@ def test_layout_mismatch_serves_cold(tmp_path, churn_families):
     assert len(e2.scheduler.prefix.host) == 0
 
 
+def test_kv_dtype_mismatch_serves_cold(tmp_path, churn_families):
+    """A store written by a native-dtype engine must refuse to warm an
+    int8 engine (and vice versa): the layout fingerprint includes the
+    pool dtype AND the quantized pools' scale leaves, so the mismatch
+    shows in both the dtype strings and the leaf set. The unquantized
+    engines pin kv_dtype="native" so the int8 CI leg's REPRO_KV_DTYPE
+    can't quantize both sides and erase the mismatch."""
+    store = str(tmp_path / "kv")
+    e1 = make_engine(host_cache_blocks=32, kv_store=store,
+                     kv_dtype="native")
+    e1.submit(Request(uid=0, prompt=churn_families[0], max_new_tokens=4))
+    e1.run_until_drained()
+    assert e1.save_kv_store() > 0
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        e2 = make_engine(host_cache_blocks=32, kv_store=store,
+                         kv_dtype="int8")
+    assert any("serving cold" in str(x.message)
+               and issubclass(x.category, RuntimeWarning) for x in w)
+    assert len(e2.scheduler.prefix.host) == 0, "quantized engine warmed "\
+        "from an unquantized store"
+    # the int8 engine still serves (cold), then persists ITS layout —
+    # which must in turn refuse to warm a native-dtype engine
+    e2.submit(Request(uid=0, prompt=churn_families[0], max_new_tokens=4))
+    e2.run_until_drained()
+    assert e2.save_kv_store() > 0
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        e3 = make_engine(host_cache_blocks=32, kv_store=store,
+                         kv_dtype="native")
+    assert any("serving cold" in str(x.message) for x in w)
+    assert len(e3.scheduler.prefix.host) == 0
+    # matching dtype: the int8 store warms an int8 engine normally
+    e4 = make_engine(host_cache_blocks=32, kv_store=store,
+                     kv_dtype="int8")
+    assert len(e4.scheduler.prefix.host) > 0, "int8 store failed to warm "\
+        "a matching int8 engine"
+
+
 def test_missing_store_is_silent_first_run(tmp_path):
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
